@@ -1,0 +1,79 @@
+"""Shared benchmark harness: one module per paper figure/table.
+
+Each benchmark returns a list of (name, value, derived) rows and optionally
+asserts paper headline numbers (a failed expectation prints WARN rather than
+crashing the suite — benchmarks are reports, tests are gates)."""
+from __future__ import annotations
+
+import functools
+import json
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Report:
+    name: str
+    rows: list = field(default_factory=list)
+    checks: list = field(default_factory=list)
+    wall_s: float = 0.0
+
+    def add(self, key: str, value, note: str = "") -> None:
+        self.rows.append((key, value, note))
+
+    def check(self, desc: str, ok: bool, detail: str = "") -> None:
+        self.checks.append((desc, bool(ok), detail))
+
+    def print(self) -> None:
+        print(f"\n=== {self.name} ({self.wall_s:.1f}s) ===")
+        for key, value, note in self.rows:
+            v = f"{value:.6g}" if isinstance(value, float) else value
+            print(f"  {key:58s} {v}{('  # ' + note) if note else ''}")
+        for desc, ok, detail in self.checks:
+            tag = "PASS" if ok else "WARN"
+            print(f"  [{tag}] {desc}{('  (' + detail + ')') if detail else ''}")
+
+
+_REGISTRY: dict[str, callable] = {}
+
+
+def benchmark(name: str):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*a, **kw):
+            rep = Report(name)
+            t0 = time.time()
+            fn(rep, *a, **kw)
+            rep.wall_s = time.time() - t0
+            return rep
+        _REGISTRY[name] = wrapper
+        return wrapper
+    return deco
+
+
+def all_benchmarks() -> dict:
+    return dict(_REGISTRY)
+
+
+# shared simulator fixtures (scaled for CPU wall-time; rates match paper)
+_SIM_CACHE: dict = {}
+
+
+def get_sim(cluster: str = "RSC-1", days: float = 8.0, seed: int = 0,
+            **kw):
+    """Scaled cluster sim: node count /5, rates preserved."""
+    from repro.cluster.scheduler import ClusterSim
+    from repro.cluster.workload import RSC1, RSC2
+    import dataclasses
+
+    key = (cluster, days, seed, json.dumps(kw, sort_keys=True, default=str))
+    if key in _SIM_CACHE:
+        return _SIM_CACHE[key]
+    spec0 = RSC1 if cluster == "RSC-1" else RSC2
+    spec = dataclasses.replace(
+        spec0, n_nodes=spec0.n_nodes // 5,
+        jobs_per_day=spec0.jobs_per_day / 5)
+    sim = ClusterSim(spec, horizon_days=days, seed=seed, **kw)
+    sim.run()
+    _SIM_CACHE[key] = sim
+    return sim

@@ -1,0 +1,37 @@
+"""Figure 10: 12k-GPU ETTR contours over (failure rate x checkpoint
+write overhead), Daly-Young intervals."""
+import numpy as np
+
+from benchmarks.common import benchmark
+from repro.core.ettr_model import (ETTRParams, ettr_contour, expected_ettr,
+                                   required_w_cp_for_target)
+
+
+@benchmark("fig10_contours")
+def run(rep):
+    r_grid, w_grid, E, DT = ettr_contour(n_gpus=12_288)
+    rep.add("grid", f"{E.shape[0]}x{E.shape[1]} (w_cp x r_f)")
+    # the paper's operating point and its two escape routes
+    base = expected_ettr(ETTRParams(n_nodes=1536, r_f=6.5e-3, w_cp_s=300,
+                                    u0_s=300))
+    fast_ckpt = expected_ettr(ETTRParams(n_nodes=1536, r_f=6.5e-3,
+                                         w_cp_s=10, u0_s=300))
+    low_rf = expected_ettr(ETTRParams(n_nodes=1536, r_f=1.0e-3,
+                                      w_cp_s=300, u0_s=300))
+    rep.add("ETTR@12k(r_f=6.5, w=5min)", round(base, 3), "poor")
+    rep.add("ETTR@12k(r_f=6.5, w=10s)", round(fast_ckpt, 3),
+            "async checkpointing")
+    rep.add("ETTR@12k(r_f=1.0, w=5min)", round(low_rf, 3),
+            "reliability improvement")
+    rep.check("Fig 10: base point below 0.8", base < 0.80)
+    rep.check("Fig 10: O(10 s) checkpoints recover ETTR>=0.9",
+              fast_ckpt >= 0.90)
+    rep.check("Fig 10: r_f ~1/1000 node-days recovers ETTR~0.9",
+              low_rf >= 0.88)
+    w_req = required_w_cp_for_target(12_288, 0.90, 6.5e-3)
+    rep.add("required w_cp for ETTR 0.9 @ 12k GPUs", f"{w_req:.1f} s",
+            "paper: O(10 s)")
+    rep.check("required write overhead is O(10 s)", 3 <= w_req <= 60)
+    # red region of Fig 10: Daly-Young intervals below 10 s are impractical
+    frac_red = float((DT < 10.0).mean())
+    rep.add("fraction of grid with dt* < 10 s", round(frac_red, 3))

@@ -1,0 +1,28 @@
+"""Figure 3: scheduler job-status breakdown by jobs and GPU runtime."""
+from benchmarks.common import benchmark, get_sim
+from repro.cluster import analysis
+
+
+@benchmark("fig3_job_status")
+def run(rep):
+    sim = get_sim("RSC-1")
+    sb = analysis.status_breakdown(sim.records)
+    for state, frac in sorted(sb["jobs"].items(), key=lambda kv: -kv[1]):
+        rep.add(f"jobs.{state}", round(frac, 4))
+    for state, frac in sorted(sb["gpu_time"].items(), key=lambda kv: -kv[1]):
+        rep.add(f"gpu_time.{state}", round(frac, 4))
+    imp = analysis.hw_impact(sim.records)
+    rep.add("hw_attributed.job_fraction", round(imp["hw_job_fraction"], 5),
+            "paper: ~0.2%")
+    rep.add("hw_attributed.runtime_fraction",
+            round(imp["hw_runtime_fraction"], 4), "paper: 18.7%")
+    rep.check("~60% of jobs complete (paper: 60%)",
+              0.45 <= sb["jobs"].get("COMPLETED", 0) <= 0.75)
+    rep.check("~24% user-FAILED (paper: 24%)",
+              0.12 <= sb["jobs"].get("FAILED", 0) <= 0.35)
+    rep.check("NODE_FAIL rare by job count (paper: 0.1%)",
+              sb["jobs"].get("NODE_FAIL", 0) <= 0.01)
+    rep.check("Obs 4: HW failures <1% of jobs but >8% of GPU runtime",
+              imp["hw_job_fraction"] < 0.01
+              and imp["hw_runtime_fraction"] > 0.08,
+              f"runtime {imp['hw_runtime_fraction']:.1%}")

@@ -1,0 +1,31 @@
+"""Figure 4: attributed hardware failures per GPU-hour by symptom."""
+from benchmarks.common import benchmark, get_sim
+from repro.cluster import analysis
+
+
+@benchmark("fig4_attribution")
+def run(rep):
+    for cluster in ("RSC-1", "RSC-2"):
+        sim = get_sim(cluster)
+        rates = analysis.attribution_rates(
+            sim.records, sim.fault_log, sim.spec.n_gpus, sim.horizon_s)
+        for sym, rate in list(rates.items())[:8]:
+            rep.add(f"{cluster}.{sym}", f"{rate:.3e} /GPU-h")
+        top4 = set(list(rates)[:4])
+        rep.check(
+            f"{cluster}: IB links / mounts / GPU memory / PCIe dominate "
+            "(Obs 5)",
+            len(top4 & {"ib_link_error", "filesystem_mount",
+                        "gpu_memory_errors", "pcie_errors",
+                        "gpu_unavailable"}) >= 2,
+            ",".join(top4))
+    s1 = get_sim("RSC-1")
+    s2 = get_sim("RSC-2")
+    r1 = len(s1.fault_log) / (s1.spec.n_nodes * s1.horizon_s / 86400)
+    r2 = len(s2.fault_log) / (s2.spec.n_nodes * s2.horizon_s / 86400)
+    rep.add("RSC-1 node failure rate /1000 node-days", round(r1 * 1000, 2),
+            "paper: 6.50")
+    rep.add("RSC-2 node failure rate /1000 node-days", round(r2 * 1000, 2),
+            "paper: 2.34")
+    rep.check("RSC-1 less reliable than RSC-2 (paper: 6.50 vs 2.34)",
+              r1 > 1.5 * r2)

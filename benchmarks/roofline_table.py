@@ -1,0 +1,72 @@
+"""§Dry-run / §Roofline: aggregate the 40-cell x 2-mesh sweep results.
+
+Reads results/dryrun/*.json (produced by scripts/run_dryrun_sweep.sh) and
+prints the per-cell roofline table; also writes results/roofline.md for
+EXPERIMENTS.md."""
+import glob
+import json
+import os
+import pathlib
+
+from benchmarks.common import benchmark
+
+COLS = ("compute_s", "memory_s", "collective_s")
+
+
+@benchmark("roofline_table")
+def run(rep):
+    root = pathlib.Path(__file__).resolve().parent.parent
+    files = sorted(glob.glob(str(root / "results" / "dryrun" / "*.json")))
+    if not files:
+        rep.add("status", "no dry-run results found; run "
+                "scripts/run_dryrun_sweep.sh first")
+        return
+    recs = [json.load(open(f)) for f in files]
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped_full_attention"]
+    errors = [r for r in recs if r["status"] == "error"]
+    rep.add("cells_total", len(recs))
+    rep.add("cells_ok", len(ok))
+    rep.add("cells_skipped_long500k", len(skipped))
+    rep.add("cells_error", len(errors))
+    rep.check("all 80 cells accounted (40 x 2 meshes)", len(recs) == 80)
+    rep.check("every cell compiles or is a documented skip",
+              len(errors) == 0)
+    fits = [r for r in ok if r.get("fits_hbm")]
+    rep.add("cells_fit_16GiB_HBM", f"{len(fits)}/{len(ok)}")
+
+    lines = ["| arch | shape | mesh | dominant | compute_s | memory_s | "
+             "collective_s | roofline_frac | useful_flops | mem GiB | fits | n_micro |",
+             "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    worst = []
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rl = r["roofline"]
+        mem = r["memory"]["peak_device_bytes"] / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {rl['dominant']} "
+            f"| {rl['compute_s']:.3g} | {rl['memory_s']:.3g} "
+            f"| {rl['collective_s']:.3g} | {rl['roofline_fraction']:.4f} "
+            f"| {rl['useful_flops_ratio']:.3f} | {mem:.2f} "
+            f"| {'y' if r.get('fits_hbm') else 'N'} "
+            f"| {r.get('n_microbatches', 1)} |")
+        worst.append((rl["roofline_fraction"], r["arch"], r["shape"],
+                      r["mesh"], rl["dominant"]))
+    for r in sorted(skipped, key=lambda r: (r["arch"], r["mesh"])):
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                     f"| SKIPPED (pure full attention) | | | | | | | | |")
+    out = root / "results" / "roofline.md"
+    out.write_text("\n".join(lines) + "\n")
+    rep.add("table_written", str(out))
+
+    worst.sort()
+    train = [w for w in worst if w[2] == "train_4k"]
+    if train:
+        best = max(train)
+        rep.add("best_train_roofline_frac",
+                f"{best[0]:.4f} ({best[1]} {best[3]})")
+    coll_bound = [w for w in worst if w[4] == "collective"]
+    rep.add("collective_bound_cells", len(coll_bound))
+    mem_bound = [w for w in worst if w[4] == "memory"]
+    rep.add("memory_bound_cells", len(mem_bound))
+    rep.add("compute_bound_cells",
+            len([w for w in worst if w[4] == "compute"]))

@@ -1,0 +1,63 @@
+"""Benchmark suite entry point: one benchmark per paper figure/table.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig7_mttf] [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+# importing registers each benchmark
+from benchmarks import (fig3_job_status, fig4_attribution, fig5_timeline,  # noqa: F401
+                        fig6_job_mix, fig7_mttf, fig8_goodput_loss,
+                        fig9_ettr, fig10_contours, fig12_adaptive_routing,
+                        kernel_bench, roofline_table, runtime_ettr,
+                        table2_lemon)
+from benchmarks.common import all_benchmarks
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    results = {}
+    n_warn = 0
+    failures = []
+    for name, fn in all_benchmarks().items():
+        if args.only and args.only != name:
+            continue
+        try:
+            rep = fn()
+            rep.print()
+            results[name] = {
+                "rows": [[k, str(v), n] for k, v, n in rep.rows],
+                "checks": [[d, ok, det] for d, ok, det in rep.checks],
+                "wall_s": rep.wall_s,
+            }
+            n_warn += sum(1 for _, ok, _ in rep.checks if not ok)
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"\n=== {name} === ERROR: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    total_checks = sum(len(r["checks"]) for r in results.values())
+    passed = total_checks - n_warn
+    print(f"\n{'='*70}")
+    print(f"benchmarks: {len(results)} ran, {len(failures)} errored "
+          f"({failures if failures else ''})")
+    print(f"paper-claim checks: {passed}/{total_checks} passed, "
+          f"{n_warn} warnings; total {time.time()-t0:.0f}s")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""End-to-end driver: train a ~100M-parameter LLaMa-class model for a few
+hundred steps under fault injection, with the full reliability stack —
+Daly-Young async checkpointing, auto-requeue, lemon exclusion, measured
+ETTR vs the analytical estimate.
+
+  PYTHONPATH=src python examples/fault_tolerant_pretrain.py [--steps 300]
+
+(Use --steps 60 --d-model 256 for a fast demo on small machines.)
+"""
+import argparse
+import shutil
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import get_arch
+from repro.core.ettr_model import ETTRParams, expected_ettr
+from repro.launch.train import preset_100m
+from repro.runtime.fault_injection import FaultInjector
+from repro.runtime.train_loop import FaultTolerantTrainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--inject-rate", type=float, default=0.01)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10,
+                    help="steps between checkpoints (0 = Daly-Young wall-time"
+                         " pacing, which rarely fires in a short demo)")
+    args = ap.parse_args()
+
+    cfg = preset_100m(get_arch("rsc-llm")).replace(d_model=args.d_model)
+    from repro.models import transformer, params as pmod
+
+    n_params = pmod.count_params(transformer.model_defs(cfg))
+    print(f"model: {cfg.name}, {n_params/1e6:.1f}M params, "
+          f"{cfg.n_layers}L x {cfg.d_model}d")
+
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    tcfg = TrainerConfig(
+        total_steps=args.steps, global_batch=args.batch, seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir, ckpt_async=True,
+        ckpt_every_steps=args.ckpt_every,
+        n_nodes=8, r_f_per_node_day=6.5e-3, seed=0)
+    injector = FaultInjector(rate_per_step=args.inject_rate, n_nodes=8,
+                             seed=0)
+    trainer = FaultTolerantTrainer(cfg, tcfg, injector)
+
+    t0 = time.time()
+    report = trainer.run()
+    wall = time.time() - t0
+
+    print(f"\ncompleted {report.final_step}/{args.steps} steps in "
+          f"{wall:.0f}s across {len(report.attempts)} attempts")
+    for a in report.attempts:
+        print(f"  attempt {a.attempt}: steps {a.start_step}->{a.end_step} "
+              f"({a.outcome})")
+    print(f"loss: {report.losses[0]:.3f} -> {report.losses[-1]:.3f}")
+    print(f"faults injected: {len(injector.injected)}; "
+          f"excluded nodes: {sorted(report.excluded_nodes)}")
+    print(f"checkpoint block time: {report.checkpoint_block_s:.1f}s "
+          f"(async); restart overhead: {report.restart_overhead_s:.1f}s; "
+          f"lost work: {report.lost_step_wall_s:.1f}s")
+    print(f"measured ETTR: {report.measured_ettr:.3f}")
+
+    # analytical comparison at this run's actual failure rate
+    if report.losses:
+        step_s = wall / max(len(report.losses), 1)
+        faults_per_day = len(injector.injected) / max(wall / 86400.0, 1e-9)
+        p = ETTRParams(n_nodes=1, r_f=faults_per_day, u0_s=1.0,
+                       w_cp_s=0.05, runtime_s=wall)
+        print(f"analytical E[ETTR] at the realized failure rate: "
+              f"{expected_ettr(p):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Serve a small model with batched requests + fault-injected failover.
+
+  PYTHONPATH=src python examples/serve_with_failover.py --arch qwen3-0.6b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs.base import get_arch, list_archs, smoke_config
+from repro.runtime.fault_injection import FaultInjector, InjectedFault
+from repro.runtime.serve_loop import ServeConfig, Server
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = smoke_config(get_arch(args.arch))
+    print(f"serving {cfg.name} ({cfg.n_layers}L x {cfg.d_model}d), "
+          f"batch={args.batch}, prompt={args.prompt_len}, "
+          f"decode={args.new_tokens}")
+
+    # inject an IB-link failure mid-decode: the server replays the batch
+    inj = FaultInjector(schedule={
+        args.new_tokens // 2: InjectedFault("ib_link_error", node_id=0)})
+    server = Server(cfg, ServeConfig(
+        batch=args.batch, prompt_len=args.prompt_len,
+        max_new_tokens=args.new_tokens), inj)
+    rep = server.run()
+    print(f"completed {rep.completed_requests} requests "
+          f"({rep.tokens_generated} tokens) in {rep.wall_s:.1f}s "
+          f"with {rep.retries} failover retr{'y' if rep.retries==1 else 'ies'}")
+    print(f"throughput: {rep.tokens_generated/rep.wall_s:.1f} tok/s")
+    print("sample output tokens:", rep.outputs[0][:12].tolist())
+
+    # determinism across the failover: rerun clean and compare
+    clean = Server(cfg, ServeConfig(
+        batch=args.batch, prompt_len=args.prompt_len,
+        max_new_tokens=args.new_tokens)).run()
+    same = bool(np.array_equal(clean.outputs, rep.outputs))
+    print(f"failover outputs identical to clean run: {same}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Figure-oriented summaries over simulator output (paper §III)."""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.metrics import (GoodputLoss, JobRecord, JobState,
+                                goodput_loss, job_run_ettr, mttf_by_job_size)
+
+
+def status_breakdown(records: list[JobRecord]) -> dict[str, dict[str, float]]:
+    """Figure 3: share of jobs and of GPU-runtime per terminal state."""
+    n = len(records)
+    gpu_time = sum(r.run_time * r.n_gpus for r in records)
+    by_state_jobs = defaultdict(float)
+    by_state_time = defaultdict(float)
+    for r in records:
+        by_state_jobs[r.state.value] += 1
+        by_state_time[r.state.value] += r.run_time * r.n_gpus
+    return {
+        "jobs": {k: v / max(n, 1) for k, v in by_state_jobs.items()},
+        "gpu_time": {k: v / max(gpu_time, 1e-9)
+                     for k, v in by_state_time.items()},
+    }
+
+
+def hw_impact(records: list[JobRecord]) -> dict[str, float]:
+    """Observation 4: share of jobs / GPU-runtime affected by attributed
+    hardware failures."""
+    n = len(records)
+    gpu_time = sum(r.run_time * r.n_gpus for r in records)
+    hw_jobs = [r for r in records
+               if r.state == JobState.NODE_FAIL
+               or (r.state == JobState.FAILED and r.hw_attributed)]
+    # runtime impacted: the whole run of every job-run touched by a HW event
+    impacted_runs = {r.run_id for r in hw_jobs}
+    impacted_time = sum(r.run_time * r.n_gpus for r in records
+                        if r.run_id in impacted_runs)
+    return {
+        "hw_job_fraction": len(hw_jobs) / max(n, 1),
+        "hw_runtime_fraction": impacted_time / max(gpu_time, 1e-9),
+    }
+
+
+def attribution_rates(records: list[JobRecord], fault_log,
+                      n_gpus_total: int, horizon_s: float) -> dict[str, float]:
+    """Figure 4: attributed failures per GPU-hour, by symptom."""
+    gpu_hours = n_gpus_total * horizon_s / 3600.0
+    counts = defaultdict(int)
+    for r in records:
+        if r.state in (JobState.NODE_FAIL, JobState.FAILED) and r.symptoms:
+            counts[r.symptoms[0]] += 1
+    return {k: v / gpu_hours for k, v in
+            sorted(counts.items(), key=lambda kv: -kv[1])}
+
+
+def failure_rate_timeline(fault_log, n_nodes: int, horizon_days: float,
+                          window_days: float = 30.0):
+    """Figure 5: failures per 1000 node-days, 30-day rolling, per symptom."""
+    days = np.arange(0, horizon_days, 1.0)
+    symptoms = sorted({f.symptom for f in fault_log})
+    out = {s: np.zeros(len(days)) for s in symptoms}
+    for f in fault_log:
+        d = int(f.t / 86400.0)
+        if d < len(days):
+            out[f.symptom][d] += 1
+    rates = {}
+    w = int(window_days)
+    for s, daily in out.items():
+        kernel = np.ones(w) / w
+        smoothed = np.convolve(daily, kernel, mode="same")
+        rates[s] = smoothed / n_nodes * 1000.0
+    return days, rates
+
+
+def preemption_cascades(records: list[JobRecord]) -> dict:
+    """Observation 9 / Figure 8: second-order preemption losses."""
+    loss = goodput_loss(records)
+    total = loss.failure_loss_gpu_s + loss.preemption_loss_gpu_s
+    return {
+        "failure_loss_gpu_h": loss.failure_loss_gpu_s / 3600.0,
+        "preemption_loss_gpu_h": loss.preemption_loss_gpu_s / 3600.0,
+        "second_order_fraction":
+            loss.preemption_loss_gpu_s / max(total, 1e-9),
+    }
+
+
+def goodput_loss_by_size(records: list[JobRecord],
+                         assumed_cp_interval: float = 3600.0):
+    """Figure 8: lost GPU-hours by job-size bucket, split first/second order."""
+    buckets = [(1, 8), (9, 256), (257, 512), (513, 1024), (1025, 2048),
+               (2049, 4096)]
+    out = {}
+    pre_ids = {r.preempted_by for r in records if r.preempted_by is not None}
+    for lo, hi in buckets:
+        f_loss = p_loss = 0.0
+        for r in records:
+            if not (lo <= r.n_gpus <= hi):
+                continue
+            lost = min(r.run_time, assumed_cp_interval / 2.0) * r.n_gpus
+            if r.state == JobState.NODE_FAIL or (
+                    r.state == JobState.FAILED and r.hw_attributed):
+                f_loss += lost
+            elif r.state == JobState.PREEMPTED and r.preempted_by is not None:
+                p_loss += lost
+        out[f"{lo}-{hi}"] = {"failure_gpu_h": f_loss / 3600.0,
+                             "preemption_gpu_h": p_loss / 3600.0}
+    return out
+
+
+def large_job_failure_rate(records: list[JobRecord],
+                           min_gpus: int = 512) -> float:
+    """Fraction of large-job attempts ending in NODE_FAIL/hw-FAILED
+    (the 14% -> 4% lemon-detection metric)."""
+    big = [r for r in records if r.n_gpus >= min_gpus]
+    if not big:
+        return 0.0
+    bad = [r for r in big
+           if r.state == JobState.NODE_FAIL
+           or (r.state == JobState.FAILED and r.hw_attributed)]
+    return len(bad) / len(big)
+
+
+def run_ettrs(records: list[JobRecord], *, min_gpus: int = 256,
+              min_hours: float = 48.0, **ettr_kw):
+    """Figure 9: measured ETTR per qualifying job run."""
+    runs = defaultdict(list)
+    for r in records:
+        runs[r.run_id].append(r)
+    out = []
+    for run_id, jobs in runs.items():
+        if jobs[0].n_gpus < min_gpus:
+            continue
+        total_h = sum(j.run_time for j in jobs) / 3600.0
+        if total_h < min_hours:
+            continue
+        out.append((jobs[0].n_gpus, job_run_ettr(jobs, **ettr_kw)))
+    return out

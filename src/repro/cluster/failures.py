@@ -1,0 +1,141 @@
+"""Node fault processes calibrated to the paper's attribution data.
+
+Figure 4: per-GPU-hour attributed failure rates — IB links, filesystem
+mounts, GPU memory errors and PCIe errors dominate; plus a large
+unattributed NODE_FAIL share.  Figure 5: failure modes ebb and flow —
+modeled as per-symptom rate-multiplier *episodes* and health-check
+introduction dates (before a check exists, its faults surface as
+unattributed NODE_FAILs: 'new health checks expose new failure modes').
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.taxonomy import TAXONOMY
+
+# Relative mix of hardware fault symptoms (Fig. 4-informed).
+SYMPTOM_MIX = {
+    "ib_link_error": 0.22,
+    "filesystem_mount": 0.18,
+    "gpu_memory_errors": 0.16,
+    "pcie_errors": 0.12,
+    "gpu_unavailable": 0.08,
+    "nvlink_error": 0.06,
+    "gpu_driver_firmware": 0.06,
+    "main_memory_errors": 0.04,
+    "system_services": 0.04,
+    "ethlink_errors": 0.04,
+}
+
+# co-occurrence: PCIe errors imply XID-79-style GPU-unavailable signals
+# 43% of the time on RSC-1 (57% of GPU-unavailable show PCIe overlap).
+CO_OCCURRENCE = {
+    "pcie_errors": [("gpu_unavailable", 0.43)],
+    "ib_link_error": [("gpu_unavailable", 0.02)],
+}
+
+
+@dataclass(frozen=True)
+class Episode:
+    """Time-windowed rate multiplier for one symptom (Fig. 5 dynamics)."""
+
+    symptom: str
+    start_day: float
+    end_day: float
+    multiplier: float
+    note: str = ""
+
+
+# An RSC-1-like 11-month trace: a driver-bug XID wave that gets fixed, a
+# mount-check episode, and an early-summer IB-link spike on few nodes.
+RSC1_EPISODES = (
+    Episode("gpu_driver_firmware", 0, 90, 6.0, "GSP-timeout code regression"),
+    Episode("filesystem_mount", 150, 230, 4.0, "mounts downing nodes"),
+    Episode("ib_link_error", 240, 270, 8.0, "IB spike on a handful of nodes"),
+)
+
+# Health-check introduction days (before these, the symptom is caught only
+# by the NODE_FAIL heartbeat => unattributed).
+CHECK_INTRODUCED_DAY = {
+    "filesystem_mount": 140.0,
+    "gpu_driver_firmware": 60.0,
+}
+
+
+@dataclass
+class Fault:
+    t: float
+    node_id: int
+    symptom: str
+    co_symptoms: tuple[str, ...]
+    transient: bool
+    detectable_by_check: bool
+    repair_s: float
+
+
+class FaultProcess:
+    """Samples hardware faults per node; lemon nodes get a rate multiplier
+    and a bias toward Table II lemon causes."""
+
+    def __init__(self, n_nodes: int, r_f_per_node_day: float, *,
+                 lemon_fraction: float = 0.012,
+                 lemon_multiplier: float = 25.0,
+                 episodes: tuple[Episode, ...] = (),
+                 check_introduced: Optional[dict] = None,
+                 seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+        self.n_nodes = n_nodes
+        self.r_f = r_f_per_node_day
+        self.episodes = episodes
+        self.check_introduced = dict(check_introduced or {})
+        n_lemons = int(round(n_nodes * lemon_fraction))
+        self.lemons = set(self.rng.choice(n_nodes, n_lemons, replace=False).tolist())
+        self.lemon_multiplier = lemon_multiplier
+        self._symptoms = list(SYMPTOM_MIX)
+        self._weights = np.array([SYMPTOM_MIX[s] for s in self._symptoms])
+        self._weights = self._weights / self._weights.sum()
+
+    def node_rate(self, node_id: int, t_day: float) -> float:
+        base = self.r_f
+        if node_id in self.lemons:
+            base *= self.lemon_multiplier
+        return base
+
+    def _episode_multiplier(self, symptom: str, t_day: float) -> float:
+        m = 1.0
+        for e in self.episodes:
+            if e.symptom == symptom and e.start_day <= t_day < e.end_day:
+                m *= e.multiplier
+        return m
+
+    def sample_symptom(self, t_day: float) -> str:
+        w = self._weights * np.array(
+            [self._episode_multiplier(s, t_day) for s in self._symptoms])
+        w = w / w.sum()
+        return str(self.rng.choice(self._symptoms, p=w))
+
+    def sample_fault(self, node_id: int, t: float) -> Fault:
+        t_day = t / 86400.0
+        symptom = self.sample_symptom(t_day)
+        cos = []
+        for co, pr in CO_OCCURRENCE.get(symptom, ()):
+            if self.rng.random() < pr:
+                cos.append(co)
+        transient = self.rng.random() < (
+            0.7 if node_id not in self.lemons else 0.3)
+        detectable = t_day >= self.check_introduced.get(symptom, 0.0)
+        # remediation: transient ~ hours; permanent ~ days (vendor repair)
+        repair_s = (self.rng.exponential(4 * 3600.0) if transient
+                    else self.rng.exponential(2 * 86400.0))
+        return Fault(t, node_id, symptom, tuple(cos), transient,
+                     detectable, repair_s)
+
+    def next_fault_time(self, node_id: int, t: float) -> float:
+        """Next fault on this node after time t (piecewise-constant rate,
+        sampled with the current rate — episodes modulate the symptom mix
+        more than the aggregate)."""
+        rate_per_s = self.node_rate(node_id, t / 86400.0) / 86400.0
+        return t + self.rng.exponential(1.0 / max(rate_per_s, 1e-12))

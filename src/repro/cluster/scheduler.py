@@ -1,0 +1,406 @@
+"""Slurm-like gang scheduler + discrete-event cluster simulator.
+
+Faithful to the paper's §II semantics:
+  * gang scheduling: all nodes allocated simultaneously; one bad node kills
+    the whole job (NODE_FAIL) and forces full re-allocation;
+  * auto-requeue with the same job (run) id after infra failures;
+  * priority scheduling; preemption allowed only after 2 h of victim
+    runtime; 7-day max job lifetime;
+  * severity-tiered health checks: HIGH drains the node immediately
+    (rescheduling its jobs), LOW drains after the running job finishes;
+  * scheduling passes run on a 30 s tick (Slurm-style), so queue waits have
+    tick granularity;
+  * per-node history accumulates the lemon-detection signals of §IV-A.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.cluster.failures import Fault, FaultProcess
+from repro.cluster.workload import ClusterSpec, JobRequest, WorkloadGenerator
+from repro.core.lemon import LemonDetector, NodeHistory
+from repro.core.metrics import JobRecord, JobState
+from repro.core.taxonomy import TAXONOMY
+
+PREEMPTION_GUARD_S = 2 * 3600.0
+MAX_LIFETIME_S = 7 * 86400.0
+SCHED_TICK_S = 30.0
+CHECK_PERIOD_S = 300.0
+MAX_REQUEUES = 50
+
+
+@dataclass
+class RunState:
+    request: JobRequest
+    remaining_s: float
+    attempts: int = 0
+    productive_s: float = 0.0
+
+
+@dataclass
+class Running:
+    run: RunState
+    job_id: int
+    start_t: float
+    submit_t: float
+    nodes: dict  # node_id -> gpus used
+    finish_seq: int  # sequence id of the scheduled finish event (for cancel)
+
+
+class ClusterSim:
+    def __init__(self, spec: ClusterSpec, *, horizon_days: float = 30.0,
+                 seed: int = 0, enable_lemon_detection: bool = False,
+                 lemon_scan_period_days: float = 7.0,
+                 lemon_detector: Optional[LemonDetector] = None,
+                 episodes=(), check_introduced=None):
+        self.spec = spec
+        self.horizon_s = horizon_days * 86400.0
+        self.rng = np.random.default_rng(seed + 1)
+        self.gen = WorkloadGenerator(spec, seed=seed)
+        self.faults = FaultProcess(
+            spec.n_nodes, spec.r_f, lemon_fraction=spec.lemon_fraction,
+            lemon_multiplier=spec.lemon_rate_multiplier,
+            episodes=episodes, check_introduced=check_introduced,
+            seed=seed + 2)
+        self.enable_lemon = enable_lemon_detection
+        self.lemon_scan_period_s = lemon_scan_period_days * 86400.0
+        self.detector = lemon_detector or LemonDetector()
+
+        n = spec.n_nodes
+        g = spec.gpus_per_node
+        self.free = np.full(n, g, dtype=np.int32)
+        self.node_ok = np.ones(n, dtype=bool)       # schedulable
+        self.node_draining = np.zeros(n, dtype=bool)
+        self.node_jobs: list[set] = [set() for _ in range(n)]
+        self.full_free: set[int] = set(range(n))    # nodes with all GPUs free
+
+        self.queue: list[tuple] = []   # (-priority, submit_t, seq, RunState)
+        self.running: dict[int, Running] = {}
+        self.events: list[tuple] = []  # (t, seq, kind, payload)
+        self._seq = itertools.count()
+        self.records: list[JobRecord] = []
+        self.fault_log: list[Fault] = []
+        self.drain_log: list[tuple] = []
+        self.histories = [NodeHistory(i) for i in range(n)]
+        self.removed_lemons: set[int] = set()
+        self.lemon_removal_log: list[tuple] = []
+        self._cancelled_finishes: set[int] = set()
+        self._job_ids = itertools.count(1)
+
+    # ------------------------------------------------------------------
+    def _push(self, t: float, kind: str, payload) -> int:
+        seq = next(self._seq)
+        heapq.heappush(self.events, (t, seq, kind, payload))
+        return seq
+
+    # -- node capacity management --------------------------------------
+    def _alloc_nodes(self, req_gpus: int) -> Optional[dict]:
+        g = self.spec.gpus_per_node
+        if req_gpus >= g:
+            n_nodes = -(-req_gpus // g)
+            avail = [i for i in self.full_free
+                     if self.node_ok[i] and not self.node_draining[i]]
+            if len(avail) < n_nodes:
+                return None
+            chosen = avail[:n_nodes]
+            out = {}
+            for i in chosen:
+                self.free[i] = 0
+                self.full_free.discard(i)
+                out[i] = g
+            return out
+        # small job: first node with enough free GPUs (prefer tightest fit)
+        best = -1
+        best_free = g + 1
+        # scan a bounded sample of candidate nodes for speed
+        for i in self.full_free:
+            if self.node_ok[i] and not self.node_draining[i]:
+                best = i
+                best_free = g
+                break
+        for i in np.nonzero((self.free > 0) & (self.free < g)
+                            & self.node_ok & ~self.node_draining)[0][:64]:
+            if req_gpus <= self.free[i] < best_free:
+                best, best_free = int(i), int(self.free[i])
+        if best < 0:
+            return None
+        self.free[best] -= req_gpus
+        if self.free[best] == 0:
+            self.full_free.discard(best)
+        return {best: req_gpus}
+
+    def _release(self, nodes: dict) -> None:
+        for i, g_used in nodes.items():
+            self.free[i] += g_used
+            if self.free[i] == self.spec.gpus_per_node and self.node_ok[i] \
+                    and not self.node_draining[i]:
+                self.full_free.add(i)
+            if self.node_draining[i] and not self.node_jobs[i]:
+                self._drain_now(i, None, reason="low_sev_after_job",
+                                now=None)
+
+    # -- job lifecycle ---------------------------------------------------
+    def _start_job(self, t: float, run: RunState, nodes: dict,
+                   submit_t: float) -> None:
+        job_id = next(self._job_ids)
+        dur = min(run.remaining_s, MAX_LIFETIME_S)
+        seq = self._push(t + dur, "finish", job_id)
+        r = Running(run, job_id, t, submit_t, nodes, seq)
+        self.running[job_id] = r
+        for i in nodes:
+            self.node_jobs[i].add(job_id)
+            if run.request.n_nodes == 1 and run.request.n_gpus <= 8:
+                self.histories[i].single_node_jobs += 1
+
+    def _record(self, r: Running, t: float, state: JobState,
+                hw: bool = False, symptoms=(), preempted_by=None) -> None:
+        self.records.append(JobRecord(
+            job_id=r.job_id, run_id=r.run.request.run_id,
+            n_gpus=r.run.request.n_gpus, submit_t=r.submit_t,
+            start_t=r.start_t, end_t=t, state=state,
+            priority=r.run.request.priority, hw_attributed=hw,
+            symptoms=tuple(symptoms), preempted_by=preempted_by))
+
+    def _end_job(self, r: Running, t: float) -> None:
+        del self.running[r.job_id]
+        self._cancelled_finishes.add(r.finish_seq)
+        for i in r.nodes:
+            self.node_jobs[i].discard(r.job_id)
+        self._release(r.nodes)
+
+    def _interrupt(self, r: Running, t: float, state: JobState,
+                   hw: bool, symptoms=(), preempted_by=None,
+                   requeue: bool = True) -> None:
+        ran = t - r.start_t
+        r.run.productive_s += ran
+        r.run.remaining_s = max(r.run.remaining_s - ran, 0.0)
+        self._record(r, t, state, hw, symptoms, preempted_by)
+        self._end_job(r, t)
+        # lemon signals
+        for i in r.nodes:
+            h = self.histories[i]
+            if state == JobState.NODE_FAIL:
+                if r.run.request.n_nodes > 1:
+                    h.multi_node_node_fails += 1
+                else:
+                    h.single_node_node_fails += 1
+                if self.rng.random() < 0.3:
+                    h.excl_jobid_count += 1
+        if requeue and r.run.attempts < MAX_REQUEUES and r.run.remaining_s > 1.0:
+            r.run.attempts += 1
+            self._enqueue(t, r.run)
+
+    def _enqueue(self, t: float, run: RunState) -> None:
+        heapq.heappush(self.queue,
+                       (-run.request.priority, t, next(self._seq), run))
+
+    # -- node fault handling ----------------------------------------------
+    def _drain_now(self, node_id: int, fault: Optional[Fault],
+                   reason: str = "", now: Optional[float] = None) -> None:
+        if not self.node_ok[node_id]:
+            return
+        self.node_ok[node_id] = False
+        self.node_draining[node_id] = False
+        self.full_free.discard(node_id)
+        self.histories[node_id].out_count += 1
+        repair = fault.repair_s if fault else 3600.0
+        t0 = fault.t if fault else (now if now is not None else self._now)
+        self.drain_log.append((t0, node_id, reason))
+        self._push(t0 + repair, "repair", node_id)
+
+    def _handle_fault(self, t: float, fault: Fault) -> None:
+        node_id = fault.node_id
+        self.fault_log.append(fault)
+        h = self.histories[node_id]
+        if fault.symptom.startswith("gpu"):
+            h.xid_cnt += 1
+        if not fault.transient:
+            h.tickets += 1
+        # next fault on this node
+        if node_id not in self.removed_lemons:
+            self._push(self.faults.next_fault_time(node_id, t), "fault_node",
+                       node_id)
+        if not self.node_ok[node_id]:
+            return
+
+        sev = TAXONOMY[fault.symptom].severity
+        has_victims = bool(self.node_jobs[node_id])
+        if fault.detectable_by_check and sev == "high":
+            # health check catches it within the 5-min cadence; the kill +
+            # drain happen at detection time (deferred event for causality)
+            delay = float(self.rng.uniform(0, CHECK_PERIOD_S))
+            self._push(t + delay, "kill_node", {
+                "node_id": node_id, "fault": fault, "state": "NODE_FAIL",
+                "hw": True, "reason": f"check:{fault.symptom}"})
+        elif fault.detectable_by_check:
+            # low severity: drain after running jobs complete
+            if has_victims:
+                self.node_draining[node_id] = True
+                self.full_free.discard(node_id)
+            else:
+                self._drain_now(node_id, fault, reason=f"check:{fault.symptom}")
+        else:
+            # undetected: the job crashes; NODE_FAIL heartbeat catch-all
+            delay = float(self.rng.exponential(600.0))
+            hw_attr = self.rng.random() < 0.5  # a check fires in the window
+            self._push(t + delay, "kill_node", {
+                "node_id": node_id, "fault": fault,
+                "state": "FAILED" if hw_attr else "NODE_FAIL",
+                "hw": hw_attr, "reason": "node_fail_heartbeat"})
+
+    def _handle_kill(self, t: float, payload: dict) -> None:
+        node_id = payload["node_id"]
+        fault: Fault = payload["fault"]
+        if not self.node_ok[node_id]:
+            return
+        state = JobState(payload["state"])
+        for j in list(self.node_jobs[node_id]):
+            r = self.running.get(j)
+            if r is not None:
+                self._interrupt(r, t, state, hw=payload["hw"],
+                                symptoms=(fault.symptom, *fault.co_symptoms))
+        fault2 = Fault(t, node_id, fault.symptom, fault.co_symptoms,
+                       fault.transient, fault.detectable_by_check,
+                       fault.repair_s)
+        self._drain_now(node_id, fault2, reason=payload["reason"])
+
+    # -- scheduling pass ---------------------------------------------------
+    def _try_preempt(self, t: float, run: RunState) -> bool:
+        """Free whole nodes for a high-priority multi-node job."""
+        need = run.request.n_nodes
+        have = sum(1 for i in self.full_free
+                   if self.node_ok[i] and not self.node_draining[i])
+        deficit = need - have
+        if deficit <= 0:
+            return True
+        victims = sorted(
+            (r for r in self.running.values()
+             if r.run.request.priority < run.request.priority
+             and t - r.start_t >= PREEMPTION_GUARD_S
+             and r.run.request.n_gpus >= self.spec.gpus_per_node),
+            key=lambda r: r.run.request.priority)
+        freed = 0
+        # paper Fig. 8 accounting: a preemption is "second order" only when
+        # the instigator is a requeued job recovering from a failure
+        instigator = run.request.run_id if run.attempts > 0 else None
+        for v in victims:
+            if freed >= deficit:
+                break
+            freed += len(v.nodes)
+            self._interrupt(v, t, JobState.PREEMPTED, hw=False,
+                            preempted_by=instigator)
+        return freed >= deficit
+
+    def _schedule_pass(self, t: float) -> None:
+        deferred = []
+        placed = 0
+        scanned = 0
+        while self.queue and scanned < 200:
+            negp, sub_t, seq, run = heapq.heappop(self.queue)
+            scanned += 1
+            nodes = self._alloc_nodes(run.request.n_gpus)
+            if nodes is None and run.request.priority >= 7 \
+                    and run.request.n_nodes > 1:
+                if self._try_preempt(t, run):
+                    nodes = self._alloc_nodes(run.request.n_gpus)
+            if nodes is None:
+                deferred.append((negp, sub_t, seq, run))
+                # gang scheduling: don't let smaller lower-priority jobs jump
+                # far ahead; allow limited backfill depth
+                if len(deferred) > 50:
+                    break
+                continue
+            self._start_job(t, run, nodes, submit_t=sub_t)
+            placed += 1
+        for item in deferred:
+            heapq.heappush(self.queue, item)
+
+    # -- lemon scan ---------------------------------------------------------
+    def _lemon_scan(self, t: float) -> None:
+        verdicts = self.detector.scan(
+            h for i, h in enumerate(self.histories)
+            if self.node_ok[i] or True)
+        for v in verdicts:
+            if v.is_lemon and v.node_id not in self.removed_lemons:
+                self.lemon_removal_log.append((t, v.node_id, v.tripped))
+                self.removed_lemons.add(v.node_id)
+                # replace with a healthy node: clear fault process lemon flag
+                self.faults.lemons.discard(v.node_id)
+                if self.node_ok[v.node_id]:
+                    if self.node_jobs[v.node_id]:
+                        # proactive removal: drain after running jobs finish
+                        self.node_draining[v.node_id] = True
+                        self.full_free.discard(v.node_id)
+                    else:
+                        self.node_ok[v.node_id] = False
+                        self.full_free.discard(v.node_id)
+                        self._push(t + 4 * 3600.0, "repair", v.node_id)
+
+    # -- main loop -----------------------------------------------------------
+    def run(self) -> None:
+        for req in self.gen.generate(self.horizon_s / 86400.0):
+            self._push(req.submit_t, "arrive", req)
+        for i in range(self.spec.n_nodes):
+            self._push(self.faults.next_fault_time(i, 0.0), "fault_node", i)
+        t = 0.0
+        while t < self.horizon_s:
+            self._push(t, "sched", None)
+            t += SCHED_TICK_S
+        if self.enable_lemon:
+            t = self.lemon_scan_period_s
+            while t < self.horizon_s:
+                self._push(t, "lemon_scan", None)
+                t += self.lemon_scan_period_s
+
+        self._now = 0.0
+        while self.events:
+            t, seq, kind, payload = heapq.heappop(self.events)
+            self._now = t
+            if t > self.horizon_s:
+                break
+            if kind == "arrive":
+                req: JobRequest = payload
+                self._enqueue(t, RunState(req, req.duration_s))
+            elif kind == "finish":
+                if seq in self._cancelled_finishes:
+                    continue
+                r = self.running.get(payload)
+                if r is None or r.finish_seq != seq:
+                    continue
+                ran = t - r.start_t
+                r.run.productive_s += ran
+                r.run.remaining_s = max(r.run.remaining_s - ran, 0.0)
+                state = JobState(r.run.request.outcome) \
+                    if r.run.remaining_s <= 1.0 else JobState.TIMEOUT
+                self._record(r, t, state)
+                self._end_job(r, t)
+            elif kind == "fault_node":
+                if not self.node_ok[payload] and payload in self.removed_lemons:
+                    continue
+                fault = self.faults.sample_fault(payload, t)
+                self._handle_fault(t, fault)
+            elif kind == "repair":
+                node_id = payload
+                if node_id in self.removed_lemons:
+                    self.removed_lemons.discard(node_id)  # replaced node
+                self.node_ok[node_id] = True
+                self.node_draining[node_id] = False
+                if self.free[node_id] == self.spec.gpus_per_node:
+                    self.full_free.add(node_id)
+                self._push(self.faults.next_fault_time(node_id, t),
+                           "fault_node", node_id)
+            elif kind == "kill_node":
+                self._handle_kill(t, payload)
+            elif kind == "sched":
+                self._schedule_pass(t)
+            elif kind == "lemon_scan":
+                self._lemon_scan(t)
+
+        # close out still-running jobs as CANCELLED at horizon (censored)
+        for r in list(self.running.values()):
+            self._record(r, self.horizon_s, JobState.CANCELLED)

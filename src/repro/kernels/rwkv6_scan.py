@@ -1,0 +1,103 @@
+"""Pallas TPU kernel for the RWKV-6 (Finch) WKV recurrence.
+
+TPU adaptation: the (D_k x D_v) per-head state matrix stays resident in
+VMEM across the *entire* sequence — the grid iterates (batch, head,
+time-chunk) with the time axis minor/sequential, so state never round-trips
+HBM between chunks (the GPU formulation re-loads state per thread-block).
+Inside a chunk the recurrence is a short fori_loop of rank-1 updates; r/k/
+v/w arrive as (chunk, D) VMEM tiles.
+
+out_t = r_t . (S + diag(u) k_t^T v_t);  S <- diag(w_t) S + k_t^T v_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_final_ref, s_scr,
+            *, chunk: int, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    u = u_ref[0].astype(jnp.float32)  # (D,)
+
+    def step(t, _):
+        r_t = r_ref[0, 0, t].astype(jnp.float32)  # (D,)
+        k_t = k_ref[0, 0, t].astype(jnp.float32)
+        v_t = v_ref[0, 0, t].astype(jnp.float32)
+        w_t = w_ref[0, 0, t].astype(jnp.float32)
+        kv = k_t[:, None] * v_t[None, :]          # (D, D) rank-1
+        s = s_scr[...]
+        out = jnp.dot(r_t, s + u[:, None] * kv,
+                      preferred_element_type=jnp.float32)
+        o_ref[0, 0, t] = out.astype(o_ref.dtype)
+        s_scr[...] = w_t[:, None] * s + kv
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(c == n_chunks - 1)
+    def _emit_state():
+        s_final_ref[0, 0] = s_scr[...]
+
+
+def wkv6(
+    r: jax.Array,  # (B, S, H, D)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # decay in (0, 1)
+    u: jax.Array,  # (H, D)
+    state: jax.Array | None = None,  # (B, H, D, D) f32 (zeros if None)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    B, S, H, D = r.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n_chunks = S // chunk
+
+    rt = r.transpose(0, 2, 1, 3)  # (B, H, S, D)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    wt = w.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    o, s_final = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, D), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, D), r.dtype),
+            jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, u)
+    out = o.transpose(0, 2, 1, 3)
+    if state is not None:
+        # incorporate an incoming state: out_t += r_t . (decayprod_t * S0)
+        # handled by the jnp wrapper for decode paths; training starts at 0.
+        raise NotImplementedError(
+            "non-zero initial state uses the jnp path (decode is S=1)")
+    return out, s_final

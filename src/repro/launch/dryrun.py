@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, record memory/cost/collective analyses for §Roofline.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and only the dry-run wants 512 placeholder host devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-20b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, get_arch, list_archs
+from repro.launch import hlo_analysis, roofline, specs
+from repro.launch.mesh import make_mesh_named
+from repro.models.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.optim import adamw
+from repro.parallel.axes import mesh_context
+
+ASSIGNED = [
+    "granite-20b", "qwen3-0.6b", "starcoder2-3b", "gemma3-4b",
+    "seamless-m4t-large-v2", "recurrentgemma-9b", "rwkv6-7b",
+    "llama4-scout-17b-a16e", "mixtral-8x22b", "llava-next-34b",
+]
+SHAPE_NAMES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def cell_id(arch: str, shape: str, mesh: str) -> str:
+    return f"{arch}__{shape}__{mesh}"
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_name: str,
+             overrides: dict | None = None) -> dict:
+    """Lower+compile one cell.
+
+    ``overrides`` drives the §Perf hillclimb:
+      * ArchConfig fields (remat_policy, loss_chunk, window, ...) applied
+        via cfg.replace;
+      * ``rule:<logical_axis>=<mesh_axis|none|pod,data>`` sharding-rule
+        overrides;
+      * ``env:<NAME>=<value>`` environment knobs (flash block sizes etc.).
+    """
+    overrides = dict(overrides or {})
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    rec: dict = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "status": "ok",
+        "overrides": {k: str(v) for k, v in overrides.items()},
+    }
+    if shape_name == "long_500k" and not cfg.long_context_ok:
+        rec["status"] = "skipped_full_attention"
+        rec["note"] = ("pure full-attention arch: 524k decode is not "
+                       "sub-quadratic-servable (see DESIGN.md)")
+        return rec
+
+    force_micro = int(overrides.pop("force_micro", 0))
+    rule_over = {}
+    cfg_over = {}
+    for k, v in overrides.items():
+        if k.startswith("rule:"):
+            ax = k.split(":", 1)[1]
+            if v in ("none", "None", ""):
+                rule_over[ax] = None
+            elif "," in v:
+                rule_over[ax] = tuple(v.split(","))
+            else:
+                rule_over[ax] = v
+        elif k.startswith("env:"):
+            os.environ[k.split(":", 1)[1]] = str(v)
+        else:
+            field_type = type(getattr(cfg, k))
+            cfg_over[k] = field_type(v) if field_type is not bool \
+                else (str(v).lower() in ("1", "true", "yes"))
+    if cfg_over:
+        cfg = cfg.replace(**cfg_over)
+
+    mesh = make_mesh_named(mesh_name)
+    n_devices = mesh.devices.size
+    rules = specs.rules_for(shape)
+    if rule_over:
+        rules = rules.with_overrides(**rule_over)
+    dropped: list = []
+    args = specs.input_specs(cfg, shape)
+    in_sh = specs.input_shardings(cfg, shape, mesh, rules, dropped)
+    out_sh = specs.output_shardings(cfg, shape, mesh, rules)
+
+    from repro.launch import hw
+
+    dp = mesh.devices.size // mesh.shape.get("model", 1)
+
+    def build(n_micro: int):
+        if shape.kind == "train":
+            return make_train_step(cfg, adamw.AdamWConfig(),
+                                   n_microbatches=n_micro), (0, 1)
+        if shape.kind == "prefill":
+            return make_prefill_step(cfg), ()
+        return make_decode_step(cfg), (1,)
+
+    # auto-fit: double the microbatch count for training until the step
+    # fits in HBM (gradient accumulation; see models/steps.py)
+    attempts = []
+    n_micro = force_micro or 1
+    forced = force_micro > 0
+    while True:
+        fn, donate = build(n_micro)
+        with mesh_context(mesh, rules):
+            t0 = time.time()
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+        ma0 = compiled.memory_analysis()
+        peak = (ma0.argument_size_in_bytes + ma0.output_size_in_bytes
+                + ma0.temp_size_in_bytes - ma0.alias_size_in_bytes)
+        attempts.append({"n_microbatches": n_micro,
+                         "peak_device_bytes": int(peak)})
+        fits = peak <= 0.97 * hw.HBM_BYTES
+        next_micro = n_micro * 2
+        per_micro_ok = (shape.kind == "train"
+                        and shape.global_batch % (next_micro * dp) == 0)
+        if fits or not per_micro_ok or forced:
+            break
+        n_micro = next_micro
+    rec["n_microbatches"] = n_micro
+    rec["fit_attempts"] = attempts
+    rec["fits_hbm"] = bool(peak <= 0.97 * hw.HBM_BYTES)
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    hlo = compiled.as_text()
+    # trip-count-aware analysis (cost_analysis counts scan bodies once)
+    mod = hlo_analysis.analyze_module(hlo, pod_size=256)
+
+    mem = {
+        "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(ma, "alias_size_in_bytes", 0),
+        "code_bytes": getattr(ma, "generated_code_size_in_bytes", 0),
+    }
+    mem["peak_device_bytes"] = (
+        mem["argument_bytes"] + mem["output_bytes"]
+        + mem["temp_bytes"] - mem["alias_bytes"])
+
+    flops_dev = float(mod["flops"])
+    bytes_dev = float(mod["bytes"])
+    colls = mod["collectives"]
+    rl = roofline.analyze(
+        cfg, shape, n_devices=n_devices, flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        intra_pod_coll_bytes=colls["intra_pod_bytes"],
+        cross_pod_coll_bytes=colls["cross_pod_bytes"],
+    )
+
+    rec.update(
+        n_devices=n_devices,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=mem,
+        cost={
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "xla_raw_flops": float(ca.get("flops", 0.0)),
+            "xla_raw_bytes": float(ca.get("bytes accessed", 0.0)),
+        },
+        collectives=colls,
+        analysis_warnings=mod["warnings"],
+        roofline=rl.to_dict(),
+        sharding_fallbacks=sorted({f"{ax}->{a} (dim={d})" for ax, a, d in dropped}),
+        params_total=cfg.param_count(),
+        params_active=cfg.active_param_count(),
+        hlo_bytes=len(hlo),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=SHAPE_NAMES + [None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="hillclimb override (cfg field, rule:<axis>, env:<var>)")
+    ap.add_argument("--tag", default=None,
+                    help="variant tag; results land in <out>/<cell>__<tag>.json")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.overrides)
+
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = SHAPE_NAMES if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                cid = cell_id(arch, shape, mesh_name)
+                if args.tag:
+                    cid = f"{cid}__{args.tag}"
+                path = outdir / f"{cid}.json"
+                if args.resume and path.exists():
+                    print(f"[skip] {cid} (exists)")
+                    continue
+                t0 = time.time()
+                try:
+                    rec = run_cell(arch, shape, mesh_name, overrides)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "status": "error", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    n_fail += 1
+                path.write_text(json.dumps(rec, indent=1))
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    rl = rec["roofline"]
+                    extra = (f" dom={rl['dominant']} frac={rl['roofline_fraction']:.3f}"
+                             f" mem={rec['memory']['peak_device_bytes']/2**30:.2f}GiB"
+                             f" compile={rec['compile_s']}s")
+                print(f"[{status}] {cid}{extra} ({time.time()-t0:.0f}s)", flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

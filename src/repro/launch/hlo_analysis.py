@@ -1,0 +1,472 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` on the CPU backend counts each ``while`` body
+(i.e. every ``lax.scan``-ed layer stack) exactly once, so a 52-layer scanned
+transformer reports ~1/52 of its real FLOPs, and collectives inside the
+layer loop (FSDP all-gathers!) are similarly undercounted.  This module
+parses the optimized HLO text, builds the computation call graph, and
+aggregates per-device
+
+  * matmul + elementwise FLOPs,
+  * HBM bytes accessed (XLA-style: fusion boundaries only),
+  * collective traffic (ring-algorithm factors, intra- vs cross-pod),
+
+scaling ``while`` bodies by their statically-parsed trip counts and
+recursing through fusions/calls/conditionals.  Validated against
+``cost_analysis()`` on scan-free modules (see tests/test_hlo_analysis.py).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# "  %name = TYPE opcode(operands), attrs" — opcode is letters/dashes
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\((.*)\)\s+->")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(r"(?:true|false)_computation=%?([\w\.\-]+)")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^=]*?\})\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+# ops that cost ~1 flop per output element
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "compare",
+    "select", "and", "or", "xor", "not", "negate", "abs", "sign", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "clamp",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "sqrt", "rsqrt", "cbrt", "power", "cosine", "sine", "tan", "atan2",
+    "logistic", "expm1", "log1p", "remainder", "shift-left",
+    "shift-right-arithmetic", "shift-right-logical", "erf",
+}
+# ops that read only as much as they write (don't charge the full operand)
+_SLICING = {"dynamic-slice", "slice", "gather", "scatter", "dynamic-update-slice"}
+_FREE = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "opt-barrier",
+    "get-dimension-size", "rng-bit-generator", "rng", "domain",
+}
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for dtype, dims in _ARRAY_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return elems, nbytes
+
+
+def _largest_array_bytes(shape_str: str) -> int:
+    best = 0
+    for dtype, dims in _ARRAY_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        best = max(best, n * _DTYPE_BYTES[dtype])
+    return best
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result: str  # result type string
+    rest: str    # operand list + attributes (text after the opening paren)
+
+
+@dataclass
+class Computation:
+    name: str
+    params: dict  # param name -> type string
+    ops: list = field(default_factory=list)
+
+
+def parse_computations(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    for line in text.splitlines():
+        if current is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                name = m.group(2)
+                params = {}
+                for pm in re.finditer(r"([\w\.\-]+)\s*:\s*([^,()]+(?:\([^)]*\))?)",
+                                      m.group(3)):
+                    params[pm.group(1)] = pm.group(2)
+                current = Computation(name, params)
+            continue
+        if line.startswith("}"):
+            comps[current.name] = current
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            current.ops.append(Op(m.group(1), m.group(3), m.group(2), m.group(4)))
+    return comps
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_intra: float = 0.0
+    coll_cross: float = 0.0
+    coll_per_op: dict = field(default_factory=lambda: defaultdict(
+        lambda: {"count": 0.0, "bytes_moved": 0.0}))
+
+    def add(self, other: "Cost", scale: float = 1.0) -> None:
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        self.coll_intra += other.coll_intra * scale
+        self.coll_cross += other.coll_cross * scale
+        for k, v in other.coll_per_op.items():
+            ent = self.coll_per_op[k]
+            ent["count"] += v["count"] * scale
+            ent["bytes_moved"] += v["bytes_moved"] * scale
+
+
+class ModuleAnalyzer:
+    def __init__(self, hlo_text: str, pod_size: int = 256):
+        self.comps = parse_computations(hlo_text)
+        self.pod_size = pod_size
+        self._cache: dict[str, Cost] = {}
+        self.entry = None
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M)
+        if m:
+            self.entry = m.group(1)
+        self.warnings: list[str] = []
+
+    # -- helpers ---------------------------------------------------------
+    def _operand_types(self, comp: Computation, rest: str) -> list[str]:
+        # operand segment = text up to the matching close paren at depth 0
+        depth = 1
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        seg = rest[:end]
+        names = re.findall(r"%([\w\.\-]+)", seg)
+        types = []
+        local = {op.name: op.result for op in comp.ops}
+        for n in names:
+            if n in local:
+                types.append(local[n])
+            elif n in comp.params:
+                types.append(comp.params[n])
+        return types
+
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        best = 0
+        for op in comp.ops:
+            if op.opcode == "constant":
+                m = re.search(r"[su]\d+\[\]", op.result)
+                mm = re.search(r"\((\d+)\)", "(" + op.rest)
+                if m and mm:
+                    best = max(best, int(mm.group(1)))
+        if best == 0:
+            self.warnings.append(f"no trip count in {cond_name}; assuming 1")
+            return 1
+        return best
+
+    def _group_info(self, rest: str) -> tuple[int, bool]:
+        m = _GROUPS_LIST_RE.search(rest)
+        if m:
+            first = m.group(1).strip("{}").split("}")[0]
+            ids = [int(x) for x in first.replace("{", "").split(",") if x.strip()]
+            pods = {i // self.pod_size for i in ids}
+            return max(len(ids), 1), len(pods) > 1
+        m = _GROUPS_IOTA_RE.search(rest)
+        if m:
+            n_groups, g_size = int(m.group(1)), int(m.group(2))
+            reshape = [int(x) for x in m.group(3).split(",")]
+            total = 1
+            for d in reshape:
+                total *= d
+            if m.group(4):
+                # transposed iota: compute group membership explicitly
+                perm = [int(x) for x in m.group(4).split(",")]
+                import numpy as np
+
+                ids = np.arange(total).reshape(reshape).transpose(perm).reshape(
+                    n_groups, g_size)
+                first = ids[0]
+                pods = {int(i) // self.pod_size for i in first}
+                return g_size, len(pods) > 1
+            first_ids = range(g_size)
+            pods = {i // self.pod_size for i in first_ids}
+            # contiguous groups only cross if larger than a pod
+            return g_size, g_size > self.pod_size
+        return 1, False
+
+    def _operand_names(self, rest: str) -> list[str]:
+        depth = 1
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return re.findall(r"%([\w\.\-]+)", rest[:end])
+
+    def _fusion_discounts(self, comp_name: str) -> tuple[dict[int, int], int]:
+        """(param byte discounts, output byte reduction) for a fused comp.
+
+        * Params consumed *only* by slicing ops are charged at the slice size
+          (this is what makes per-layer weight gathers inside a ``scan`` cost
+          a layer, not the whole stack).
+        * A dynamic-update-slice only writes its update region, so the
+          fusion's output bytes shrink by (buffer - update) per DUS.
+        """
+        if not hasattr(self, "_fpb_cache"):
+            self._fpb_cache = {}
+        if comp_name in self._fpb_cache:
+            return self._fpb_cache[comp_name]
+        params: dict[int, int] = {}
+        out_reduction = 0
+        comp = self.comps.get(comp_name)
+        if comp is not None:
+            local = {op.name: op.result for op in comp.ops}
+            local.update(comp.params)
+
+            def type_bytes(name: str) -> int:
+                return _shape_elems_bytes(local.get(name, ""))[1]
+
+            param_ops = {}
+            for op in comp.ops:
+                if op.opcode == "parameter":
+                    m = re.match(r"(\d+)\)", op.rest)
+                    if m:
+                        param_ops[op.name] = int(m.group(1))
+            for op in comp.ops:
+                if op.opcode == "dynamic-update-slice":
+                    names = self._operand_names(op.rest)
+                    if len(names) >= 2:
+                        out_reduction += max(
+                            0, _shape_elems_bytes(op.result)[1]
+                            - type_bytes(names[1]))
+            for pname, pidx in param_ops.items():
+                consumers = [o for o in comp.ops
+                             if re.search(rf"%{re.escape(pname)}\b", o.rest)
+                             and o.opcode != "parameter"]
+                if not consumers or not all(o.opcode in _SLICING
+                                            for o in consumers):
+                    continue
+                total = 0
+                for o in consumers:
+                    if o.opcode == "dynamic-update-slice":
+                        names = self._operand_names(o.rest)
+                        if names and names[0] == pname and len(names) >= 2:
+                            total += type_bytes(names[1])  # RMW slice region
+                        else:
+                            total += type_bytes(pname)
+                    else:
+                        total += _shape_elems_bytes(o.result)[1]
+                params[pidx] = total
+        self._fpb_cache[comp_name] = (params, out_reduction)
+        return self._fpb_cache[comp_name]
+
+    # -- main recursion ---------------------------------------------------
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._cache:
+            return self._cache[comp_name]
+        comp = self.comps.get(comp_name)
+        total = Cost()
+        self._cache[comp_name] = total  # guard (no recursion cycles in HLO)
+        if comp is None:
+            return total
+        for op in comp.ops:
+            total.add(self._op_cost(comp, op))
+        return total
+
+    def _op_cost(self, comp: Computation, op: Op) -> Cost:
+        c = Cost()
+        oc = op.opcode
+        out_elems, out_bytes = _shape_elems_bytes(op.result)
+
+        if oc in _FREE or oc.endswith("-done"):
+            return c
+
+        if oc == "while":
+            body = _BODY_RE.search(op.rest)
+            cond = _COND_RE.search(op.rest)
+            trips = self._trip_count(cond.group(1)) if cond else 1
+            if body:
+                c.add(self.cost_of(body.group(1)), trips)
+            if cond:
+                c.add(self.cost_of(cond.group(1)), trips + 1)
+            return c
+
+        if oc == "conditional":
+            branches = []
+            m = _BRANCHES_RE.search(op.rest)
+            if m:
+                branches = re.findall(r"%?([\w\.\-]+)", m.group(1))
+            else:
+                branches = _TF_RE.findall(op.rest)
+            if branches:
+                costs = [self.cost_of(b) for b in branches]
+                # conservative: the most expensive branch
+                best = max(costs, key=lambda x: x.flops + x.bytes)
+                c.add(best)
+            return c
+
+        if oc in ("fusion", "call", "async-start"):
+            m = _CALLS_RE.search(op.rest) or _TO_APPLY_RE.search(op.rest)
+            if m:
+                sub = self.cost_of(m.group(1))
+                c.flops += sub.flops
+                c.coll_intra += sub.coll_intra
+                c.coll_cross += sub.coll_cross
+                for k, v in sub.coll_per_op.items():
+                    ent = c.coll_per_op[k]
+                    ent["count"] += v["count"]
+                    ent["bytes_moved"] += v["bytes_moved"]
+            # bytes at the fusion boundary only (XLA-style), slice-aware
+            discounts, out_red = self._fusion_discounts(m.group(1)) if m else ({}, 0)
+            op_bytes = 0
+            for i, t in enumerate(self._operand_types(comp, op.rest)):
+                full = _shape_elems_bytes(t)[1]
+                op_bytes += min(full, discounts.get(i, full))
+            c.bytes += op_bytes + max(out_bytes - out_red, 0)
+            return c
+
+        base = oc[:-6] if oc.endswith("-start") else oc
+        if base in COLLECTIVE_OPS:
+            size = _largest_array_bytes(op.result)
+            g, crosses = self._group_info(op.rest)
+            if base == "all-reduce":
+                moved = 2.0 * size * (g - 1) / max(g, 1)
+            elif base == "all-gather":
+                moved = size * (g - 1) / max(g, 1)
+            elif base == "reduce-scatter":
+                moved = float(size) * (g - 1)
+            elif base == "collective-permute":
+                moved = float(size)
+                g = 2
+            else:  # all-to-all, broadcast, ragged
+                moved = size * (g - 1) / max(g, 1)
+            if g > 1:
+                ent = c.coll_per_op[base]
+                ent["count"] += 1
+                ent["bytes_moved"] += moved
+                if crosses:
+                    c.coll_cross += moved
+                else:
+                    c.coll_intra += moved
+            c.bytes += out_bytes * 2
+            return c
+
+        # operand bytes
+        operand_types = self._operand_types(comp, op.rest)
+        if oc == "dynamic-update-slice":
+            # reads + writes only the update region of the buffer
+            upd = (_shape_elems_bytes(operand_types[1])[1]
+                   if len(operand_types) > 1 else out_bytes)
+            c.bytes += 2 * upd
+            return c
+        if oc in _SLICING:
+            in_bytes = min(sum(_shape_elems_bytes(t)[1] for t in operand_types),
+                           2 * out_bytes)
+        else:
+            in_bytes = sum(_shape_elems_bytes(t)[1] for t in operand_types)
+        c.bytes += in_bytes + out_bytes
+
+        if oc == "dot":
+            # flops = 2 * out_elems * prod(contract dims of lhs)
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+            contract = 1
+            if m and operand_types:
+                lhs_dims_m = _ARRAY_RE.search(operand_types[0])
+                if lhs_dims_m:
+                    dims = [int(x) for x in lhs_dims_m.group(2).split(",") if x]
+                    for ci in m.group(1).split(","):
+                        if ci:
+                            contract *= dims[int(ci)]
+            c.flops += 2.0 * out_elems * contract
+        elif oc == "convolution":
+            m = re.search(r"window=\{size=([\dx]+)", op.rest)
+            ksize = 1
+            if m:
+                for x in m.group(1).split("x"):
+                    ksize *= int(x)
+            c.flops += 2.0 * out_elems * ksize
+        elif oc in ("reduce", "reduce-window"):
+            in_elems = sum(_shape_elems_bytes(t)[0] for t in operand_types)
+            c.flops += float(in_elems)
+        elif oc in _ELEMENTWISE or oc == "convert":
+            c.flops += float(out_elems)
+        elif oc in ("transpose", "reshape", "broadcast", "copy", "concatenate",
+                    "pad", "reverse", "sort", "map", "custom-call", "rng",
+                    "dynamic-slice", "slice", "gather", "scatter",
+                    "dynamic-update-slice", "select-and-scatter", "clz",
+                    "popcnt", "real", "imag", "fft", "cholesky",
+                    "triangular-solve", "optimization-barrier", "send", "recv",
+                    "infeed", "outfeed", "topk", "all-to-all"):
+            pass
+        return c
+
+    def analyze(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.cost_of(self.entry)
+
+
+def analyze_module(hlo_text: str, pod_size: int = 256) -> dict:
+    an = ModuleAnalyzer(hlo_text, pod_size=pod_size)
+    c = an.analyze()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collectives": {
+            "per_op": {k: dict(v) for k, v in c.coll_per_op.items()},
+            "intra_pod_bytes": c.coll_intra,
+            "cross_pod_bytes": c.coll_cross,
+            "total_bytes": c.coll_intra + c.coll_cross,
+        },
+        "warnings": an.warnings[:20],
+    }
+
+
+def count_hlo_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\b", hlo_text))

@@ -1,0 +1,8 @@
+"""Target hardware constants (TPU v5e-class chip) for roofline analysis."""
+
+PEAK_FLOPS_BF16 = 197e12   # FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (intra-pod)
+DCN_BW = 6.25e9            # bytes/s per chip across the pod boundary (~50 Gb/s)
+HBM_BYTES = 16 * 1024**3   # per-chip HBM capacity
+CHIPS_PER_POD = 256

@@ -1,0 +1,77 @@
+"""Roofline model: three terms per (arch x shape x mesh) cell.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = intra_pod_bytes/ICI_bw + cross_pod_bytes/DCN_bw
+
+All inputs are per-device (the compiled module is the SPMD per-device
+program).  The *roofline fraction* reported in EXPERIMENTS.md §Perf is
+
+  MODEL_FLOPS_per_chip / (dominant_term * peak_FLOP/s)
+
+i.e. the MFU the step would achieve if it ran exactly at the binding
+roofline term — the score this framework hillclimbs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch import hw
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """Paper-convention useful FLOPs: 6*N*D train, 2*N*D inference,
+    N = active parameters (6*N_active*D for MoE)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_device: float
+    useful_flops_ratio: float
+    roofline_fraction: float
+    step_time_lb_s: float
+
+    def to_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+def analyze(cfg: ArchConfig, shape: ShapeSpec, *, n_devices: int,
+            flops_per_device: float, bytes_per_device: float,
+            intra_pod_coll_bytes: float, cross_pod_coll_bytes: float) -> Roofline:
+    compute_s = flops_per_device / hw.PEAK_FLOPS_BF16
+    memory_s = bytes_per_device / hw.HBM_BW
+    collective_s = (intra_pod_coll_bytes / hw.ICI_BW
+                    + cross_pod_coll_bytes / hw.DCN_BW)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    total_hlo = flops_per_device * n_devices
+    useful = mf / total_hlo if total_hlo else 0.0
+    step_lb = max(terms.values())
+    frac = (mf / n_devices) / (step_lb * hw.PEAK_FLOPS_BF16) if step_lb else 0.0
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=mf,
+        hlo_flops_device=flops_per_device,
+        useful_flops_ratio=useful,
+        roofline_fraction=frac,
+        step_time_lb_s=step_lb,
+    )

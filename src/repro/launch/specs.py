@@ -1,0 +1,220 @@
+"""Abstract input specs + shardings for every (arch x shape x step) cell.
+
+``input_specs`` produces ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation); ``input_shardings`` produces the matching
+NamedSharding pytrees.  Together they drive ``jit(...).lower(...)`` in the
+dry-run without touching device memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import params as pmod
+from repro.models import transformer
+from repro.models.layers import COMPUTE_DTYPE
+from repro.optim import adamw
+from repro.parallel.axes import (
+    LONG_CONTEXT_RULES,
+    SERVE_RULES,
+    TRAIN_RULES,
+    ShardingRules,
+    spec_for,
+)
+
+
+def rules_for(shape: ShapeSpec) -> ShardingRules:
+    if shape.kind == "train":
+        return TRAIN_RULES
+    if shape.name == "long_500k":
+        return LONG_CONTEXT_RULES
+    return SERVE_RULES
+
+
+def enc_len(cfg: ArchConfig, seq_len: int) -> int:
+    return int(seq_len * cfg.enc_len_ratio)
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+def batch_struct(cfg: ArchConfig, shape: ShapeSpec) -> tuple[dict, dict]:
+    """(ShapeDtypeStruct tree, logical-axes tree) for the data batch."""
+    B, S = shape.global_batch, shape.seq_len
+    struct: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    if shape.kind == "train":
+        n_text = S - cfg.n_patches
+        struct["tokens"] = jax.ShapeDtypeStruct((B, n_text + 1), jnp.int32)
+        axes["tokens"] = ("act_batch", None)
+    elif shape.kind == "prefill":
+        n_text = S - cfg.n_patches
+        struct["tokens"] = jax.ShapeDtypeStruct((B, n_text), jnp.int32)
+        axes["tokens"] = ("act_batch", None)
+    else:  # decode
+        struct["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        axes["tokens"] = ("act_batch", None)
+        return struct, axes
+    if cfg.n_patches:
+        struct["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), COMPUTE_DTYPE)
+        axes["patches"] = ("act_batch", "act_seq", None)
+    if cfg.enc_dec:
+        struct["frames"] = jax.ShapeDtypeStruct(
+            (B, enc_len(cfg, S), cfg.d_model), COMPUTE_DTYPE)
+        axes["frames"] = ("act_batch", "act_seq", None)
+    return struct, axes
+
+
+def cache_struct(cfg: ArchConfig, shape: ShapeSpec) -> tuple[Any, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    struct = jax.eval_shape(
+        functools.partial(transformer.init_cache, cfg, B, S, enc_len(cfg, S)))
+    axes = transformer.cache_axes(cfg)
+    return struct, axes
+
+
+# ---------------------------------------------------------------------------
+# Full argument specs per step kind
+# ---------------------------------------------------------------------------
+def train_defs(cfg: ArchConfig):
+    return transformer.model_defs(cfg)  # f32 master weights
+
+
+def serve_defs(cfg: ArchConfig):
+    return pmod.cast_defs(transformer.model_defs(cfg), COMPUTE_DTYPE)
+
+
+def _opt8bit() -> bool:
+    import os
+
+    return os.environ.get("REPRO_OPT8BIT") == "1"
+
+
+def _opt_moment_abs(params_abs):
+    from repro.optim.adamw import _opt_block, _quantizable
+
+    if not _opt8bit():
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_abs)
+
+    import math
+
+    def one(s):
+        if not (len(s.shape) >= 1 and math.prod(s.shape) >= 4096):
+            return jax.ShapeDtypeStruct(s.shape, jnp.float32)
+        blk = _opt_block(s.shape[-1])
+        return {"q": jax.ShapeDtypeStruct(s.shape, jnp.int8),
+                "s": jax.ShapeDtypeStruct(
+                    s.shape[:-1] + (s.shape[-1] // blk,), jnp.float32)}
+
+    return jax.tree_util.tree_map(one, params_abs)
+
+
+def _opt_moment_shardings(defs, mesh, rules, dropped):
+    from repro.optim.adamw import _opt_block
+
+    p_sh = pmod.shardings(defs, mesh, rules, dropped)
+    if not _opt8bit():
+        return p_sh
+
+    import math
+
+    def one(d, sh):
+        if not (len(d.shape) >= 1 and math.prod(d.shape) >= 4096):
+            return sh
+        blk = _opt_block(d.shape[-1])
+        s_shape = d.shape[:-1] + (d.shape[-1] // blk,)
+        return {
+            "q": NamedSharding(mesh, spec_for(d.shape, d.axes, mesh, rules)),
+            "s": NamedSharding(mesh, spec_for(s_shape, d.axes, mesh, rules)),
+        }
+
+    return jax.tree_util.tree_map(
+        one, defs, p_sh, is_leaf=lambda x: isinstance(x, pmod.ParamDef))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """Abstract args for the cell's step function.
+
+    train  -> (params, opt_state, batch)
+    prefill-> (params, batch)
+    decode -> (params, cache, tokens)
+    """
+    if shape.kind == "train":
+        defs = train_defs(cfg)
+        params_abs = pmod.abstract(defs)
+        opt_abs = adamw.AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=_opt_moment_abs(params_abs),
+            v=_opt_moment_abs(params_abs),
+        )
+        batch_abs, _ = batch_struct(cfg, shape)
+        return (params_abs, opt_abs, batch_abs)
+    defs = serve_defs(cfg)
+    params_abs = pmod.abstract(defs)
+    if shape.kind == "prefill":
+        batch_abs, _ = batch_struct(cfg, shape)
+        return (params_abs, batch_abs)
+    cache_abs, _ = cache_struct(cfg, shape)
+    tok_abs, _ = batch_struct(cfg, shape)
+    return (params_abs, cache_abs, tok_abs["tokens"])
+
+
+def _tree_shardings(struct_tree, axes_tree, mesh, rules, dropped=None):
+    # axes_tree nodes at struct-leaf positions are whole tuples (via
+    # flatten_up_to), so plain tree_map works.
+    return jax.tree_util.tree_map(
+        lambda s, ax: NamedSharding(mesh, spec_for(s.shape, ax, mesh, rules, dropped)),
+        struct_tree, axes_tree,
+    )
+
+
+def input_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                    rules: Optional[ShardingRules] = None, dropped=None):
+    """NamedSharding trees matching input_specs(cfg, shape)."""
+    rules = rules or rules_for(shape)
+    rep = NamedSharding(mesh, P())
+    if shape.kind == "train":
+        defs = train_defs(cfg)
+        p_sh = pmod.shardings(defs, mesh, rules, dropped)
+        m_sh = _opt_moment_shardings(defs, mesh, rules, dropped)
+        opt_sh = adamw.AdamWState(step=rep, m=m_sh, v=m_sh)
+        batch_abs, batch_axes = batch_struct(cfg, shape)
+        b_sh = _tree_shardings(batch_abs, batch_axes, mesh, rules, dropped)
+        return (p_sh, opt_sh, b_sh)
+    defs = serve_defs(cfg)
+    p_sh = pmod.shardings(defs, mesh, rules, dropped)
+    if shape.kind == "prefill":
+        batch_abs, batch_axes = batch_struct(cfg, shape)
+        b_sh = _tree_shardings(batch_abs, batch_axes, mesh, rules, dropped)
+        return (p_sh, b_sh)
+    cache_abs, cache_ax = cache_struct(cfg, shape)
+    c_sh = _tree_shardings(cache_abs, cache_ax, mesh, rules, dropped)
+    tok_abs, tok_ax = batch_struct(cfg, shape)
+    t_sh = _tree_shardings(tok_abs, tok_ax, mesh, rules, dropped)
+    return (p_sh, c_sh, t_sh["tokens"])
+
+
+def output_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                     rules: Optional[ShardingRules] = None):
+    rules = rules or rules_for(shape)
+    rep = NamedSharding(mesh, P())
+    if shape.kind == "train":
+        p_sh, opt_sh, _ = input_shardings(cfg, shape, mesh, rules)
+        return (p_sh, opt_sh, rep)
+    logits_sh = NamedSharding(
+        mesh, spec_for((shape.global_batch, 1, cfg.vocab_size),
+                       ("act_batch", None, "act_vocab"), mesh, rules))
+    if shape.kind == "prefill":
+        cache_abs, cache_ax = cache_struct(cfg, shape)
+        c_sh = _tree_shardings(cache_abs, cache_ax, mesh, rules)
+        return (logits_sh, c_sh)
+    cache_abs, cache_ax = cache_struct(cfg, shape)
+    c_sh = _tree_shardings(cache_abs, cache_ax, mesh, rules)
+    return (logits_sh, c_sh)

@@ -1,0 +1,289 @@
+"""Transformer layer building blocks: norms, RoPE, attention, FFN, MoE.
+
+Every function takes/returns plain arrays; parameters come in as dicts built
+from the ParamDef trees in ``repro.models.transformer``.  Activation
+shardings are expressed through logical-axis constraints (no-ops outside a
+mesh context).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, MoESpec
+from repro.kernels import ops
+from repro.models.params import ParamDef
+from repro.parallel.axes import constrain
+
+import os as _os
+
+# bf16 is the production compute dtype; tests that need exactness set
+# REPRO_COMPUTE_DTYPE=float32 before importing repro.
+COMPUTE_DTYPE = (
+    jnp.float32
+    if _os.environ.get("REPRO_COMPUTE_DTYPE") == "float32"
+    else jnp.bfloat16
+)
+
+
+# ---------------------------------------------------------------------------
+# Norms / RoPE
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (S,) or broadcastable."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def attention_defs(cfg: ArchConfig, cross: bool = False) -> dict:
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    defs = {
+        "wq": ParamDef((d, H, Dh), ("embed", "q_heads", "head_dim")),
+        "wk": ParamDef((d, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((H, Dh, d), ("q_heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        defs["q_norm"] = ParamDef((Dh,), ("head_dim",), init="ones")
+        defs["k_norm"] = ParamDef((Dh,), ("head_dim",), init="ones")
+    return defs
+
+
+def _project_qkv(p: dict, xq: jax.Array, xkv: jax.Array, cfg: ArchConfig,
+                 positions: Optional[jax.Array], use_rope: bool):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(xq.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(xkv.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(xkv.dtype))
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope and positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "act_batch", "act_seq", "act_heads", None)
+    k = constrain(k, "act_batch", "act_seq", "act_kv_heads", None)
+    v = constrain(v, "act_batch", "act_seq", "act_kv_heads", None)
+    return q, k, v
+
+
+def self_attention(
+    p: dict,
+    x: jax.Array,  # (B, S, d) pre-normed input
+    cfg: ArchConfig,
+    kind: str,  # global | local | chunked
+    *,
+    causal: bool = True,
+    positions: Optional[jax.Array] = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Returns (attn output, (k, v)) — k/v reused for prefill cache writes."""
+    q, k, v = _project_qkv(p, x, x, cfg, positions, use_rope=True)
+    window = cfg.window if kind == "local" else 0
+    chunk = cfg.window if kind == "chunked" else 0
+    o = ops.flash_attention(
+        q, k, v, causal=causal, window=window, chunk=chunk,
+        softcap=cfg.attn_logit_softcap,
+    )
+    o = constrain(o, "act_batch", "act_seq", "act_heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    # NOTE (§Perf refuted hypothesis): constraining this output to the
+    # sequence-parallel layout, hoping for a reduce-scatter lowering,
+    # regressed granite -10% and broke the MoE dispatch path (see
+    # EXPERIMENTS.md §Perf round 3) — outputs stay seq-replicated and the
+    # boundary constraint in run_groups does the SP transition.
+    out = constrain(out, "act_batch", "act_seq", None)
+    if cfg.remat_policy == "save_attn":
+        # the inert name primitive blocks gather-reuse fusions (§Perf:
+        # +10% all-gather on granite) — only tag when the policy uses it
+        from jax.ad_checkpoint import checkpoint_name
+        out = checkpoint_name(out, "attn_out")
+    return out, (k, v)
+
+
+def cross_attention(
+    p: dict,
+    x: jax.Array,        # (B, S, d) pre-normed decoder stream
+    enc_out: jax.Array,  # (B, Se, d) encoder output
+    cfg: ArchConfig,
+) -> jax.Array:
+    q, k, v = _project_qkv(p, x, enc_out, cfg, None, use_rope=False)
+    o = ops.flash_attention(q, k, v, causal=False)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    return constrain(out, "act_batch", "act_seq", None)
+
+
+def decode_self_attention(
+    p: dict,
+    x: jax.Array,  # (B, 1, d)
+    cfg: ArchConfig,
+    kind: str,
+    k_cache: jax.Array,  # (B, L, KV, Dh)
+    v_cache: jax.Array,
+    pos: jax.Array,  # scalar int32 current position
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token attention; returns (out, new_k_cache, new_v_cache)."""
+    B, _, _ = x.shape
+    L = k_cache.shape[1]
+    positions = pos[None]  # (1,)
+    q, k, v = _project_qkv(p, x, x, cfg, positions, use_rope=True)
+    slot = pos % L  # ring slot (== pos for a full-length global cache)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+    # absolute position stored in each slot of a ring buffer
+    idx = jnp.arange(L)
+    if kind == "global":
+        slot_pos = jnp.where(idx <= pos, idx, -1)
+    else:
+        cand = pos - ((pos - idx) % L)
+        slot_pos = jnp.where(cand >= 0, cand, -1)
+    slot_pos = jnp.broadcast_to(slot_pos[None], (B, L))
+    window = cfg.window if kind == "local" else 0
+    chunk = cfg.window if kind == "chunked" else 0
+    o = ops.decode_attention(
+        q, k_cache, v_cache, slot_pos, jnp.broadcast_to(pos[None], (B,)),
+        window=window, chunk=chunk, softcap=cfg.attn_logit_softcap,
+    )
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (SwiGLU)
+# ---------------------------------------------------------------------------
+def ffn_defs(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    defs = {
+        "w_up": ParamDef((d, f), ("embed", "ff")),
+        "w_down": ParamDef((f, d), ("ff", "embed")),
+    }
+    if cfg.ffn_gated:
+        defs["w_gate"] = ParamDef((d, f), ("embed", "ff"))
+    return defs
+
+
+def ffn(p: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    if "w_gate" in p:  # SwiGLU
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        h = jax.nn.silu(g) * u
+    else:  # classic MLP
+        h = jax.nn.gelu(u)
+    h = constrain(h, "act_batch", "act_seq", "act_ff")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+    return constrain(out, "act_batch", "act_seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (t5x-style dispatch/combine with per-group capacity)
+# ---------------------------------------------------------------------------
+def moe_defs(cfg: ArchConfig) -> dict:
+    assert cfg.moe is not None
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    defs = {
+        "router": ParamDef((d, E), ("embed", "experts"), init_scale=0.1),
+        "w_gate": ParamDef((E, d, f), ("experts", "embed", "ff")),
+        "w_up": ParamDef((E, d, f), ("experts", "embed", "ff")),
+        "w_down": ParamDef((E, f, d), ("experts", "ff", "embed")),
+    }
+    if cfg.moe.shared_expert:
+        defs["shared"] = ffn_defs(cfg)
+    return defs
+
+
+def _capacity(spec: MoESpec, group: int) -> int:
+    c = int(np.ceil(group * spec.top_k * spec.capacity_factor / spec.n_experts))
+    return max(4, int(np.ceil(c / 4)) * 4)
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, dict]:
+    """Routed expert FFN.  Returns (output, aux_losses)."""
+    spec = cfg.moe
+    assert spec is not None
+    B, S, d = x.shape
+    E, K = spec.n_experts, spec.top_k
+    T = B * S
+    G = min(spec.group_size, T)
+    while T % G:  # largest divisor of T not exceeding group_size
+        G -= 1
+    n_groups = T // G
+    C = _capacity(spec, G)
+    dt = x.dtype
+
+    # unshard the sequence before grouping (the residual stream is
+    # sequence-parallel; dispatch must see whole groups)
+    x = constrain(x, "act_batch", "act_seq", None)
+    xg = x.reshape(n_groups, G, d)
+    # groups inherit the token sharding: g = (batch x seq-chunks)
+    xg = constrain(xg, "act_batch", None, None)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (g, G, E)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (g, G, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # expert one-hot per routing slot: (g, G, K, E)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)
+    # position of each token within its expert queue (capacity enforcement)
+    pos_in_expert = jnp.cumsum(onehot.reshape(n_groups, G * K, E), axis=1)
+    pos_in_expert = (pos_in_expert - 1).reshape(n_groups, G, K, E)
+    keep = (pos_in_expert < C) & (onehot > 0)
+    cap_slot = jnp.where(keep, pos_in_expert, 0).astype(jnp.int32)
+    slot_oh = jax.nn.one_hot(cap_slot, C, dtype=jnp.float32) * keep[..., None]
+    # dispatch: (g, G, E, C); combine adds the gate weights
+    dispatch = (onehot[..., None] * slot_oh).sum(2)
+    combine = (gate_vals[..., None, None] * onehot[..., None] * slot_oh).sum(2)
+
+    # dispatch/combine run in compute dtype: the dispatch matmul is an exact
+    # permutation (one-hot), and combine's bf16 gates match standard practice
+    dispatch = constrain(dispatch.astype(dt), "act_batch", None, "act_experts", None)
+    combine = constrain(combine.astype(dt), "act_batch", None, "act_experts", None)
+    xin = jnp.einsum("gtd,gtec->gecd", xg, dispatch)
+    xin = constrain(xin, "act_batch", "act_experts", None, None)
+    g_ = jnp.einsum("gecd,edf->gecf", xin, p["w_gate"].astype(dt))
+    u_ = jnp.einsum("gecd,edf->gecf", xin, p["w_up"].astype(dt))
+    h = jax.nn.silu(g_) * u_
+    h = constrain(h, "act_batch", "act_experts", None, "act_ff")
+    eo = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    # no constraint on eo: its TP partial-sum may be deferred through the
+    # (linear) combine einsum, reducing (g,G,d) instead of (g,E,C,d)
+    out = jnp.einsum("gecd,gtec->gtd", eo, combine)
+    out = out.reshape(B, S, d)
+    out = constrain(out, "act_batch", "act_seq", None)
+
+    if "shared" in p:
+        out = out + ffn(p["shared"], x)
+
+    # aux losses (Switch-style load balance + router z-loss)
+    me = probs.mean(axis=1)  # (g, E) mean router prob
+    ce = onehot.sum(2).mean(axis=1)  # (g, E) fraction dispatched
+    lb_loss = (me * ce).sum(-1).mean() * E * spec.load_balance_loss
+    z = jax.nn.logsumexp(logits, axis=-1)
+    z_loss = (z**2).mean() * spec.router_z_loss
+    dropped = 1.0 - (keep.sum() / (n_groups * G * K))
+    aux = {
+        "moe_lb_loss": lb_loss,
+        "moe_z_loss": z_loss,
+        "moe_dropped_frac": dropped,
+    }
+    return out, aux

@@ -1,0 +1,239 @@
+"""Recurrent blocks: RWKV-6 (Finch) and RG-LRU (RecurrentGemma).
+
+Both blocks are written against a unified *recurrent state* protocol so the
+train path (full sequence) and the decode path (S=1 with carried state) are
+the same code.  State entries:
+
+RWKV-6:  {"S": (B,H,Dk,Dv) f32 wkv matrix, "ts1": (B,d), "ts2": (B,d)}
+RG-LRU:  {"h": (B,W) f32 hidden, "conv": (B,K-1,W) conv context}
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models.layers import ffn, ffn_defs, rms_norm
+from repro.models.params import ParamDef
+from repro.parallel.axes import constrain
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Token shift: returns the previous token's value at each position."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+def rwkv_heads(cfg: ArchConfig) -> tuple[int, int]:
+    assert cfg.rwkv is not None
+    dh = cfg.rwkv.head_dim
+    assert cfg.d_model % dh == 0
+    return cfg.d_model // dh, dh
+
+
+def rwkv_defs(cfg: ArchConfig) -> dict:
+    assert cfg.rwkv is not None
+    d, f = cfg.d_model, cfg.d_ff
+    r = cfg.rwkv.ddlerp_rank
+    dr = cfg.rwkv.decay_rank
+    H, Dh = rwkv_heads(cfg)
+
+    def decay_init(key, shape, dtype):
+        # w0 init so that exp(-exp(w0)) spans slow..fast decay across channels
+        lin = jnp.linspace(-6.0, -0.5, shape[-1])
+        return jnp.broadcast_to(lin, shape).astype(dtype)
+
+    return {
+        "ln1": ParamDef((d,), ("embed",), init="ones"),
+        "tm_mu_x": ParamDef((d,), ("embed",), init="zeros"),
+        "tm_lora_A": ParamDef((d, 5 * r), ("embed", "rank"), init_scale=0.1),
+        "tm_lora_B": ParamDef((5, r, d), (None, "rank", "embed"), init="zeros"),
+        "tm_mu": ParamDef((5, d), (None, "embed"), init="zeros"),
+        "wr": ParamDef((d, d), ("embed", "qkv_dim")),
+        "wk": ParamDef((d, d), ("embed", "qkv_dim")),
+        "wv": ParamDef((d, d), ("embed", "qkv_dim")),
+        "wg": ParamDef((d, d), ("embed", "qkv_dim")),
+        "w0": ParamDef((d,), ("embed",), init="custom", init_fn=decay_init),
+        "wd_A": ParamDef((d, dr), ("embed", "rank"), init_scale=0.1),
+        "wd_B": ParamDef((dr, d), ("rank", "embed"), init="zeros"),
+        "u": ParamDef((H, Dh), ("q_heads", "head_dim"), init_scale=0.5),
+        "ln_x": ParamDef((d,), ("embed",), init="ones"),
+        "wo": ParamDef((d, d), ("qkv_dim", "embed")),
+        "ln2": ParamDef((d,), ("embed",), init="ones"),
+        "cm_mu_k": ParamDef((d,), ("embed",), init="zeros"),
+        "cm_mu_r": ParamDef((d,), ("embed",), init="zeros"),
+        "cm_wk": ParamDef((d, f), ("embed", "ff")),
+        "cm_wv": ParamDef((f, d), ("ff", "embed")),
+        "cm_wr": ParamDef((d, d), ("embed", "qkv_dim")),
+    }
+
+
+def rwkv_init_state(cfg: ArchConfig, batch: int) -> dict:
+    H, Dh = rwkv_heads(cfg)
+    d = cfg.d_model
+    return {
+        "S": jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        "ts1": jnp.zeros((batch, d), jnp.float32),
+        "ts2": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def rwkv_state_axes(cfg: ArchConfig) -> dict:
+    return {
+        "S": ("cache_batch", "act_heads", None, None),
+        "ts1": ("cache_batch", None),
+        "ts2": ("cache_batch", None),
+    }
+
+
+def rwkv_block(p: dict, x: jax.Array, cfg: ArchConfig,
+               state: Optional[dict] = None) -> tuple[jax.Array, dict]:
+    B, S, d = x.shape
+    H, Dh = rwkv_heads(cfg)
+    dt = x.dtype
+    st = state or {"S": None, "ts1": None, "ts2": None}
+
+    # ---- time mix -----------------------------------------------------
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    dx = _shift(xn, st["ts1"]) - xn
+    xxx = xn + dx * p["tm_mu_x"].astype(dt)
+    r_ = cfg.rwkv.ddlerp_rank
+    s = jnp.tanh(jnp.einsum("bsd,dr->bsr", xxx, p["tm_lora_A"].astype(dt)))
+    s = s.reshape(B, S, 5, r_)
+    mix = p["tm_mu"].astype(jnp.float32) + jnp.einsum(
+        "bsir,ird->bsid", s.astype(jnp.float32), p["tm_lora_B"].astype(jnp.float32))
+    xs = xn[:, :, None] + dx[:, :, None] * mix.astype(dt)  # (B,S,5,d)
+    xr, xw, xk, xv, xg = [xs[:, :, i] for i in range(5)]
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt)).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dt)).reshape(B, S, H, Dh)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dt)).reshape(B, S, H, Dh)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dt)))
+    w_log = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsd,dr->bsr", xw.astype(jnp.float32), p["wd_A"].astype(jnp.float32)
+    ) @ p["wd_B"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, S, H, Dh)  # decay in (0,1)
+
+    r = constrain(r, "act_batch", "act_seq", "act_heads", None)
+    k = constrain(k, "act_batch", "act_seq", "act_heads", None)
+    v = constrain(v, "act_batch", "act_seq", "act_heads", None)
+    out, S_new = ops.wkv6(r, k, v, w.astype(dt), p["u"], st["S"])
+
+    # per-head group norm
+    of = out.astype(jnp.float32)
+    mean = of.mean(-1, keepdims=True)
+    var = of.var(-1, keepdims=True)
+    of = (of - mean) * jax.lax.rsqrt(var + 64e-5)
+    out = (of.reshape(B, S, d) * p["ln_x"].astype(jnp.float32)).astype(dt)
+    out = out * g
+    x = x + jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt))
+    x = constrain(x, "act_batch", "act_seq", None)
+
+    # ---- channel mix ----------------------------------------------------
+    xn2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    dx2 = _shift(xn2, st["ts2"]) - xn2
+    xk2 = xn2 + dx2 * p["cm_mu_k"].astype(dt)
+    xr2 = xn2 + dx2 * p["cm_mu_r"].astype(dt)
+    gate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr2, p["cm_wr"].astype(dt)))
+    hk = jnp.einsum("bsd,df->bsf", xk2, p["cm_wk"].astype(dt))
+    hk = jnp.square(jax.nn.relu(hk))
+    hk = constrain(hk, "act_batch", "act_seq", "act_ff")
+    cm = gate * jnp.einsum("bsf,fd->bsd", hk, p["cm_wv"].astype(dt))
+    x = x + cm
+    x = constrain(x, "act_batch", "act_seq", None)
+
+    new_state = {"S": S_new, "ts1": xn[:, -1].astype(jnp.float32),
+                 "ts2": xn2[:, -1].astype(jnp.float32)}
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma)
+# ---------------------------------------------------------------------------
+def rglru_defs(cfg: ArchConfig) -> dict:
+    assert cfg.rglru is not None
+    d = cfg.d_model
+    W = cfg.rglru.lru_width
+    nh = cfg.rglru.n_heads
+    Kc = cfg.rglru.conv_width
+    wh = W // nh
+
+    def lam_init(key, shape, dtype):
+        a = jax.random.uniform(key, shape, jnp.float32, 0.9, 0.999)
+        sp = -jnp.log(a) / 8.0
+        return jnp.log(jnp.expm1(sp)).astype(dtype)
+
+    return {
+        "ln1": ParamDef((d,), ("embed",), init="ones"),
+        "w_y": ParamDef((d, W), ("embed", "lru")),
+        "w_x": ParamDef((d, W), ("embed", "lru")),
+        "conv_w": ParamDef((Kc, W), ("conv", "lru"), init_scale=0.5),
+        "gate_a_w": ParamDef((nh, wh, wh), ("lru_heads", None, None), init_scale=0.5),
+        "gate_a_b": ParamDef((nh, wh), ("lru_heads", None), init="zeros"),
+        "gate_i_w": ParamDef((nh, wh, wh), ("lru_heads", None, None), init_scale=0.5),
+        "gate_i_b": ParamDef((nh, wh), ("lru_heads", None), init="zeros"),
+        "lam": ParamDef((W,), ("lru",), init="custom", init_fn=lam_init),
+        "w_out": ParamDef((W, d), ("lru", "embed")),
+        "ln2": ParamDef((d,), ("embed",), init="ones"),
+        "ffn": ffn_defs(cfg),
+    }
+
+
+def rglru_init_state(cfg: ArchConfig, batch: int) -> dict:
+    W = cfg.rglru.lru_width
+    Kc = cfg.rglru.conv_width
+    return {
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, Kc - 1, W), jnp.float32),
+    }
+
+
+def rglru_state_axes(cfg: ArchConfig) -> dict:
+    return {
+        "h": ("cache_batch", "act_lru"),
+        "conv": ("cache_batch", None, "act_lru"),
+    }
+
+
+def rglru_block(p: dict, x: jax.Array, cfg: ArchConfig,
+                state: Optional[dict] = None) -> tuple[jax.Array, dict]:
+    B, S, d = x.shape
+    spec = cfg.rglru
+    W, nh = spec.lru_width, spec.n_heads
+    wh = W // nh
+    dt = x.dtype
+    st = state or {"h": None, "conv": None}
+
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    y = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", xn, p["w_y"].astype(dt)))
+    xb = jnp.einsum("bsd,dw->bsw", xn, p["w_x"].astype(dt))
+    xb = constrain(xb, "act_batch", "act_seq", "act_lru")
+    conv_state = st["conv"]
+    xc, conv_new = ops.causal_conv1d(xb, p["conv_w"].astype(dt), conv_state)
+
+    xh = xc.reshape(B, S, nh, wh)
+    rg = jax.nn.sigmoid(
+        jnp.einsum("bshw,hwu->bshu", xh, p["gate_a_w"].astype(dt))
+        + p["gate_a_b"].astype(dt))
+    ig = jax.nn.sigmoid(
+        jnp.einsum("bshw,hwu->bshu", xh, p["gate_i_w"].astype(dt))
+        + p["gate_i_b"].astype(dt))
+    sp_lam = jax.nn.softplus(p["lam"].astype(jnp.float32)).reshape(nh, wh)
+    log_a = -8.0 * sp_lam * rg.astype(jnp.float32)  # (B,S,nh,wh)
+    gated = (ig * xh).reshape(B, S, W)
+    h, h_last = ops.rglru(gated, log_a.reshape(B, S, W), st["h"])
+    h = constrain(h, "act_batch", "act_seq", "act_lru")
+
+    out = jnp.einsum("bsw,wd->bsd", (h * y), p["w_out"].astype(dt))
+    x = x + out
+    x = constrain(x, "act_batch", "act_seq", None)
+    x = x + ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    x = constrain(x, "act_batch", "act_seq", None)
+    return x, {"h": h_last, "conv": conv_new.astype(jnp.float32)}

@@ -1,0 +1,168 @@
+"""Sharded AdamW + global-norm clipping + schedules (no optax dependency).
+
+Optimizer state mirrors the parameter pytree, so the same NamedShardings
+apply — m/v are FSDP-sharded exactly like their parameters.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # () int32
+    m: Any  # pytree like params (f32)
+    v: Any  # pytree like params (f32)
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step_f = step.astype(jnp.float32)
+    warm = jnp.minimum(step_f / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step_f - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def apply(cfg: AdamWConfig, params, state: AdamWState, grads):
+    """One AdamW update. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.ones(())
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_n = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v_n = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = m_n / b1c
+        vhat = v_n / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_n = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_n, m_n, v_n
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), metrics
+
+
+# ---------------------------------------------------------------------------
+# 8-bit optimizer state (bitsandbytes-style blockwise quantization).
+#
+# Cuts m/v from 8 bytes/param to ~2.03, shrinking both the HBM-resident
+# optimizer (fewer gradient-accumulation microbatches -> fewer per-micro
+# FSDP gathers) and the checkpoint (lower w_cp -> better ETTR per Fig 10).
+# ---------------------------------------------------------------------------
+QUANT_MIN_SIZE = 4096  # leaves smaller than this stay f32
+
+
+def _opt_block(last_dim: int) -> int:
+    b = 256
+    while last_dim % b:
+        b //= 2
+    return max(b, 1)
+
+
+def _q8(x: jax.Array) -> dict:
+    blk = _opt_block(x.shape[-1])
+    xb = x.reshape(*x.shape[:-1], x.shape[-1] // blk, blk)
+    s = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-12)
+    q = jnp.clip(jnp.round(xb / s[..., None]), -127, 127).astype(jnp.int8)
+    return {"q": q.reshape(x.shape), "s": s}
+
+
+def _dq8(ent: dict) -> jax.Array:
+    q, s = ent["q"], ent["s"]
+    blk = q.shape[-1] // s.shape[-1]
+    qb = q.reshape(*q.shape[:-1], q.shape[-1] // blk, blk)
+    return (qb.astype(jnp.float32) * s[..., None]).reshape(q.shape)
+
+
+def _quantizable(p) -> bool:
+    return p.size >= QUANT_MIN_SIZE and p.ndim >= 1
+
+
+def init_8bit(params) -> AdamWState:
+    def z(p):
+        if not _quantizable(p):
+            return jnp.zeros(p.shape, jnp.float32)
+        return _q8(jnp.zeros(p.shape, jnp.float32))
+
+    zeros = jax.tree_util.tree_map(z, params)
+    zeros2 = jax.tree_util.tree_map(z, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros2)
+
+
+def apply_8bit(cfg: AdamWConfig, params, state: AdamWState, grads):
+    """AdamW with int8-quantized m/v (dequant -> update -> requant)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.ones(())
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m_e, v_e):
+        quant = _quantizable(p)
+        m = _dq8(m_e) if quant else m_e
+        v = _dq8(v_e) if quant else v_e
+        g = g.astype(jnp.float32) * scale
+        m_n = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v_n = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        delta = (m_n / b1c) / (jnp.sqrt(v_n / b2c) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        p_n = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_n, (_q8(m_n) if quant else m_n), (_q8(v_n) if quant else v_n)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

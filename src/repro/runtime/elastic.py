@@ -1,0 +1,67 @@
+"""Elastic re-meshing: continue a run on fewer nodes after failures.
+
+The paper's clusters handle node loss by requeueing onto *healthy* nodes;
+when spare capacity is thin (the common case at >80% utilization), an
+elastic job can instead shrink to the surviving allocation at the next
+restart boundary.  Because checkpoints are topology-agnostic (full logical
+arrays keyed by path) and the data pipeline is a pure function of
+(seed, step), resuming on a different mesh is just: rebuild mesh ->
+re-shard restored arrays -> continue at the same data step.
+
+``plan_shrink`` chooses the largest valid (data, model) sub-mesh for the
+survivors; ``reshard_for`` produces the new shardings.  On CPU tests this
+runs with forced host device counts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.parallel.axes import ShardingRules
+
+
+@dataclass(frozen=True)
+class ShrinkPlan:
+    n_alive: int
+    data: int
+    model: int
+    global_batch: int
+    note: str = ""
+
+
+def plan_shrink(n_alive_devices: int, *, model_parallel: int,
+                old_global_batch: int, old_data: int) -> ShrinkPlan:
+    """Largest usable sub-mesh: keep TP degree (weights shard layout),
+    shrink the data axis; batch shrinks proportionally (constant per-device
+    batch keeps step time and optimizer dynamics stable under linear-scaling
+    LR rules; callers may instead keep global batch and accept slower
+    steps)."""
+    if n_alive_devices < model_parallel:
+        raise ValueError(
+            f"cannot keep TP={model_parallel} with {n_alive_devices} devices")
+    data = n_alive_devices // model_parallel
+    # batch must stay divisible by the new data axis
+    per_replica = max(1, old_global_batch // old_data)
+    new_batch = per_replica * data
+    return ShrinkPlan(n_alive_devices, data, model_parallel, new_batch,
+                      note=f"kept TP={model_parallel}, data {old_data}->{data}")
+
+
+def make_elastic_mesh(plan: ShrinkPlan) -> jax.sharding.Mesh:
+    devs = jax.devices()[: plan.data * plan.model]
+    arr = np.array(devs).reshape(plan.data, plan.model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def reshard_for(tree, mesh: jax.sharding.Mesh, rules: ShardingRules,
+                defs) -> object:
+    """Re-place restored host arrays onto the (new) mesh."""
+    from repro.models.params import shardings as mk_shardings
+
+    sh = mk_shardings(defs, mesh, rules)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), tree, sh)

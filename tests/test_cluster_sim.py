@@ -1,0 +1,131 @@
+"""Cluster simulator invariants + calibration against paper aggregates."""
+import numpy as np
+import pytest
+
+from repro.cluster import analysis
+from repro.cluster.scheduler import PREEMPTION_GUARD_S, ClusterSim
+from repro.cluster.workload import (MIXES, RSC1, RSC2, ClusterSpec,
+                                    WorkloadGenerator)
+from repro.core import mttf_model
+from repro.core.metrics import JobState
+
+
+@pytest.fixture(scope="module")
+def sim_small():
+    spec = ClusterSpec("RSC-2", n_nodes=250, jobs_per_day=1100,
+                       target_utilization=0.85, r_f=6.5e-3,
+                       lemon_fraction=0.016)
+    s = ClusterSim(spec, horizon_days=6.0, seed=1)
+    s.run()
+    return s
+
+
+# -- workload calibration -------------------------------------------------
+def test_job_mix_over_90pct_small():
+    for name, mix in MIXES.items():
+        frac_small = sum(f for s, (f, _) in mix.items() if s <= 8)
+        assert frac_small >= 0.90, name  # Observation 7
+
+
+def test_gpu_time_shares_match_fig6():
+    shares1 = sum(sh for s, (_, sh) in MIXES["RSC-1"].items() if s >= 256)
+    shares2 = sum(sh for s, (_, sh) in MIXES["RSC-2"].items() if s >= 256)
+    assert shares1 == pytest.approx(0.66, abs=0.03)  # RSC-1: 66%
+    assert shares2 == pytest.approx(0.52, abs=0.03)  # RSC-2: 52%
+    f4k, s4k = MIXES["RSC-1"][4096]
+    assert f4k < 0.01 and s4k == pytest.approx(0.12, abs=0.02)
+
+
+def test_workload_generator_rates():
+    gen = WorkloadGenerator(RSC2, seed=0)
+    jobs = gen.generate(2.0)
+    assert len(jobs) == pytest.approx(2 * RSC2.jobs_per_day, rel=0.1)
+    assert max(j.duration_s for j in jobs) <= 7 * 86400
+
+
+# -- simulator invariants ---------------------------------------------------
+def test_every_attempt_has_terminal_state(sim_small):
+    assert len(sim_small.records) > 1000
+    for r in sim_small.records:
+        assert isinstance(r.state, JobState)
+        assert r.end_t >= r.start_t >= 0
+        assert r.start_t >= r.submit_t - 1e-6
+
+
+def test_utilization_under_capacity(sim_small):
+    util = analysis.cluster_utilization(
+        sim_small.records, sim_small.spec.n_gpus, 0.0, sim_small.horizon_s) \
+        if hasattr(analysis, "cluster_utilization") else None
+    from repro.core.metrics import cluster_utilization
+
+    util = cluster_utilization(sim_small.records, sim_small.spec.n_gpus,
+                               0.0, sim_small.horizon_s)
+    assert 0.3 < util <= 1.0
+
+
+def test_preemption_guard_respected(sim_small):
+    for r in sim_small.records:
+        if r.state == JobState.PREEMPTED:
+            assert r.run_time >= PREEMPTION_GUARD_S - 1e-6
+
+
+def test_requeued_runs_share_run_id(sim_small):
+    from collections import Counter
+
+    per_run = Counter(r.run_id for r in sim_small.records)
+    requeued = [run for run, n in per_run.items() if n > 1]
+    assert requeued, "some runs must be interrupted and requeued"
+
+
+def test_status_breakdown_close_to_fig3(sim_small):
+    sb = analysis.status_breakdown(sim_small.records)["jobs"]
+    assert 0.45 <= sb.get("COMPLETED", 0) <= 0.75   # paper: 60%
+    assert 0.10 <= sb.get("FAILED", 0) <= 0.35      # paper: 24%
+    assert sb.get("NODE_FAIL", 0) <= 0.01           # paper: 0.1%
+
+
+def test_hw_impact_observation4(sim_small):
+    imp = analysis.hw_impact(sim_small.records)
+    # <1% of jobs, but an outsized share of GPU runtime (paper: 0.2%/19%)
+    assert imp["hw_job_fraction"] < 0.02
+    assert imp["hw_runtime_fraction"] > 3 * imp["hw_job_fraction"]
+
+
+def test_mttf_matches_theory_at_scale(sim_small):
+    curve = {p.n_gpus: p for p in
+             mttf_model.empirical_mttf_curve(sim_small.records)}
+    # infra-failure rate (NODE_FAIL + hw-attributed FAILED), paper method;
+    # the small fixture has few >128-GPU node-days, so fit on >32 GPUs
+    rf = mttf_model.fit_r_f(sim_small.records, min_gpus=32)
+    if rf == 0:
+        pytest.skip("no infra failures on large jobs in this small sample")
+    assert 0.1 * sim_small.spec.r_f < rf < 8 * sim_small.spec.r_f
+    for size, p in curve.items():
+        if size >= 256 and p.n_failures >= 5:
+            theory = mttf_model.projected_mttf_hours(size, rf)
+            assert 0.25 * theory < p.mttf_hours < 4.0 * theory, size
+
+
+def test_lemon_detection_reduces_large_job_failures():
+    from repro.core.lemon import LemonDetector, LemonThresholds
+
+    spec = ClusterSpec("RSC-2", n_nodes=150, jobs_per_day=700,
+                       target_utilization=0.85, r_f=6.5e-3,
+                       lemon_fraction=0.05, lemon_rate_multiplier=120.0)
+    det = LemonDetector(LemonThresholds(
+        xid_cnt=2, tickets=1, out_count=2, multi_node_node_fails=1,
+        single_node_node_fails=1, min_signals=2))
+    f0s, f1s, removals = [], [], 0
+    for seed in (3, 11, 23):
+        base = ClusterSim(spec, horizon_days=5.0, seed=seed)
+        base.run()
+        mitig = ClusterSim(spec, horizon_days=5.0, seed=seed,
+                           enable_lemon_detection=True,
+                           lemon_scan_period_days=1.0, lemon_detector=det)
+        mitig.run()
+        f0s.append(analysis.large_job_failure_rate(base.records, min_gpus=128))
+        f1s.append(analysis.large_job_failure_rate(mitig.records, min_gpus=128))
+        removals += len(mitig.lemon_removal_log)
+    assert removals >= 3
+    # across seeds, removing lemons must not hurt and should usually help
+    assert np.mean(f1s) <= np.mean(f0s) + 0.01, (f0s, f1s)

@@ -1,0 +1,145 @@
+"""Analytical ETTR / MTTF models vs the paper's own claims + properties."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import mttf_model, stats
+from repro.core.ettr_model import (ETTRParams, daly_young_interval_s,
+                                   ettr_contour, expected_ettr,
+                                   expected_ettr_simple,
+                                   required_w_cp_for_target)
+from repro.core.montecarlo import simulate_run_ettr
+
+
+# ---------------------------------------------------------------------------
+# Paper claims
+# ---------------------------------------------------------------------------
+def test_mttf_projection_16k_gpus():
+    # paper: 16,384-GPU jobs -> MTTF 1.8 h at RSC-1's r_f
+    assert mttf_model.projected_mttf_hours(16384, 6.50e-3) == pytest.approx(
+        1.8, rel=0.05)
+
+
+def test_mttf_projection_131k_gpus():
+    # paper: 131,072-GPU jobs -> MTTF 0.23 h
+    assert mttf_model.projected_mttf_hours(131072, 6.50e-3) == pytest.approx(
+        0.23, rel=0.05)
+
+
+def test_ettr_large_runs_match_observation_10():
+    # paper Obs 10: 2-4k GPU, 2+ day runs average ETTR ~0.90 (0.85-0.9)
+    for gpus in (2048, 4096):
+        p = ETTRParams(n_nodes=gpus // 8, r_f=6.50e-3, w_cp_s=300,
+                       u0_s=300, runtime_s=7 * 86400)
+        assert 0.83 <= expected_ettr(p) <= 0.92, gpus
+
+
+def test_fig10_conclusion_async_checkpoints():
+    # 12k GPUs @ r_f=6.5: 5-min ckpt writes -> poor; O(10 s) -> ~0.9
+    slow = expected_ettr(ETTRParams(n_nodes=1536, w_cp_s=300, u0_s=300))
+    fast = expected_ettr(ETTRParams(n_nodes=1536, w_cp_s=10, u0_s=300))
+    assert slow < 0.80
+    assert fast >= 0.90
+
+
+def test_fig10_conclusion_failure_rate():
+    # ... or r_f must improve from 6.5 to ~1.0 per 1000 node-days
+    better = expected_ettr(ETTRParams(n_nodes=1536, r_f=1.0e-3,
+                                      w_cp_s=300, u0_s=300))
+    assert better >= 0.88
+
+
+def test_required_w_cp_order_10s():
+    w = required_w_cp_for_target(12288, 0.90, 6.50e-3)
+    assert 3.0 <= w <= 60.0  # "on the order of ~10 seconds"
+
+
+def test_monte_carlo_within_5pct():
+    # paper: analytical E[ETTR] within ~5% of Monte Carlo even at 8k GPUs
+    p = ETTRParams(n_nodes=1024, r_f=6.50e-3, w_cp_s=300.0, u0_s=300.0,
+                   runtime_s=7 * 86400)
+    ana = expected_ettr(p)
+    mc = simulate_run_ettr(p, n_runs=300, seed=3)
+    assert abs(ana - mc.ettr_mean) / mc.ettr_mean < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Model properties (hypothesis)
+# ---------------------------------------------------------------------------
+@given(n_nodes=st.integers(1, 4096),
+       r_f=st.floats(1e-4, 5e-2),
+       w_cp=st.floats(1.0, 1800.0),
+       u0=st.floats(1.0, 1800.0))
+def test_ettr_in_unit_interval(n_nodes, r_f, w_cp, u0):
+    p = ETTRParams(n_nodes=n_nodes, r_f=r_f, w_cp_s=w_cp, u0_s=u0)
+    e = expected_ettr(p)
+    assert 0.0 <= e <= 1.0
+
+
+@given(n_nodes=st.integers(8, 2048), w_cp=st.floats(5.0, 600.0))
+def test_ettr_monotone_in_failure_rate(n_nodes, w_cp):
+    es = [expected_ettr(ETTRParams(n_nodes=n_nodes, r_f=r, w_cp_s=w_cp))
+          for r in (1e-3, 3e-3, 6.5e-3, 2e-2)]
+    assert all(a >= b - 1e-12 for a, b in zip(es, es[1:]))
+
+
+@given(n_nodes=st.integers(8, 2048), r_f=st.floats(5e-4, 2e-2))
+def test_daly_young_is_near_optimal(n_nodes, r_f):
+    """E[ETTR] at the Daly-Young interval beats a grid of alternatives."""
+    w_cp = 120.0
+    dt_star = daly_young_interval_s(n_nodes, r_f, w_cp)
+    best = expected_ettr_simple(ETTRParams(
+        n_nodes=n_nodes, r_f=r_f, w_cp_s=w_cp, dt_cp_s=dt_star))
+    for mult in (0.25, 0.5, 2.0, 4.0):
+        alt = expected_ettr_simple(ETTRParams(
+            n_nodes=n_nodes, r_f=r_f, w_cp_s=w_cp, dt_cp_s=dt_star * mult))
+        assert best >= alt - 1e-4
+
+
+@given(st.floats(1e-4, 3e-2), st.floats(1.0, 900.0))
+def test_daly_young_formula(r_f, w_cp):
+    n = 256
+    dt = daly_young_interval_s(n, r_f, w_cp)
+    lam = n * r_f / 86400.0
+    assert dt == pytest.approx(math.sqrt(2 * w_cp / lam), rel=1e-9)
+
+
+def test_contour_grid_shape_and_monotonicity():
+    r_grid, w_grid, E, DT = ettr_contour(
+        n_gpus=12288,
+        r_f_grid=np.array([1e-3, 6.5e-3, 2e-2]),
+        w_cp_grid_s=np.array([10.0, 300.0]))
+    assert E.shape == (2, 3)
+    # worse failure rate or slower checkpoints never increase ETTR
+    assert (np.diff(E, axis=1) <= 1e-12).all()
+    assert (np.diff(E, axis=0) <= 1e-12).all()
+
+
+# ---------------------------------------------------------------------------
+# Gamma-CI machinery
+# ---------------------------------------------------------------------------
+def test_chi2_quantiles_vs_tables():
+    assert stats.chi2_quantile(0.95, 10) == pytest.approx(18.307, abs=1e-2)
+    assert stats.chi2_quantile(0.05, 10) == pytest.approx(3.940, abs=1e-2)
+    assert stats.chi2_quantile(0.975, 2) == pytest.approx(7.378, abs=1e-2)
+
+
+@given(st.floats(0.2, 50.0), st.floats(0.01, 100.0))
+def test_gammainc_monotone_bounded(a, x):
+    p = stats.gammainc_p(a, x)
+    assert 0.0 <= p <= 1.0
+    assert stats.gammainc_p(a, x + 1.0) >= p - 1e-9
+
+
+def test_mttf_ci_contains_point_estimate():
+    lo, hi = stats.mttf_ci(10, 1000.0)
+    assert lo < 100.0 < hi
+
+
+@given(st.integers(1, 200))
+def test_mttf_ci_narrows_with_more_failures(n):
+    lo1, hi1 = stats.mttf_ci(n, n * 10.0)
+    lo2, hi2 = stats.mttf_ci(4 * n, 4 * n * 10.0)
+    assert (hi2 - lo2) < (hi1 - lo1) + 1e-9

@@ -1,0 +1,75 @@
+"""Fabric topology/routing model + Figure 12 conclusions."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.fabric.routing import (adaptive_route, ring_allreduce_bandwidth,
+                                  static_route)
+from repro.fabric.simulate import contention_experiment, link_error_experiment
+from repro.fabric.topology import LINK_BW, Torus2D
+
+
+def _path_valid(t, src, dst, path):
+    if not path:
+        return src == dst
+    assert path[0][0] == src and path[-1][1] == dst
+    for (a, b), (c, d) in zip(path, path[1:]):
+        assert b == c
+    for (a, b) in path:
+        assert b in t.neighbors(a)
+    return True
+
+
+@given(st.integers(0, 63), st.integers(0, 63))
+def test_static_route_valid_and_minimal(src, dst):
+    t = Torus2D(8, 8)
+    p = static_route(t, src, dst)
+    assert _path_valid(t, src, dst, p)
+    assert len(p) <= 8  # torus diameter = nx/2 + ny/2
+
+
+@given(st.integers(0, 63), st.integers(0, 63))
+def test_adaptive_route_valid(src, dst):
+    t = Torus2D(8, 8)
+    p = adaptive_route(t, src, dst)
+    assert _path_valid(t, src, dst, p)
+
+
+def test_adaptive_avoids_down_link():
+    t = Torus2D(4, 4)
+    src, dst = t.nid(0, 0), t.nid(2, 0)
+    sp = static_route(t, src, dst)
+    for (a, b) in sp:
+        t.link(a, b).down = True
+    ap = adaptive_route(t, src, dst)
+    assert all(not t.link(a, b).down for (a, b) in ap)
+
+
+def test_ring_allreduce_full_bw_when_healthy():
+    t = Torus2D(4, 4)
+    ring = [t.nid(x, 0) for x in range(4)]  # neighbouring ring
+    bw, _ = ring_allreduce_bandwidth(t, ring, static_route)
+    assert bw == pytest.approx(LINK_BW * 4 / 6, rel=0.01)  # n/(2(n-1))
+
+
+def test_fig12a_adaptive_routing_wins_under_link_errors():
+    r = link_error_experiment(seed=0).summary()
+    # paper: without resilience >50% of bandwidth lost; AR maintains much more
+    assert r["adaptive_mean"] > 1.5 * r["static_mean"]
+
+
+def test_fig12b_adaptive_reduces_contention_variance():
+    r = contention_experiment(seed=1).summary()
+    assert r["adaptive_mean"] >= 0.95 * r["static_mean"]
+    assert r["adaptive_std"] <= 1.1 * r["static_std"]
+
+
+def test_degrade_and_heal():
+    t = Torus2D(4, 4)
+    rng = np.random.default_rng(0)
+    t.degrade_links(0.2, 0.9, rng)
+    degraded = [l for l in t.links.values() if l.degradation > 0]
+    assert degraded
+    assert degraded[0].effective_capacity == pytest.approx(0.1 * LINK_BW)
+    t.heal()
+    assert all(l.degradation == 0 for l in t.links.values())

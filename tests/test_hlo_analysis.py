@@ -1,0 +1,128 @@
+"""Trip-count-aware HLO cost analyzer vs XLA's own cost_analysis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import ModuleAnalyzer, analyze_module
+
+N, D = 8, 128
+
+
+def _layer(x, w):
+    return jnp.tanh(x @ w)
+
+
+def _scanned(x, w):
+    def body(h, wi):
+        return _layer(h, wi), None
+    h, _ = jax.lax.scan(body, x, w)
+    return h.sum()
+
+
+def _unrolled(x, w):
+    h = x
+    for i in range(N):
+        h = _layer(h, w[i])
+    return h.sum()
+
+
+@pytest.fixture(scope="module")
+def compiled_pair():
+    w = jnp.ones((N, D, D), jnp.float32)
+    x = jnp.ones((32, D), jnp.float32)
+    cs = jax.jit(_scanned).lower(x, w).compile()
+    cu = jax.jit(_unrolled).lower(x, w).compile()
+    return cs, cu
+
+
+def _xla_cost(c):
+    ca = c.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca["flops"]), float(ca["bytes accessed"])
+
+
+def test_matches_xla_on_unrolled(compiled_pair):
+    _, cu = compiled_pair
+    xf, xb = _xla_cost(cu)
+    mine = analyze_module(cu.as_text())
+    assert mine["flops"] == pytest.approx(xf, rel=0.05)
+    assert mine["bytes"] == pytest.approx(xb, rel=0.15)
+
+
+def test_scales_scan_by_trip_count(compiled_pair):
+    cs, cu = compiled_pair
+    ms = analyze_module(cs.as_text())
+    mu = analyze_module(cu.as_text())
+    # scanned == unrolled total work (within loop-overhead slack)
+    assert ms["flops"] == pytest.approx(mu["flops"], rel=0.05)
+    assert ms["bytes"] == pytest.approx(mu["bytes"], rel=0.25)
+    # and XLA's raw count misses the 8x
+    xf, _ = _xla_cost(cs)
+    assert ms["flops"] > 5 * xf
+
+
+def test_nested_scan_multiplies():
+    def inner(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+
+    def outer(x, w):
+        def body(h, _):
+            return inner(h, w), None
+        return jax.lax.scan(body, x, None, length=3)[0].sum()
+
+    w = jnp.ones((4, D, D), jnp.float32)
+    x = jnp.ones((16, D), jnp.float32)
+    c = jax.jit(outer).lower(x, w).compile()
+    mine = analyze_module(c.as_text())
+    expect = 2 * 16 * D * D * 4 * 3  # matmul flops x inner x outer
+    assert mine["flops"] == pytest.approx(expect, rel=0.1)
+
+
+def test_collective_parsing_handcrafted():
+    hlo = """
+ENTRY %main.1 (p0: f32[256,128]) -> f32[256,128] {
+  %p0 = f32[256,128]{1,0} parameter(0)
+  %ar = f32[256,128]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[512,128]{1,0} all-gather(%p0), replica_groups=[2,256]<=[512], dimensions={0}
+  ROOT %cp = f32[256,128]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+    out = analyze_module(hlo, pod_size=256)
+    per = out["collectives"]["per_op"]
+    ar_bytes = 256 * 128 * 4
+    assert per["all-reduce"]["bytes_moved"] == pytest.approx(
+        2 * ar_bytes * 3 / 4)
+    ag_bytes = 512 * 128 * 2
+    assert per["all-gather"]["bytes_moved"] == pytest.approx(
+        ag_bytes * 255 / 256)
+    assert per["collective-permute"]["bytes_moved"] == pytest.approx(ar_bytes)
+    # contiguous 256-wide groups don't cross the pod boundary
+    assert out["collectives"]["cross_pod_bytes"] == 0.0
+
+
+def test_cross_pod_detection():
+    hlo = """
+ENTRY %main.1 (p0: f32[128]) -> f32[128] {
+  %p0 = f32[128]{0} parameter(0)
+  ROOT %ar = f32[128]{0} all-reduce(%p0), replica_groups={{0,256}}, to_apply=%add
+}
+"""
+    out = analyze_module(hlo, pod_size=256)
+    assert out["collectives"]["cross_pod_bytes"] > 0
+    assert out["collectives"]["intra_pod_bytes"] == 0.0
+
+
+def test_dus_charged_at_update_size():
+    def f(buf, upd):
+        return jax.lax.dynamic_update_slice(buf, upd, (0, 0))
+
+    buf = jnp.zeros((4096, 256), jnp.float32)
+    upd = jnp.ones((1, 256), jnp.float32)
+    c = jax.jit(f, donate_argnums=(0,)).lower(buf, upd).compile()
+    mine = analyze_module(c.as_text())
+    # must charge ~the update slice, not the 4 MB buffer
+    assert mine["bytes"] < 64 * 1024

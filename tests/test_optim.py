@@ -1,0 +1,89 @@
+"""Optimizer: AdamW schedules/clipping + 8-bit state equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.optim import adamw
+
+
+def _params(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (64, 256)) * 0.1,
+            "b": jnp.zeros((8,))}
+
+
+def test_schedule_warmup_and_decay():
+    cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    lr5 = float(adamw.schedule(cfg, jnp.asarray(5)))
+    lr10 = float(adamw.schedule(cfg, jnp.asarray(10)))
+    lr100 = float(adamw.schedule(cfg, jnp.asarray(100)))
+    assert lr5 == pytest.approx(0.5e-3, rel=0.01)
+    assert lr10 == pytest.approx(1e-3, rel=0.01)
+    assert lr100 == pytest.approx(0.1e-3, rel=0.05)
+
+
+def test_grad_clipping_bounds_update():
+    cfg = adamw.AdamWConfig(lr=1e-2, grad_clip=1.0, warmup_steps=0)
+    p = _params()
+    huge = jax.tree_util.tree_map(lambda x: jnp.ones_like(x) * 1e6, p)
+    _, _, m = adamw.apply(cfg, p, adamw.init(p), huge)
+    assert float(m["grad_norm"]) > 1e5  # norm reported pre-clip
+
+
+@given(st.integers(0, 3))
+def test_adamw_decreases_quadratic(seed):
+    cfg = adamw.AdamWConfig(lr=5e-2, warmup_steps=0, weight_decay=0.0)
+    p = _params(seed)
+    s = adamw.init(p)
+
+    def loss(p):
+        return sum(jnp.sum(jnp.square(x)) for x in jax.tree_util.tree_leaves(p))
+
+    l0 = float(loss(p))
+    for _ in range(20):
+        g = jax.grad(loss)(p)
+        p, s, _ = adamw.apply(cfg, p, s, g)
+    assert float(loss(p)) < 0.5 * l0
+
+
+def test_8bit_matches_f32_trajectory():
+    cfg = adamw.AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=50)
+    p32 = p8 = _params()
+    s32, s8 = adamw.init(p32), adamw.init_8bit(p8)
+    for i in range(10):
+        g = jax.tree_util.tree_map(
+            lambda p: jnp.cos(p + i * 0.1) * 0.05, p32)
+        p32, s32, _ = adamw.apply(cfg, p32, s32, g)
+        g8 = jax.tree_util.tree_map(
+            lambda p: jnp.cos(p + i * 0.1) * 0.05, p8)
+        p8, s8, _ = adamw.apply_8bit(cfg, p8, s8, g8)
+    drift = float(jnp.max(jnp.abs(p32["w"] - p8["w"])))
+    update = float(jnp.max(jnp.abs(p32["w"] - _params()["w"])))
+    assert drift < 0.25 * update  # quantization noise << signal
+
+
+def test_8bit_state_is_actually_small():
+    p = _params()
+    s8 = adamw.init_8bit(p)
+    m_w = s8.m["w"]
+    assert isinstance(m_w, dict) and m_w["q"].dtype == jnp.int8
+    assert m_w["s"].size == m_w["q"].size // 256
+    # tiny leaves stay f32
+    assert s8.m["b"].dtype == jnp.float32
+
+
+def test_8bit_quant_roundtrip_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 512)) * 0.01
+    ent = adamw._q8(x)
+    back = adamw._dq8(ent)
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(back - x))) <= scale * 0.51 + 1e-9
+
+
+def test_opt_block_divides():
+    for d in (128, 256, 3072, 151936, 24576, 1187):
+        b = adamw._opt_block(d)
+        assert d % b == 0 and b <= 256

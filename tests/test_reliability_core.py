@@ -1,0 +1,168 @@
+"""Taxonomy, health checks, lemon detection, metrics."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.health import (DEFAULT_CHECKS, CheckResult, NodeHealth,
+                               Severity, highest_severity)
+from repro.core.lemon import (LemonDetector, LemonThresholds, NodeHistory,
+                              SIGNALS, detection_quality, LEMON_ROOT_CAUSES)
+from repro.core.metrics import (JobRecord, JobState, goodput_loss,
+                                is_infra_failure, job_run_ettr,
+                                mttf_by_job_size)
+from repro.core.taxonomy import (Domain, HW_SYMPTOMS, TAXONOMY, diagnose,
+                                 most_likely_cause)
+
+
+# -- taxonomy -----------------------------------------------------------
+def test_taxonomy_covers_table1():
+    assert len(TAXONOMY) == 12
+    assert TAXONOMY["oom"].domains == Domain.USER
+    assert TAXONOMY["nccl_timeout"].domains == Domain.ALL
+    assert "pcie_errors" in HW_SYMPTOMS and "oom" not in HW_SYMPTOMS
+
+
+def test_differential_diagnosis_narrows():
+    # NCCL timeout alone: anything; + IB link error: hardware
+    assert diagnose(["nccl_timeout"]) == Domain.ALL
+    assert diagnose(["nccl_timeout", "ib_link_error"]) == Domain.HARDWARE
+    # mount issue: system software
+    assert diagnose(["filesystem_mount"]) == Domain.SYSTEM
+
+
+def test_most_likely_cause_prefers_high_severity_hw():
+    got = most_likely_cause(["system_services", "pcie_errors"])
+    assert got == "pcie_errors"
+
+
+def test_every_symptom_has_tpu_analogue():
+    for s in TAXONOMY.values():
+        assert s.tpu_analogue
+
+
+# -- health checks ------------------------------------------------------
+def test_health_checks_catch_faults():
+    rng = np.random.default_rng(0)
+    node = NodeHealth(0, active_faults={"pcie_errors"})
+    caught = 0
+    for _ in range(50):
+        results = node.run_checks(0.0, rng)
+        if any(c.symptom == "pcie_errors" and r == CheckResult.FAIL
+               for c, r in results):
+            caught += 1
+    assert caught >= 40  # coverage 0.95
+
+
+def test_health_check_false_positive_rate_low():
+    rng = np.random.default_rng(0)
+    node = NodeHealth(0)
+    fails = sum(len(node.run_checks(0.0, rng)) for _ in range(2000))
+    # < 1% of healthy evaluations fire (paper: <1% of good jobs affected)
+    assert fails <= 2000 * len(DEFAULT_CHECKS) * 0.01
+
+
+def test_severity_tiering():
+    rng = np.random.default_rng(0)
+    node = NodeHealth(0, active_faults={"gpu_memory_errors"})
+    res = node.run_checks(0.0, rng)
+    assert highest_severity(res) == Severity.HIGH
+    node2 = NodeHealth(1, active_faults={"ethlink_errors"})
+    res2 = node2.run_checks(0.0, rng)
+    assert highest_severity(res2) in (Severity.LOW, None)
+
+
+# -- lemon detection ----------------------------------------------------
+def _mk_history(node_id, lemon, rng):
+    h = NodeHistory(node_id)
+    if lemon:
+        h.xid_cnt = int(rng.poisson(6))
+        h.tickets = int(rng.poisson(3))
+        h.out_count = int(rng.poisson(5))
+        h.multi_node_node_fails = int(rng.poisson(5))
+        h.single_node_node_fails = int(rng.poisson(3))
+        h.single_node_jobs = max(1, int(rng.poisson(4)))
+        h.excl_jobid_count = int(rng.poisson(10))
+    else:
+        h.xid_cnt = int(rng.random() < 0.05)
+        h.out_count = int(rng.random() < 0.1)
+        h.excl_jobid_count = int(rng.poisson(0.5))
+        h.single_node_jobs = int(rng.poisson(30))
+        h.single_node_node_fails = int(rng.random() < 0.02)
+    return h
+
+
+def test_lemon_detector_precision_over_85pct():
+    rng = np.random.default_rng(0)
+    lemons = set(range(24))  # 1.2% of a 2000-node fleet
+    hists = [_mk_history(i, i in lemons, rng) for i in range(2000)]
+    q = detection_quality(LemonDetector().scan(hists), lemons)
+    assert q["precision"] >= 0.85  # paper: >85% accuracy
+    assert q["recall"] >= 0.6
+
+
+def test_excl_jobid_alone_insufficient():
+    h = NodeHistory(0)
+    h.excl_jobid_count = 50  # users over-exclude (paper Fig 11)
+    assert not LemonDetector().evaluate(h).is_lemon
+
+
+def test_root_cause_table_sums_to_one():
+    assert sum(LEMON_ROOT_CAUSES.values()) == pytest.approx(1.0, abs=0.02)
+
+
+# -- metrics ------------------------------------------------------------
+def _job(run_id=0, n_gpus=256, submit=0.0, start=0.0, end=3600.0,
+         state=JobState.COMPLETED, hw=False, pre=None):
+    return JobRecord(job_id=run_id, run_id=run_id, n_gpus=n_gpus,
+                     submit_t=submit, start_t=start, end_t=end, state=state,
+                     hw_attributed=hw, preempted_by=pre)
+
+
+def test_ettr_perfect_run():
+    jobs = [_job(end=100 * 3600.0)]
+    r = job_run_ettr(jobs, w_cp=0.0, u0=0.0)
+    assert r.ettr == pytest.approx(1.0, abs=1e-6)
+
+
+def test_ettr_decreases_with_interruptions():
+    smooth = [_job(end=100 * 3600.0)]
+    bumpy = [
+        _job(run_id=1, end=50 * 3600.0, state=JobState.NODE_FAIL),
+        JobRecord(2, 1, 256, 50 * 3600.0, 51 * 3600.0, 101 * 3600.0,
+                  JobState.COMPLETED),
+    ]
+    assert job_run_ettr(bumpy).ettr < job_run_ettr(smooth).ettr
+
+
+@given(st.floats(60.0, 600.0), st.floats(60.0, 600.0))
+def test_ettr_bounded(w_cp, u0):
+    jobs = [_job(end=48 * 3600.0)]
+    r = job_run_ettr(jobs, w_cp=w_cp, u0=u0)
+    assert 0.0 <= r.ettr <= 1.0
+
+
+def test_is_infra_failure():
+    assert is_infra_failure(_job(state=JobState.NODE_FAIL))
+    assert is_infra_failure(_job(state=JobState.FAILED, hw=True))
+    assert not is_infra_failure(_job(state=JobState.FAILED, hw=False))
+
+
+def test_mttf_by_size_buckets():
+    jobs = [_job(n_gpus=7, state=JobState.NODE_FAIL),
+            _job(n_gpus=8), _job(n_gpus=1024)]
+    out = mttf_by_job_size(jobs)
+    assert set(out) == {8, 1024}
+    assert out[8][1] == 1 and out[1024][1] == 0
+
+
+def test_goodput_loss_accounting():
+    jobs = [
+        _job(run_id=1, n_gpus=2048, end=7200.0, state=JobState.NODE_FAIL),
+        _job(run_id=2, n_gpus=64, end=7200.0, state=JobState.PREEMPTED,
+             pre=1),
+        _job(run_id=3, n_gpus=64, end=7200.0, state=JobState.PREEMPTED),
+    ]
+    loss = goodput_loss(jobs)
+    assert loss.failure_loss_gpu_s == pytest.approx(1800.0 * 2048)
+    # only the instigated preemption counts as second-order
+    assert loss.preemption_loss_gpu_s == pytest.approx(1800.0 * 64)
