@@ -36,6 +36,11 @@ class Report:
 
 _REGISTRY: dict[str, callable] = {}
 
+# set by `benchmarks.run --quick`: benchmarks that support it drop to
+# small-scale defaults (used by CI/tier-1 tests to catch API/perf-path
+# regressions without paying full-scale wall time)
+QUICK = False
+
 
 def benchmark(name: str):
     def deco(fn):

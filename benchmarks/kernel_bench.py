@@ -10,8 +10,9 @@ from repro.kernels import ops, ref
 
 
 def _time(fn, *args, iters=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    # single warmup call (compile + dispatch once)
+    out = fn(*args)
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
     t0 = time.time()
     for _ in range(iters):
         out = fn(*args)

@@ -15,7 +15,8 @@ from benchmarks import (fig3_job_status, fig4_attribution, fig5_timeline,  # noq
                         fig6_job_mix, fig7_mttf, fig8_goodput_loss,
                         fig9_ettr, fig10_contours, fig12_adaptive_routing,
                         kernel_bench, roofline_table, runtime_ettr,
-                        table2_lemon)
+                        sim_bench, table2_lemon)
+from benchmarks import common
 from benchmarks.common import all_benchmarks
 
 
@@ -23,7 +24,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="small-scale defaults (CI smoke mode)")
     args = ap.parse_args()
+    common.QUICK = args.quick
 
     t0 = time.time()
     results = {}

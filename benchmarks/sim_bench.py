@@ -1,0 +1,73 @@
+"""Simulation-engine throughput benchmark (jobs simulated / second).
+
+Tracks the event-driven scheduler core's perf trajectory: the paper's
+headline analyses cover 11 months x {2000, 1000} nodes x ~4M jobs, so the
+full-trace replays the figure benchmarks depend on must stay minutes-fast
+on one CPU.  Reports wall-time and jobs/sec at 500- and 2000-node scales,
+plus a full RSC-1 11-month replay, and checks the >=10x speedup over the
+pre-rewrite (eager-tick, set-scan) scheduler baseline.
+
+Quick mode (`benchmarks.run --quick`) runs a 100-node/2-day smoke scale
+only — used by the tier-1 test to catch perf-path API regressions.
+"""
+import time
+
+from benchmarks import common
+from benchmarks.common import benchmark
+
+# measured on the seed implementation (eager 30 s ticks, full_free set
+# scans, per-job Python-loop workload gen) at 500 nodes / 5 days / 10980
+# job attempts on this repo's reference CPU — the >=10x target baseline
+SEED_JOBS_PER_SEC_500N_5D = 1766.0
+
+
+def _run_scale(rep, label, spec, days, seed=0):
+    from repro.cluster.scheduler import ClusterSim
+
+    t0 = time.time()
+    sim = ClusterSim(spec, horizon_days=days, seed=seed)
+    sim.run()
+    wall = time.time() - t0
+    jobs = len(sim.records)
+    jps = jobs / max(wall, 1e-9)
+    rep.add(f"{label}.wall_s", round(wall, 2))
+    rep.add(f"{label}.job_attempts", jobs)
+    rep.add(f"{label}.jobs_per_sec", round(jps))
+    return wall, jps
+
+
+@benchmark("sim_bench")
+def run(rep):
+    from repro.cluster.workload import RSC1, RSC2, ClusterSpec
+
+    if common.QUICK:
+        spec = ClusterSpec("RSC-1", n_nodes=100, jobs_per_day=400.0,
+                           target_utilization=0.83, r_f=6.5e-3)
+        wall, jps = _run_scale(rep, "quick_100n_2d", spec, 2.0)
+        rep.check("quick smoke scale completes fast", wall < 30.0,
+                  f"{wall:.2f}s")
+        return
+
+    spec500 = ClusterSpec("RSC-1", n_nodes=500, jobs_per_day=2000.0,
+                          target_utilization=0.83, r_f=6.5e-3)
+    _, jps500 = _run_scale(rep, "500n_5d", spec500, 5.0)
+    rep.add("500n_5d.speedup_vs_seed",
+            round(jps500 / SEED_JOBS_PER_SEC_500N_5D, 1),
+            f"seed engine: {SEED_JOBS_PER_SEC_500N_5D:.0f} jobs/s")
+    rep.check("500n/5d >=10x jobs/sec over seed scheduler",
+              jps500 >= 10.0 * SEED_JOBS_PER_SEC_500N_5D,
+              f"{jps500:.0f} vs {SEED_JOBS_PER_SEC_500N_5D:.0f} jobs/s")
+
+    # paper-scale cluster, short horizon: stresses per-event constants at
+    # 2000 nodes / 7.2k jobs/day
+    _run_scale(rep, "2000n_5d", RSC1, 5.0)
+
+    # the headline scale: full 11-month RSC-1 replay (~2.4M job attempts)
+    wall1, jps1 = _run_scale(rep, "rsc1_330d_full", RSC1, 330.0)
+    rep.check("full RSC-1 11-month replay under 5 min",
+              wall1 < 300.0, f"{wall1:.1f}s")
+
+    # RSC-2 companion replay (1000 nodes, 4.4k jobs/day)
+    wall2, _ = _run_scale(rep, "rsc2_330d_full", RSC2, 330.0)
+    rep.check("full RSC-2 11-month replay under 5 min",
+              wall2 < 300.0, f"{wall2:.1f}s")

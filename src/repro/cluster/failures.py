@@ -97,6 +97,18 @@ class FaultProcess:
         self._symptoms = list(SYMPTOM_MIX)
         self._weights = np.array([SYMPTOM_MIX[s] for s in self._symptoms])
         self._weights = self._weights / self._weights.sum()
+        # per-day cache of episode-modulated cumulative symptom weights —
+        # valid only when every episode window lies on whole-day boundaries
+        # (then the modulated mix is piecewise-constant per day); episodes
+        # with fractional start/end days fall back to exact evaluation
+        self._day_weights: dict[int, np.ndarray] = {}
+        self._day_cacheable = all(
+            float(e.start_day).is_integer() and float(e.end_day).is_integer()
+            for e in episodes)
+        # shared standard-exponential stream, refilled in blocks: one bulk
+        # RNG call amortizes over thousands of per-node inter-fault draws
+        self._exp_buf = np.empty(0)
+        self._exp_ptr = 0
 
     def node_rate(self, node_id: int, t_day: float) -> float:
         base = self.r_f
@@ -111,11 +123,32 @@ class FaultProcess:
                 m *= e.multiplier
         return m
 
+    def _std_exponential(self) -> float:
+        if self._exp_ptr >= len(self._exp_buf):
+            self._exp_buf = self.rng.exponential(size=2048)
+            self._exp_ptr = 0
+        v = self._exp_buf[self._exp_ptr]
+        self._exp_ptr += 1
+        return float(v)
+
+    def _day_cum_weights(self, day: int) -> np.ndarray:
+        cw = self._day_weights.get(day)
+        if cw is None:
+            w = self._weights * np.array(
+                [self._episode_multiplier(s, float(day)) for s in self._symptoms])
+            cw = np.cumsum(w / w.sum())
+            self._day_weights[day] = cw
+        return cw
+
     def sample_symptom(self, t_day: float) -> str:
-        w = self._weights * np.array(
-            [self._episode_multiplier(s, t_day) for s in self._symptoms])
-        w = w / w.sum()
-        return str(self.rng.choice(self._symptoms, p=w))
+        if self._day_cacheable:
+            cw = self._day_cum_weights(int(t_day))
+        else:  # fractional episode boundaries: evaluate at the exact time
+            w = self._weights * np.array(
+                [self._episode_multiplier(s, t_day) for s in self._symptoms])
+            cw = np.cumsum(w / w.sum())
+        i = int(np.searchsorted(cw, self.rng.random(), side="right"))
+        return self._symptoms[min(i, len(self._symptoms) - 1)]
 
     def sample_fault(self, node_id: int, t: float) -> Fault:
         t_day = t / 86400.0
@@ -138,4 +171,4 @@ class FaultProcess:
         sampled with the current rate — episodes modulate the symptom mix
         more than the aggregate)."""
         rate_per_s = self.node_rate(node_id, t / 86400.0) / 86400.0
-        return t + self.rng.exponential(1.0 / max(rate_per_s, 1e-12))
+        return t + self._std_exponential() / max(rate_per_s, 1e-12)

@@ -8,15 +8,33 @@ Faithful to the paper's §II semantics:
     runtime; 7-day max job lifetime;
   * severity-tiered health checks: HIGH drains the node immediately
     (rescheduling its jobs), LOW drains after the running job finishes;
-  * scheduling passes run on a 30 s tick (Slurm-style), so queue waits have
+  * scheduling passes land on a 30 s tick (Slurm-style), so queue waits have
     tick granularity;
   * per-node history accumulates the lemon-detection signals of §IV-A.
+
+Engine design (paper-scale replays — 2000 nodes x 11 months x millions of
+jobs — in minutes on one CPU):
+  * **lazy ticks**: scheduling passes are not pre-pushed every 30 s for the
+    whole horizon; a pass is *armed* at the next tick boundary only when the
+    queue or the capacity can have changed (arrival, release, repair, or a
+    preemption-guard expiry).  Armed times are always tick-aligned, so the
+    queue-wait granularity of the eager-tick implementation is preserved.
+  * **free-GPU bucket index**: nodes are bucketed by free-GPU count
+    (`_buckets[f]` = schedulable nodes with exactly ``f`` free GPUs), making
+    whole-node allocation and tightest-fit placement O(1) per job instead of
+    an O(n_nodes) set scan + ``np.nonzero`` per allocation attempt.
+  * **priority-indexed preemption**: whole-node running jobs are indexed by
+    priority (plus a guard-expiry heap), so victim selection walks only the
+    lower-priority candidates instead of sorting every running job.
+  * arrivals are generated as vectorized column arrays and merge-iterated
+    with the event heap, never materialized as heap events.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
+import math
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
@@ -33,8 +51,10 @@ SCHED_TICK_S = 30.0
 CHECK_PERIOD_S = 300.0
 MAX_REQUEUES = 50
 
+_INF = float("inf")
 
-@dataclass
+
+@dataclass(slots=True)
 class RunState:
     request: JobRequest
     remaining_s: float
@@ -42,7 +62,7 @@ class RunState:
     productive_s: float = 0.0
 
 
-@dataclass
+@dataclass(slots=True)
 class Running:
     run: RunState
     job_id: int
@@ -73,14 +93,26 @@ class ClusterSim:
 
         n = spec.n_nodes
         g = spec.gpus_per_node
-        self.free = np.full(n, g, dtype=np.int32)
-        self.node_ok = np.ones(n, dtype=bool)       # schedulable
-        self.node_draining = np.zeros(n, dtype=bool)
+        self.free = [g] * n
+        self.node_ok = [True] * n                  # schedulable
+        self.node_draining = [False] * n
         self.node_jobs: list[set] = [set() for _ in range(n)]
-        self.full_free: set[int] = set(range(n))    # nodes with all GPUs free
+        # free-GPU bucket index: _buckets[f] holds schedulable nodes with
+        # exactly f free GPUs (f >= 1); _bucket_of[i] = -1 means unindexed
+        # (node down, draining, or fully allocated)
+        self._buckets: list[set] = [set() for _ in range(g + 1)]
+        self._buckets[g] = set(range(n))
+        self._bucket_of = [g] * n
+        self.full_free = self._buckets[g]          # alias for introspection
 
         self.queue: list[tuple] = []   # (-priority, submit_t, seq, RunState)
         self.running: dict[int, Running] = {}
+        # whole-node running jobs by priority (preemption victim index);
+        # inner dict used as an ordered set so equal-priority victims are
+        # preempted in start order, matching the seed's stable sort
+        self._running_by_prio: dict[int, dict[int, None]] = {}
+        # (start_t + guard, job_id) for whole-node jobs: next guard expiry
+        self._guard_heap: list[tuple] = []
         self.events: list[tuple] = []  # (t, seq, kind, payload)
         self._seq = itertools.count()
         self.records: list[JobRecord] = []
@@ -89,8 +121,10 @@ class ClusterSim:
         self.histories = [NodeHistory(i) for i in range(n)]
         self.removed_lemons: set[int] = set()
         self.lemon_removal_log: list[tuple] = []
-        self._cancelled_finishes: set[int] = set()
         self._job_ids = itertools.count(1)
+        self._now = 0.0
+        self._armed: list[float] = []   # outstanding sched-pass ticks (heap)
+        self._pass_t = -1.0             # tick of the pass currently running
 
     # ------------------------------------------------------------------
     def _push(self, t: float, kind: str, payload) -> int:
@@ -98,51 +132,78 @@ class ClusterSim:
         heapq.heappush(self.events, (t, seq, kind, payload))
         return seq
 
+    def _arm_sched(self, t: float) -> None:
+        """Arm a scheduling pass at the next 30 s tick boundary (lazy-tick
+        invariant: passes only ever run at k*SCHED_TICK_S).
+
+        Dedupe: if a pass is already armed at or before the requested tick,
+        skip — that pass re-arms per its outcome (progress -> next tick,
+        guard-blocked -> earliest expiry), so coverage is preserved
+        inductively without ever stacking duplicate events on one tick."""
+        if not self.queue:
+            return
+        tick = SCHED_TICK_S * math.ceil(t / SCHED_TICK_S)
+        if tick <= self._pass_t:   # same-tick re-arm from inside the pass
+            return
+        armed = self._armed
+        if armed and armed[0] <= tick:
+            return
+        heapq.heappush(armed, tick)
+        self._push(tick, "sched", None)
+
     # -- node capacity management --------------------------------------
+    def _reindex(self, i: int) -> None:
+        f = self.free[i]
+        b = f if (f > 0 and self.node_ok[i]
+                  and not self.node_draining[i]) else -1
+        old = self._bucket_of[i]
+        if b != old:
+            if old >= 0:
+                self._buckets[old].discard(i)
+            if b >= 0:
+                self._buckets[b].add(i)
+            self._bucket_of[i] = b
+
+    def _take(self, i: int, gpus: int) -> None:
+        self.free[i] -= gpus
+        self._reindex(i)
+
     def _alloc_nodes(self, req_gpus: int) -> Optional[dict]:
         g = self.spec.gpus_per_node
+        full = self._buckets[g]
         if req_gpus >= g:
             n_nodes = -(-req_gpus // g)
-            avail = [i for i in self.full_free
-                     if self.node_ok[i] and not self.node_draining[i]]
-            if len(avail) < n_nodes:
+            if len(full) < n_nodes:
                 return None
-            chosen = avail[:n_nodes]
             out = {}
-            for i in chosen:
+            for _ in range(n_nodes):
+                i = full.pop()
                 self.free[i] = 0
-                self.full_free.discard(i)
+                self._bucket_of[i] = -1
                 out[i] = g
             return out
-        # small job: first node with enough free GPUs (prefer tightest fit)
-        best = -1
-        best_free = g + 1
-        # scan a bounded sample of candidate nodes for speed
-        for i in self.full_free:
-            if self.node_ok[i] and not self.node_draining[i]:
-                best = i
-                best_free = g
-                break
-        for i in np.nonzero((self.free > 0) & (self.free < g)
-                            & self.node_ok & ~self.node_draining)[0][:64]:
-            if req_gpus <= self.free[i] < best_free:
-                best, best_free = int(i), int(self.free[i])
-        if best < 0:
-            return None
-        self.free[best] -= req_gpus
-        if self.free[best] == 0:
-            self.full_free.discard(best)
-        return {best: req_gpus}
+        # small job: tightest fit — smallest free-GPU bucket that fits,
+        # falling back to a fully-free node
+        for f in range(req_gpus, g):
+            b = self._buckets[f]
+            if b:
+                i = next(iter(b))
+                self._take(i, req_gpus)
+                return {i: req_gpus}
+        if full:
+            i = next(iter(full))
+            self._take(i, req_gpus)
+            return {i: req_gpus}
+        return None
 
     def _release(self, nodes: dict) -> None:
         for i, g_used in nodes.items():
             self.free[i] += g_used
-            if self.free[i] == self.spec.gpus_per_node and self.node_ok[i] \
-                    and not self.node_draining[i]:
-                self.full_free.add(i)
+            self._reindex(i)
             if self.node_draining[i] and not self.node_jobs[i]:
                 self._drain_now(i, None, reason="low_sev_after_job",
-                                now=None)
+                                now=self._now)
+        self._arm_sched(self._now)
 
     # -- job lifecycle ---------------------------------------------------
     def _start_job(self, t: float, run: RunState, nodes: dict,
@@ -152,9 +213,15 @@ class ClusterSim:
         seq = self._push(t + dur, "finish", job_id)
         r = Running(run, job_id, t, submit_t, nodes, seq)
         self.running[job_id] = r
+        req = run.request
+        if req.n_gpus >= self.spec.gpus_per_node:
+            self._running_by_prio.setdefault(req.priority, {})[job_id] = None
+            heapq.heappush(self._guard_heap,
+                           (t + PREEMPTION_GUARD_S, job_id))
+        single = req.n_nodes == 1 and req.n_gpus <= 8
         for i in nodes:
             self.node_jobs[i].add(job_id)
-            if run.request.n_nodes == 1 and run.request.n_gpus <= 8:
+            if single:
                 self.histories[i].single_node_jobs += 1
 
     def _record(self, r: Running, t: float, state: JobState,
@@ -168,7 +235,13 @@ class ClusterSim:
 
     def _end_job(self, r: Running, t: float) -> None:
         del self.running[r.job_id]
-        self._cancelled_finishes.add(r.finish_seq)
+        req = r.run.request
+        if req.n_gpus >= self.spec.gpus_per_node:
+            s = self._running_by_prio.get(req.priority)
+            if s is not None:
+                s.pop(r.job_id, None)
+                if not s:
+                    del self._running_by_prio[req.priority]
         for i in r.nodes:
             self.node_jobs[i].discard(r.job_id)
         self._release(r.nodes)
@@ -182,10 +255,11 @@ class ClusterSim:
         self._record(r, t, state, hw, symptoms, preempted_by)
         self._end_job(r, t)
         # lemon signals
-        for i in r.nodes:
-            h = self.histories[i]
-            if state == JobState.NODE_FAIL:
-                if r.run.request.n_nodes > 1:
+        if state == JobState.NODE_FAIL:
+            multi = r.run.request.n_nodes > 1
+            for i in r.nodes:
+                h = self.histories[i]
+                if multi:
                     h.multi_node_node_fails += 1
                 else:
                     h.single_node_node_fails += 1
@@ -198,6 +272,7 @@ class ClusterSim:
     def _enqueue(self, t: float, run: RunState) -> None:
         heapq.heappush(self.queue,
                        (-run.request.priority, t, next(self._seq), run))
+        self._arm_sched(t)
 
     # -- node fault handling ----------------------------------------------
     def _drain_now(self, node_id: int, fault: Optional[Fault],
@@ -206,7 +281,7 @@ class ClusterSim:
             return
         self.node_ok[node_id] = False
         self.node_draining[node_id] = False
-        self.full_free.discard(node_id)
+        self._reindex(node_id)
         self.histories[node_id].out_count += 1
         repair = fault.repair_s if fault else 3600.0
         t0 = fault.t if fault else (now if now is not None else self._now)
@@ -241,7 +316,7 @@ class ClusterSim:
             # low severity: drain after running jobs complete
             if has_victims:
                 self.node_draining[node_id] = True
-                self.full_free.discard(node_id)
+                self._reindex(node_id)
             else:
                 self._drain_now(node_id, fault, reason=f"check:{fault.symptom}")
         else:
@@ -270,21 +345,26 @@ class ClusterSim:
         self._drain_now(node_id, fault2, reason=payload["reason"])
 
     # -- scheduling pass ---------------------------------------------------
-    def _try_preempt(self, t: float, run: RunState) -> bool:
-        """Free whole nodes for a high-priority multi-node job."""
+    def _try_preempt(self, t: float, run: RunState) -> tuple[bool, int]:
+        """Free whole nodes for a high-priority multi-node job.  Returns
+        (enough victims freed, #victims interrupted)."""
         need = run.request.n_nodes
-        have = sum(1 for i in self.full_free
-                   if self.node_ok[i] and not self.node_draining[i])
+        have = len(self._buckets[self.spec.gpus_per_node])
         deficit = need - have
         if deficit <= 0:
-            return True
-        victims = sorted(
-            (r for r in self.running.values()
-             if r.run.request.priority < run.request.priority
-             and t - r.start_t >= PREEMPTION_GUARD_S
-             and r.run.request.n_gpus >= self.spec.gpus_per_node),
-            key=lambda r: r.run.request.priority)
+            return True, 0
+        p = run.request.priority
+        # victims in ascending-priority order from the whole-node index;
+        # within a priority, insertion (= start) order
+        guard_cutoff = t - PREEMPTION_GUARD_S
+        victims = []
+        for prio in sorted(k for k in self._running_by_prio if k < p):
+            for jid in self._running_by_prio[prio]:
+                r = self.running[jid]
+                if r.start_t <= guard_cutoff:
+                    victims.append(r)
         freed = 0
+        n_victims = 0
         # paper Fig. 8 accounting: a preemption is "second order" only when
         # the instigator is a requeued job recovering from a failure
         instigator = run.request.run_id if run.attempts > 0 else None
@@ -292,22 +372,55 @@ class ClusterSim:
             if freed >= deficit:
                 break
             freed += len(v.nodes)
+            n_victims += 1
             self._interrupt(v, t, JobState.PREEMPTED, hw=False,
                             preempted_by=instigator)
-        return freed >= deficit
+        return freed >= deficit, n_victims
 
-    def _schedule_pass(self, t: float) -> None:
+    def _next_guard_expiry(self, t: float) -> float:
+        """Earliest future preemption-guard expiry among running whole-node
+        jobs (inf if none); stale/past entries are discarded lazily."""
+        heap = self._guard_heap
+        while heap:
+            expiry, jid = heap[0]
+            r = self.running.get(jid)
+            if r is None or expiry <= t:
+                heapq.heappop(heap)
+                continue
+            return expiry
+        return _INF
+
+    def _schedule_pass(self, t: float) -> tuple[bool, bool]:
+        """One tick-aligned scheduling pass.  Returns (changed, blocked):
+        ``changed`` — at least one job was placed or preempted (so a retry
+        at the next tick can make further progress); ``blocked`` — a
+        preemption-eligible job is waiting only on the 2 h victim guard."""
         deferred = []
-        placed = 0
         scanned = 0
+        changed = False
+        blocked_preemptor = False
+        # once a preemption attempt at priority p fails, every eligible
+        # victim below p has already been interrupted — later attempts at
+        # priority <= p this pass can be skipped outright
+        exhausted_below = -1
+        g = self.spec.gpus_per_node
         while self.queue and scanned < 200:
             negp, sub_t, seq, run = heapq.heappop(self.queue)
             scanned += 1
-            nodes = self._alloc_nodes(run.request.n_gpus)
-            if nodes is None and run.request.priority >= 7 \
-                    and run.request.n_nodes > 1:
-                if self._try_preempt(t, run):
-                    nodes = self._alloc_nodes(run.request.n_gpus)
+            req = run.request
+            nodes = self._alloc_nodes(req.n_gpus)
+            if nodes is None and req.priority >= 7 and req.n_gpus > g:
+                if req.priority <= exhausted_below:
+                    blocked_preemptor = True
+                else:
+                    ok, n_victims = self._try_preempt(t, run)
+                    if n_victims:
+                        changed = True
+                    if ok:
+                        nodes = self._alloc_nodes(req.n_gpus)
+                    else:
+                        blocked_preemptor = True
+                        exhausted_below = max(exhausted_below, req.priority)
             if nodes is None:
                 deferred.append((negp, sub_t, seq, run))
                 # gang scheduling: don't let smaller lower-priority jobs jump
@@ -316,15 +429,16 @@ class ClusterSim:
                     break
                 continue
             self._start_job(t, run, nodes, submit_t=sub_t)
-            placed += 1
+            changed = True
         for item in deferred:
             heapq.heappush(self.queue, item)
+        return changed, blocked_preemptor
 
     # -- lemon scan ---------------------------------------------------------
     def _lemon_scan(self, t: float) -> None:
-        verdicts = self.detector.scan(
-            h for i, h in enumerate(self.histories)
-            if self.node_ok[i] or True)
+        # scan every node's history, including nodes currently out for
+        # repair — lemon signals persist across drains
+        verdicts = self.detector.scan(self.histories)
         for v in verdicts:
             if v.is_lemon and v.node_id not in self.removed_lemons:
                 self.lemon_removal_log.append((t, v.node_id, v.tripped))
@@ -335,22 +449,26 @@ class ClusterSim:
                     if self.node_jobs[v.node_id]:
                         # proactive removal: drain after running jobs finish
                         self.node_draining[v.node_id] = True
-                        self.full_free.discard(v.node_id)
+                        self._reindex(v.node_id)
                     else:
                         self.node_ok[v.node_id] = False
-                        self.full_free.discard(v.node_id)
+                        self._reindex(v.node_id)
                         self._push(t + 4 * 3600.0, "repair", v.node_id)
 
     # -- main loop -----------------------------------------------------------
     def run(self) -> None:
-        for req in self.gen.generate(self.horizon_s / 86400.0):
-            self._push(req.submit_t, "arrive", req)
+        arrivals = self.gen.generate_arrays(self.horizon_s / 86400.0)
+        # column arrays -> plain lists: fast scalar access in the loop
+        arr_t = arrivals.submit_t.tolist()
+        arr_gpus = arrivals.n_gpus.tolist()
+        arr_dur = arrivals.duration_s.tolist()
+        arr_prio = arrivals.priority.tolist()
+        arr_out = arrivals.outcome.tolist()
+        n_arr = len(arr_t)
+        ai = 0
+
         for i in range(self.spec.n_nodes):
             self._push(self.faults.next_fault_time(i, 0.0), "fault_node", i)
-        t = 0.0
-        while t < self.horizon_s:
-            self._push(t, "sched", None)
-            t += SCHED_TICK_S
         if self.enable_lemon:
             t = self.lemon_scan_period_s
             while t < self.horizon_s:
@@ -358,20 +476,32 @@ class ClusterSim:
                 t += self.lemon_scan_period_s
 
         self._now = 0.0
-        while self.events:
-            t, seq, kind, payload = heapq.heappop(self.events)
-            self._now = t
-            if t > self.horizon_s:
-                break
-            if kind == "arrive":
-                req: JobRequest = payload
+        events = self.events
+        horizon = self.horizon_s
+        running = self.running
+        while events or ai < n_arr:
+            t_ev = events[0][0] if events else _INF
+            # merge-iterate arrivals with the event heap: arrivals are
+            # already time-sorted, so they never touch the heap
+            if ai < n_arr and arr_t[ai] <= t_ev:
+                t = arr_t[ai]
+                self._now = t
+                jid = arrivals.start_job_id + ai
+                req = JobRequest(
+                    job_id=jid, run_id=jid, submit_t=t, n_gpus=arr_gpus[ai],
+                    duration_s=arr_dur[ai], priority=arr_prio[ai],
+                    outcome=arr_out[ai])
+                ai += 1
                 self._enqueue(t, RunState(req, req.duration_s))
-            elif kind == "finish":
-                if seq in self._cancelled_finishes:
-                    continue
-                r = self.running.get(payload)
+                continue
+            t, seq, kind, payload = heapq.heappop(events)
+            self._now = t
+            if t > horizon:
+                break
+            if kind == "finish":
+                r = running.get(payload)
                 if r is None or r.finish_seq != seq:
-                    continue
+                    continue   # cancelled/stale finish
                 ran = t - r.start_t
                 r.run.productive_s += ran
                 r.run.remaining_s = max(r.run.remaining_s - ran, 0.0)
@@ -379,6 +509,26 @@ class ClusterSim:
                     if r.run.remaining_s <= 1.0 else JobState.TIMEOUT
                 self._record(r, t, state)
                 self._end_job(r, t)
+            elif kind == "sched":
+                if self._armed and self._armed[0] <= t:
+                    heapq.heappop(self._armed)
+                # _pass_t absorbs same-tick re-arms from in-pass preemption
+                # releases: the changed/blocked retry logic below covers them
+                self._pass_t = t
+                changed, blocked = self._schedule_pass(t)
+                self._pass_t = -1.0
+                if self.queue:
+                    if changed:
+                        # progress was made but jobs remain: continue at the
+                        # next tick (backfill depth / capacity may now allow
+                        # more placements)
+                        self._arm_sched(t + SCHED_TICK_S)
+                    elif blocked:
+                        # blocked purely on the 2 h preemption guard: retry
+                        # when the earliest victim becomes eligible
+                        expiry = self._next_guard_expiry(t)
+                        if expiry < _INF:
+                            self._arm_sched(expiry)
             elif kind == "fault_node":
                 if not self.node_ok[payload] and payload in self.removed_lemons:
                     continue
@@ -390,14 +540,12 @@ class ClusterSim:
                     self.removed_lemons.discard(node_id)  # replaced node
                 self.node_ok[node_id] = True
                 self.node_draining[node_id] = False
-                if self.free[node_id] == self.spec.gpus_per_node:
-                    self.full_free.add(node_id)
+                self._reindex(node_id)
+                self._arm_sched(t)
                 self._push(self.faults.next_fault_time(node_id, t),
                            "fault_node", node_id)
             elif kind == "kill_node":
                 self._handle_kill(t, payload)
-            elif kind == "sched":
-                self._schedule_pass(t)
             elif kind == "lemon_scan":
                 self._lemon_scan(t)
 

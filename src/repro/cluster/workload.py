@@ -71,6 +71,47 @@ class JobRequest:
         return max(1, -(-self.n_gpus // 8))
 
 
+@dataclass
+class WorkloadArrays:
+    """Column-oriented batch of arrivals (time-sorted).
+
+    The event loop consumes these directly and materializes `JobRequest`
+    objects lazily, one at a time, so a paper-scale replay (~2.4M jobs)
+    never holds millions of request objects at once.
+    """
+
+    submit_t: np.ndarray   # float64, sorted ascending
+    n_gpus: np.ndarray     # int64
+    duration_s: np.ndarray  # float64
+    priority: np.ndarray   # int64
+    outcome: np.ndarray    # str
+    start_job_id: int = 0
+
+    def __len__(self) -> int:
+        return len(self.submit_t)
+
+    def request(self, i: int) -> JobRequest:
+        jid = self.start_job_id + i
+        return JobRequest(
+            job_id=jid, run_id=jid, submit_t=float(self.submit_t[i]),
+            n_gpus=int(self.n_gpus[i]), duration_s=float(self.duration_s[i]),
+            priority=int(self.priority[i]), outcome=str(self.outcome[i]))
+
+
+# Natural terminal state if infra doesn't kill the job first, calibrated to
+# Figure 3 (RSC-1: 60% completed, 24% failed [user], 10% preempted, 2%
+# requeued, 0.6% timeout, 0.1% OOM...).  Preempted/requeued/node-fail states
+# emerge from the simulation itself, so natural outcomes re-normalize over
+# {completed, failed, oom, cancelled, timeout}; cumulative thresholds for
+# one uniform draw per job.
+_OUTCOMES = np.array(["COMPLETED", "FAILED", "OUT_OF_MEMORY", "CANCELLED",
+                      "TIMEOUT"])
+_OUTCOME_CUM = np.cumsum([0.66, 0.27, 0.002, 0.06])
+
+# lognormal duration shape: heavy tail, capped at the 7-day lifetime limit
+DURATION_SIGMA = 1.2
+
+
 class WorkloadGenerator:
     """Poisson arrivals; sizes/durations calibrated per cluster."""
 
@@ -91,58 +132,43 @@ class WorkloadGenerator:
         self.fracs = fracs
         self.mean_dur_s = np.minimum(mean_dur_h * 3600.0, 6.5 * 86400.0)
 
-    def sample_size(self) -> int:
-        return int(self.rng.choice(self.sizes, p=self.fracs))
+    def generate_arrays(self, horizon_days: float, start_job_id: int = 0
+                        ) -> WorkloadArrays:
+        """Vectorized arrival generation: one batched Poisson/choice/lognormal
+        draw for every job in the horizon instead of a Python loop per job."""
+        rate = self.spec.jobs_per_day / 86400.0
+        horizon_s = horizon_days * 86400.0
+        expected = rate * horizon_s
+        # draw inter-arrival gaps in bulk; top up in the (rare) case the
+        # first block undershoots the horizon
+        n_guess = int(expected + 4.0 * np.sqrt(expected) + 16.0)
+        parts = []
+        total = 0.0
+        while True:
+            gaps = self.rng.exponential(1.0 / rate, size=n_guess)
+            block = np.cumsum(gaps) + total
+            parts.append(block)
+            total = float(block[-1])
+            if total >= horizon_s:
+                break
+            n_guess = max(64, int((horizon_s - total) * rate * 1.2) + 16)
+        t = np.concatenate(parts) if len(parts) > 1 else parts[0]
+        t = t[t < horizon_s]
+        n = len(t)
 
-    def sample_duration(self, size: int) -> float:
-        i = int(np.searchsorted(self.sizes, size))
-        mean = self.mean_dur_s[i]
-        # lognormal with sigma=1.2, heavy tail, capped at the 7-day limit
-        sigma = 1.2
-        mu = np.log(mean) - sigma**2 / 2.0
-        d = float(self.rng.lognormal(mu, sigma))
-        return float(np.clip(d, 30.0, 6.9 * 86400.0))
-
-    def sample_priority(self, size: int) -> int:
+        idx = self.rng.choice(len(self.sizes), size=n, p=self.fracs)
+        sizes = self.sizes[idx]
+        sigma = DURATION_SIGMA
+        mu = np.log(self.mean_dur_s[idx]) - sigma ** 2 / 2.0
+        dur = np.clip(self.rng.lognormal(mu, sigma), 30.0, 6.9 * 86400.0)
         # larger jobs run at higher priority (paper §III Preemptions)
-        base = int(np.log2(size)) if size > 1 else 0
-        return base + int(self.rng.integers(0, 2))
-
-    def sample_outcome(self, size: int) -> str:
-        """Natural terminal state if infra doesn't kill the job first.
-        Calibrated to Figure 3 (RSC-1: 60% completed, 24% failed [user],
-        10% preempted, 2% requeued, 0.6% timeout, 0.1% OOM...).  Preempted/
-        requeued/node-fail states emerge from the simulation itself, so
-        natural outcomes re-normalize over {completed, failed, oom,
-        cancelled, timeout}."""
-        r = self.rng.random()
-        if r < 0.66:
-            return "COMPLETED"
-        if r < 0.66 + 0.27:
-            return "FAILED"
-        if r < 0.66 + 0.27 + 0.002:
-            return "OUT_OF_MEMORY"
-        if r < 0.66 + 0.27 + 0.002 + 0.06:
-            return "CANCELLED"
-        return "TIMEOUT"
+        prio = np.where(sizes > 1, np.log2(sizes).astype(np.int64), 0) \
+            + self.rng.integers(0, 2, size=n)
+        outcome = _OUTCOMES[np.searchsorted(
+            _OUTCOME_CUM, self.rng.random(n), side="right")]
+        return WorkloadArrays(t, sizes, dur, prio, outcome, start_job_id)
 
     def generate(self, horizon_days: float, start_job_id: int = 0
                  ) -> list[JobRequest]:
-        out: list[JobRequest] = []
-        rate = self.spec.jobs_per_day / 86400.0
-        t = 0.0
-        jid = start_job_id
-        horizon_s = horizon_days * 86400.0
-        while True:
-            t += self.rng.exponential(1.0 / rate)
-            if t >= horizon_s:
-                break
-            size = self.sample_size()
-            out.append(JobRequest(
-                job_id=jid, run_id=jid, submit_t=t, n_gpus=size,
-                duration_s=self.sample_duration(size),
-                priority=self.sample_priority(size),
-                outcome=self.sample_outcome(size),
-            ))
-            jid += 1
-        return out
+        arr = self.generate_arrays(horizon_days, start_job_id)
+        return [arr.request(i) for i in range(len(arr))]

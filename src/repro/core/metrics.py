@@ -27,9 +27,12 @@ class JobState(str, enum.Enum):
     TIMEOUT = "TIMEOUT"
 
 
-@dataclass
+@dataclass(slots=True)
 class JobRecord:
-    """One scheduler job (one attempt of a run)."""
+    """One scheduler job (one attempt of a run).
+
+    ``slots=True``: a paper-scale replay holds millions of these at once.
+    """
 
     job_id: int
     run_id: int

@@ -22,66 +22,54 @@ def simulate_run_ettr(p: ETTRParams, *, n_runs: int = 2000,
                       seed: int = 0) -> MCResult:
     """Simulate job runs with Poisson failures, per-interruption queue +
     restart overheads, periodic checkpoint writes, and measure realized
-    ETTR = R / (R + U + Q)."""
+    ETTR = R / (R + U + Q).
+
+    Vectorized across runs: each loop iteration advances every still-active
+    run by one *attempt*, whose outcome has a closed form.  An attempt with
+    remaining progress ``R_rem`` pays restart overhead ``u0``, then cycles
+    of (produce ``dt``, write checkpoint ``w``); checkpoint ``j`` becomes
+    durable at ``u0 + j*(dt + w)``.  Against a failure at ``ttf``:
+
+      * completes iff ``ttf > u0 + R_rem + m*w`` with ``m = ceil(R_rem/dt)-1``
+        full checkpoint writes before the final (unwritten) interval;
+      * otherwise durable progress is ``j*dt`` with
+        ``j = clip(floor((ttf - u0)/(dt + w)), 0, m)`` and everything else
+        (restart, writes, work since the last durable checkpoint) counts as
+        unproductive time ``max(ttf, u0) - j*dt``.
+    """
     rng = np.random.default_rng(seed)
     lam_s = p.lam / SECONDS_PER_DAY  # failures per wall-second of running
     dt = p.resolved_dt_s()
+    w = p.w_cp_s
+    u0 = p.u0_s
     R_target = p.runtime_s
-    ettrs = np.zeros(n_runs)
+
+    productive = np.zeros(n_runs)
+    unproductive = np.zeros(n_runs)
+    queue = rng.exponential(p.q_s, n_runs) if p.q_s > 0 \
+        else np.zeros(n_runs)
     fails = np.zeros(n_runs)
-    for i in range(n_runs):
-        productive = 0.0
-        unproductive = 0.0
-        queue = rng.exponential(p.q_s) if p.q_s > 0 else 0.0
-        n_f = 0
-        # progress within the current checkpoint interval that isn't durable
-        since_cp = 0.0
-        while productive < R_target:
-            # time until next failure (exponential)
-            ttf = rng.exponential(1.0 / lam_s) if lam_s > 0 else float("inf")
-            # wallclock this attempt can run productively, with checkpoint
-            # writes every dt of productive progress
-            attempt_prod = 0.0
-            attempt_over = p.u0_s  # restart/init
-            t = attempt_over
-            # simulate until failure or completion
-            while True:
-                need = min(dt - since_cp, R_target - productive - attempt_prod)
-                # time to produce `need` progress + the checkpoint write
-                if t + need >= ttf:
-                    # failure mid-interval: lose work since last checkpoint
-                    prod_done = max(0.0, ttf - t)
-                    lost = min(since_cp + prod_done, since_cp + need)
-                    attempt_prod += prod_done - min(prod_done, lost)
-                    attempt_over += min(prod_done, lost)
-                    since_cp = 0.0
-                    n_f += 1
-                    break
-                t += need
-                attempt_prod += need
-                since_cp += need
-                if productive + attempt_prod >= R_target:
-                    break
-                if since_cp >= dt:
-                    if t + p.w_cp_s >= ttf:
-                        # failure during the checkpoint write
-                        attempt_over += max(0.0, ttf - t)
-                        # the in-flight checkpoint is lost
-                        lost = since_cp
-                        attempt_prod -= lost
-                        attempt_over += lost
-                        since_cp = 0.0
-                        n_f += 1
-                        break
-                    t += p.w_cp_s
-                    attempt_over += p.w_cp_s
-                    since_cp = 0.0
-            productive += attempt_prod
-            unproductive += attempt_over
-            if productive < R_target:
-                queue += rng.exponential(p.q_s) if p.q_s > 0 else 0.0
-        W = productive + unproductive + queue
-        ettrs[i] = productive / W
-        fails[i] = n_f
+    active = np.arange(n_runs)
+    while active.size:
+        R_rem = R_target - productive[active]
+        m = np.maximum(np.ceil(R_rem / dt) - 1.0, 0.0)
+        t_done = u0 + R_rem + m * w
+        ttf = rng.exponential(1.0 / lam_s, active.size) if lam_s > 0 \
+            else np.full(active.size, np.inf)
+        done = ttf > t_done
+        idx = active[done]
+        productive[idx] = R_target
+        unproductive[idx] += u0 + m[done] * w
+        idx = active[~done]
+        tf = ttf[~done]
+        j = np.clip(np.floor((tf - u0) / (dt + w)), 0.0, m[~done])
+        productive[idx] += j * dt
+        unproductive[idx] += np.maximum(tf, u0) - j * dt
+        fails[idx] += 1
+        if p.q_s > 0 and idx.size:
+            queue[idx] += rng.exponential(p.q_s, idx.size)
+        active = idx
+    W = productive + unproductive + queue
+    ettrs = productive / W
     return MCResult(float(ettrs.mean()), float(ettrs.std()),
                     float(fails.mean()), n_runs)

@@ -108,6 +108,11 @@ def _maybe_context_parallel(q, k, v, *, causal, window, chunk, softcap,
 
     from repro.parallel import axes as paxes
 
+    if not hasattr(jax.lax, "pcast"):
+        # pre-vma shard_map can't type the kernel's device-varying scalar
+        # residual (q_offset) through the custom-vjp transpose — fall back
+        # to plain SPMD (replicated attention; correct, just not sharded)
+        return None
     mesh = paxes._CTX.mesh
     if mesh is None or "model" not in mesh.shape:
         return None
@@ -117,8 +122,6 @@ def _maybe_context_parallel(q, k, v, *, causal, window, chunk, softcap,
     if H % n == 0:  # heads shard fine: standard TP attention is better
         return None
     if window or chunk or Sq != Sk or q_offset != 0 or Sq % n != 0:
-        return None
-    if not (causal or True):
         return None
     s_local = Sq // n
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -10,7 +10,14 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import HealthCheck, settings
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:  # container image has no hypothesis
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_fallback import install
+
+    install()
+    from hypothesis import HealthCheck, settings
 
 settings.register_profile(
     "repro",
