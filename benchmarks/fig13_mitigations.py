@@ -1,0 +1,85 @@
+"""Mitigation-lab scale sweep (paper §IV: gauging software mitigations).
+
+Runs the policy x scale grid from ``repro.mitigations.sweep`` — baseline,
+lemon eviction, and Daly-Young-optimal checkpoint cadence at 512/2048/8192
+GPUs, >=2 seeds each — and checks the acceptance properties:
+
+  * the grid completes in < 5 min on one CPU;
+  * the simulated baseline ETTR at each scale lands inside the analytical
+    ``ettr_model`` band (model fed the realized interruption rates and
+    queue waits, Fig. 9-style; measured is the conservative underestimate);
+  * rate-tuned checkpoint cadence shows an ETTR uplift over the hourly
+    baseline, and lemon eviction does not hurt.
+
+Quick mode (`benchmarks.run --quick`): a 2-policy x 2-scale x 2-seed smoke
+grid at 256/512 GPUs, exercised from tier-1 pytest.
+"""
+import math
+
+from benchmarks import common
+from benchmarks.common import benchmark
+
+# calibrated on seeds 0-4 at 512/2048/8192 GPUs: measured - model lands in
+# [-0.027, -0.009]; the regression band leaves generous statistical margin
+MODEL_BAND_LO = -0.10
+MODEL_BAND_HI = +0.05
+
+
+def _report_cells(rep, res):
+    for row in res.aggregate():
+        tag = f"{row['policy']}@{row['n_gpus']}gpu"
+        rep.add(f"{tag}.ettr", round(row["ettr_sim"], 3),
+                f"model {row['ettr_model']:.3f}, "
+                f"{row['n_seeds']} seeds")
+        if "d_ettr" in row:
+            rep.add(f"{tag}.ettr_uplift", round(row["d_ettr"], 3),
+                    "vs baseline at same scale/seeds")
+
+
+@benchmark("fig13_mitigations")
+def run(rep):
+    from repro.mitigations.sweep import sweep
+
+    if common.QUICK:
+        res = sweep(policies=["baseline", "lemon_eviction"],
+                    gpus_list=[256, 512], seeds=(0, 1), horizon_days=3.0,
+                    min_hours=2.0, procs=0)
+        _report_cells(rep, res)
+        rep.add("grid.wall_s", round(res.wall_s, 2))
+        rep.check("quick smoke grid completes fast", res.wall_s < 60.0,
+                  f"{res.wall_s:.1f}s")
+        rep.check("every quick cell measured ETTR",
+                  all(not math.isnan(c.ettr_sim) for c in res.cells),
+                  str([c.n_runs_measured for c in res.cells]))
+        return
+
+    policies = ["baseline", "lemon_eviction", "checkpoint_optimal"]
+    res = sweep(policies=policies, gpus_list=[512, 2048, 8192],
+                seeds=(0, 1), horizon_days=8.0, procs=4)
+    _report_cells(rep, res)
+    rep.add("grid.cells", len(res.cells))
+    rep.add("grid.wall_s", round(res.wall_s, 2))
+    rep.check("3-policy x 3-scale x 2-seed grid under 5 min",
+              res.wall_s < 300.0, f"{res.wall_s:.1f}s")
+
+    rows = {(r["policy"], r["n_gpus"]): r for r in res.aggregate()}
+    for gpus in (512, 2048, 8192):
+        base = rows[("baseline", gpus)]
+        diff = base["ettr_sim"] - base["ettr_model"]
+        rep.check(f"baseline ETTR within analytical band @ {gpus} GPUs",
+                  MODEL_BAND_LO <= diff <= MODEL_BAND_HI,
+                  f"measured {base['ettr_sim']:.3f} vs model "
+                  f"{base['ettr_model']:.3f} (diff {diff:+.3f})")
+    uplift = [rows[("checkpoint_optimal", g)]["d_ettr"]
+              for g in (512, 2048, 8192)]
+    rep.check("rate-tuned checkpoint cadence lifts ETTR at every scale",
+              all(u > 0 for u in uplift),
+              ", ".join(f"{u:+.3f}" for u in uplift))
+    lemon = [rows[("lemon_eviction", g)]["d_ettr"] for g in (512, 2048, 8192)]
+    rep.check("lemon eviction does not hurt ETTR (>= -0.02 at every scale)",
+              all(u >= -0.02 for u in lemon),
+              ", ".join(f"{u:+.3f}" for u in lemon))
+    evicted = sum(c.n_evicted for c in res.cells
+                  if c.policy == "lemon_eviction")
+    rep.check("lemon eviction actually evicts", evicted > 0,
+              f"{evicted} evictions across cells")

@@ -14,8 +14,8 @@ import traceback
 from benchmarks import (fig3_job_status, fig4_attribution, fig5_timeline,  # noqa: F401
                         fig6_job_mix, fig7_mttf, fig8_goodput_loss,
                         fig9_ettr, fig10_contours, fig12_adaptive_routing,
-                        kernel_bench, roofline_table, runtime_ettr,
-                        sim_bench, table2_lemon)
+                        fig13_mitigations, kernel_bench, roofline_table,
+                        runtime_ettr, sim_bench, table2_lemon)
 from benchmarks import common
 from benchmarks.common import all_benchmarks
 
@@ -28,6 +28,10 @@ def main() -> None:
                     help="small-scale defaults (CI smoke mode)")
     args = ap.parse_args()
     common.QUICK = args.quick
+    if args.only and args.only not in all_benchmarks():
+        names = "\n  ".join(sorted(all_benchmarks()))
+        ap.error(f"unknown benchmark {args.only!r}; registered benchmarks:"
+                 f"\n  {names}")
 
     t0 = time.time()
     results = {}

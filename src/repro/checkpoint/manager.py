@@ -196,3 +196,36 @@ class CheckpointPolicy:
 
     def should_save(self, last_save_t: float, now: float) -> bool:
         return (now - last_save_t) >= self.interval_s()
+
+
+@dataclass
+class AdaptiveCheckpointPolicy(CheckpointPolicy):
+    """Daly-Young pacing at the *observed* failure rate.
+
+    The nominal ``r_f_per_node_day`` acts as a prior worth
+    ``prior_node_days`` of evidence; ``observe`` folds in measured failure
+    counts so the interval re-tunes when the realized rate drifts off
+    nominal (lemon-heavy fleets, Fig. 5 episodes).  With no observations
+    this is exactly ``CheckpointPolicy``.
+    """
+
+    prior_node_days: float = 2000.0
+    observed_failures: float = 0.0
+    observed_node_days: float = 0.0
+
+    def observe(self, n_failures: float, node_days: float) -> None:
+        self.observed_failures += n_failures
+        self.observed_node_days += node_days
+
+    @property
+    def r_f_effective(self) -> float:
+        prior_failures = self.r_f_per_node_day * self.prior_node_days
+        return (prior_failures + self.observed_failures) / (
+            self.prior_node_days + self.observed_node_days)
+
+    def interval_s(self) -> float:
+        from repro.core.ettr_model import daly_young_interval_s
+
+        dt = daly_young_interval_s(self.n_nodes, self.r_f_effective,
+                                   self.w_cp_s)
+        return float(np.clip(dt, self.min_interval_s, self.max_interval_s))

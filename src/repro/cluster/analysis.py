@@ -123,12 +123,19 @@ def large_job_failure_rate(records: list[JobRecord],
     return len(bad) / len(big)
 
 
-def run_ettrs(records: list[JobRecord], *, min_gpus: int = 256,
-              min_hours: float = 48.0, **ettr_kw):
-    """Figure 9: measured ETTR per qualifying job run."""
+def group_runs(records: list[JobRecord]) -> dict[int, list[JobRecord]]:
+    """Group scheduler records into job runs (requeued attempts share a
+    run_id) — the unit the ETTR analyses score."""
     runs = defaultdict(list)
     for r in records:
         runs[r.run_id].append(r)
+    return runs
+
+
+def run_ettrs(records: list[JobRecord], *, min_gpus: int = 256,
+              min_hours: float = 48.0, **ettr_kw):
+    """Figure 9: measured ETTR per qualifying job run."""
+    runs = group_runs(records)
     out = []
     for run_id, jobs in runs.items():
         if jobs[0].n_gpus < min_gpus:

@@ -28,6 +28,17 @@ jobs — in minutes on one CPU):
     lower-priority candidates instead of sorting every running job.
   * arrivals are generated as vectorized column arrays and merge-iterated
     with the event heap, never materialized as heap events.
+
+Mitigation hook points (repro.mitigations): an optional ``policy`` observes
+the simulation at fixed points — ``bind`` / ``on_fault`` / ``on_node_drain``
+/ ``on_node_repair`` / ``on_schedule_pass`` / ``on_job_requeue`` /
+``on_timer`` — and intervenes only through the public helpers
+(``hold_node`` / ``release_node`` / ``evict_node`` / ``restart_node`` /
+``push_policy_timer``).  With no policy (or a no-op policy) the engine is
+bit-for-bit identical to running without the hooks: hooks never consume the
+simulator's RNG streams and a no-op never pushes events, so the lazy-tick
+and bucket-index invariants above survive untouched (regression-tested in
+tests/test_mitigations.py).
 """
 from __future__ import annotations
 
@@ -50,6 +61,10 @@ MAX_LIFETIME_S = 7 * 86400.0
 SCHED_TICK_S = 30.0
 CHECK_PERIOD_S = 300.0
 MAX_REQUEUES = 50
+
+# sentinel an on_node_repair hook returns to keep a repaired node out of
+# service (the policy takes ownership and must later call release_node)
+POLICY_HOLD = "hold"
 
 _INF = float("inf")
 
@@ -77,8 +92,11 @@ class ClusterSim:
                  seed: int = 0, enable_lemon_detection: bool = False,
                  lemon_scan_period_days: float = 7.0,
                  lemon_detector: Optional[LemonDetector] = None,
-                 episodes=(), check_introduced=None):
+                 episodes=(), check_introduced=None, policy=None):
         self.spec = spec
+        # optional repro.mitigations.MitigationPolicy (duck-typed; the
+        # scheduler never imports the mitigations package)
+        self.policy = policy
         self.horizon_s = horizon_days * 86400.0
         self.rng = np.random.default_rng(seed + 1)
         self.gen = WorkloadGenerator(spec, seed=seed)
@@ -268,6 +286,8 @@ class ClusterSim:
         if requeue and r.run.attempts < MAX_REQUEUES and r.run.remaining_s > 1.0:
             r.run.attempts += 1
             self._enqueue(t, r.run)
+            if self.policy is not None:
+                self.policy.on_job_requeue(self, t, r.run, state)
 
     def _enqueue(self, t: float, run: RunState) -> None:
         heapq.heappush(self.queue,
@@ -276,17 +296,21 @@ class ClusterSim:
 
     # -- node fault handling ----------------------------------------------
     def _drain_now(self, node_id: int, fault: Optional[Fault],
-                   reason: str = "", now: Optional[float] = None) -> None:
+                   reason: str = "", now: Optional[float] = None,
+                   repair_s: Optional[float] = None) -> None:
         if not self.node_ok[node_id]:
             return
         self.node_ok[node_id] = False
         self.node_draining[node_id] = False
         self._reindex(node_id)
         self.histories[node_id].out_count += 1
-        repair = fault.repair_s if fault else 3600.0
+        if repair_s is None:
+            repair_s = fault.repair_s if fault else 3600.0
         t0 = fault.t if fault else (now if now is not None else self._now)
         self.drain_log.append((t0, node_id, reason))
-        self._push(t0 + repair, "repair", node_id)
+        self._push(t0 + repair_s, "repair", node_id)
+        if self.policy is not None:
+            self.policy.on_node_drain(self, t0, node_id, reason)
 
     def _handle_fault(self, t: float, fault: Fault) -> None:
         node_id = fault.node_id
@@ -440,20 +464,93 @@ class ClusterSim:
         # repair — lemon signals persist across drains
         verdicts = self.detector.scan(self.histories)
         for v in verdicts:
-            if v.is_lemon and v.node_id not in self.removed_lemons:
-                self.lemon_removal_log.append((t, v.node_id, v.tripped))
-                self.removed_lemons.add(v.node_id)
-                # replace with a healthy node: clear fault process lemon flag
-                self.faults.lemons.discard(v.node_id)
-                if self.node_ok[v.node_id]:
-                    if self.node_jobs[v.node_id]:
-                        # proactive removal: drain after running jobs finish
-                        self.node_draining[v.node_id] = True
-                        self._reindex(v.node_id)
-                    else:
-                        self.node_ok[v.node_id] = False
-                        self._reindex(v.node_id)
-                        self._push(t + 4 * 3600.0, "repair", v.node_id)
+            if v.is_lemon:
+                self.evict_node(t, v.node_id, v.tripped)
+
+    # -- mitigation-policy helpers ------------------------------------------
+    def evict_node(self, t: float, node_id: int, tripped=(),
+                   replace_after_s: float = 4 * 3600.0) -> bool:
+        """Remove a repeat-offender node and swap in a healthy replacement
+        (paper §IV-A lemon eviction).  Busy nodes drain after their running
+        jobs finish; idle nodes leave immediately and the replacement
+        arrives ``replace_after_s`` later.  Returns False if the node was
+        already evicted."""
+        if node_id in self.removed_lemons:
+            return False
+        self.lemon_removal_log.append((t, node_id, tuple(tripped)))
+        self.removed_lemons.add(node_id)
+        # replace with a healthy node: clear fault process lemon flag
+        self.faults.lemons.discard(node_id)
+        if self.node_ok[node_id]:
+            if self.node_jobs[node_id]:
+                # proactive removal: drain after running jobs finish
+                self.node_draining[node_id] = True
+                self._reindex(node_id)
+            else:
+                self.node_ok[node_id] = False
+                self._reindex(node_id)
+                self._push(t + replace_after_s, "repair", node_id)
+        return True
+
+    def hold_node(self, node_id: int) -> bool:
+        """Take an idle, healthy node out of scheduling without logging a
+        drain (warm-spare reservation).  The caller owns the node until it
+        calls release_node."""
+        if not self.node_ok[node_id] or self.node_jobs[node_id]:
+            return False
+        self.node_ok[node_id] = False
+        self.node_draining[node_id] = False
+        self._reindex(node_id)
+        return True
+
+    def release_node(self, t: float, node_id: int) -> bool:
+        """Return a held node to scheduling.  Unlike the repair path this
+        pushes no new fault event: the node's fault chain stays live while
+        held (``_handle_fault`` re-pushes the next fault regardless of
+        service state), so a hold/release cycle leaves the fault process
+        untouched instead of compounding per-node fault streams."""
+        if self.node_ok[node_id]:
+            return False
+        if node_id in self.removed_lemons:
+            self.removed_lemons.discard(node_id)  # replaced node
+        self.node_ok[node_id] = True
+        self.node_draining[node_id] = False
+        self._reindex(node_id)
+        self._arm_sched(t)
+        return True
+
+    def restart_node(self, t: float, node_id: int,
+                     repair_s: float = 1800.0,
+                     reason: str = "preemptive_restart") -> bool:
+        """Controlled restart of an in-service node: running jobs are
+        requeued as REQUEUED (an orderly kill, not a NODE_FAIL) and the node
+        returns after ``repair_s``.  A node already draining toward
+        remediation is left alone (interrupting its last job would fire the
+        pending low-severity drain with its own repair time, silently
+        discarding ``repair_s``/``reason``) — returns False."""
+        if not self.node_ok[node_id] or self.node_draining[node_id]:
+            return False
+        for j in list(self.node_jobs[node_id]):
+            r = self.running.get(j)
+            if r is not None:
+                self._interrupt(r, t, JobState.REQUEUED, hw=False)
+        self._drain_now(node_id, None, reason=reason, now=t,
+                        repair_s=repair_s)
+        return True
+
+    def push_policy_timer(self, t: float, tag=None) -> None:
+        """Arm a policy callback: on_timer(sim, t, tag) fires at time t."""
+        self._push(t, "policy", tag)
+
+    def _return_to_service(self, t: float, node_id: int) -> None:
+        if node_id in self.removed_lemons:
+            self.removed_lemons.discard(node_id)  # replaced node
+        self.node_ok[node_id] = True
+        self.node_draining[node_id] = False
+        self._reindex(node_id)
+        self._arm_sched(t)
+        self._push(self.faults.next_fault_time(node_id, t),
+                   "fault_node", node_id)
 
     # -- main loop -----------------------------------------------------------
     def run(self) -> None:
@@ -467,6 +564,8 @@ class ClusterSim:
         n_arr = len(arr_t)
         ai = 0
 
+        if self.policy is not None:
+            self.policy.bind(self)
         for i in range(self.spec.n_nodes):
             self._push(self.faults.next_fault_time(i, 0.0), "fault_node", i)
         if self.enable_lemon:
@@ -512,6 +611,10 @@ class ClusterSim:
             elif kind == "sched":
                 if self._armed and self._armed[0] <= t:
                     heapq.heappop(self._armed)
+                if self.policy is not None:
+                    # interventions (evictions, spare releases) land before
+                    # the pass so this tick's placements see them
+                    self.policy.on_schedule_pass(self, t)
                 # _pass_t absorbs same-tick re-arms from in-pass preemption
                 # releases: the changed/blocked retry logic below covers them
                 self._pass_t = t
@@ -534,20 +637,25 @@ class ClusterSim:
                     continue
                 fault = self.faults.sample_fault(payload, t)
                 self._handle_fault(t, fault)
+                if self.policy is not None:
+                    self.policy.on_fault(self, t, fault)
             elif kind == "repair":
                 node_id = payload
-                if node_id in self.removed_lemons:
-                    self.removed_lemons.discard(node_id)  # replaced node
-                self.node_ok[node_id] = True
-                self.node_draining[node_id] = False
-                self._reindex(node_id)
-                self._arm_sched(t)
-                self._push(self.faults.next_fault_time(node_id, t),
-                           "fault_node", node_id)
+                if self.policy is not None:
+                    act = self.policy.on_node_repair(self, t, node_id)
+                    if act == POLICY_HOLD:
+                        continue   # policy keeps the node (warm spare pool)
+                    if act:        # health gate: delay return-to-service
+                        self._push(t + float(act), "repair", node_id)
+                        continue
+                self._return_to_service(t, node_id)
             elif kind == "kill_node":
                 self._handle_kill(t, payload)
             elif kind == "lemon_scan":
                 self._lemon_scan(t)
+            elif kind == "policy":
+                if self.policy is not None:
+                    self.policy.on_timer(self, t, payload)
 
         # close out still-running jobs as CANCELLED at horizon (censored)
         for r in list(self.running.values()):

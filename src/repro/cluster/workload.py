@@ -25,6 +25,11 @@ class ClusterSpec:
     r_f: float = 6.50e-3
     lemon_fraction: float = 0.012
     lemon_rate_multiplier: float = 25.0
+    # drop mix entries larger than this from the workload (None = keep the
+    # full paper mix).  Scale sweeps set it to the cluster's GPU count so a
+    # 512-GPU what-if cluster is not poisoned by permanently unschedulable
+    # 4096-GPU arrivals hammering the preemption path every pass.
+    max_job_gpus: Optional[int] = None
 
     @property
     def n_gpus(self) -> int:
@@ -117,7 +122,14 @@ class WorkloadGenerator:
 
     def __init__(self, spec: ClusterSpec, seed: int = 0):
         self.spec = spec
-        self.mix = MIXES[spec.name]
+        mix = MIXES[spec.name]
+        if spec.max_job_gpus is not None:
+            mix = {s: v for s, v in mix.items() if s <= spec.max_job_gpus}
+            if not mix:
+                raise ValueError(
+                    f"max_job_gpus={spec.max_job_gpus} excludes every "
+                    f"{spec.name} mix entry")
+        self.mix = mix
         self.rng = np.random.default_rng(seed)
         sizes = np.array(list(self.mix.keys()))
         fracs = np.array([v[0] for v in self.mix.values()])

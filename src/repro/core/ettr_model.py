@@ -37,6 +37,13 @@ class ETTRParams:
         return self.n_nodes * self.r_f
 
     def resolved_dt_s(self) -> float:
+        """Checkpoint interval: explicit ``dt_cp_s`` if set, else the
+        Daly-Young optimum.  ``w_cp_s=0`` (free checkpoints) degenerates the
+        Daly-Young interval to 0 — a valid limit (checkpoint continuously at
+        no cost); the model formulas below treat ``w/dt`` as 0 there instead
+        of dividing by zero."""
+        if self.w_cp_s < 0:
+            raise ValueError(f"w_cp_s must be >= 0, got {self.w_cp_s}")
         if self.dt_cp_s > 0:
             return self.dt_cp_s
         return daly_young_interval_s(self.n_nodes, self.r_f, self.w_cp_s)
@@ -46,6 +53,12 @@ def daly_young_interval_s(n_nodes: int, r_f: float, w_cp_s: float) -> float:
     """Eq. 3: dt* = sqrt(2 w_cp / (N r_f)); result in seconds."""
     lam_per_s = n_nodes * r_f / SECONDS_PER_DAY
     return math.sqrt(2.0 * w_cp_s / max(lam_per_s, 1e-18))
+
+
+def _w_over_dt(w: float, d: float) -> float:
+    """``w/dt`` with the free-checkpoint limit: w_cp=0 drives the
+    Daly-Young dt to 0 and the overhead ratio to 0, not to a 0/0 blowup."""
+    return w / d if d > 0 else 0.0
 
 
 def expected_n_failures(p: ETTRParams) -> float:
@@ -58,7 +71,7 @@ def expected_n_failures(p: ETTRParams) -> float:
     denom = 1.0 - lam * (u0 + d / 2.0)
     if denom <= 0:
         return float("inf")
-    return R * lam * (1.0 + u0 / R + w / d) / denom
+    return R * lam * (1.0 + u0 / R + _w_over_dt(w, d)) / denom
 
 
 def expected_ettr(p: ETTRParams) -> float:
@@ -72,8 +85,9 @@ def expected_ettr(p: ETTRParams) -> float:
     num = 1.0 - lam * (u0 + d / 2.0)
     if num <= 0:
         return 0.0
-    den = (1.0 + (u0 + q) / R + w / d
-           + lam * q * (1.0 + w / d - d / (2.0 * R)))
+    w_d = _w_over_dt(w, d)
+    den = (1.0 + (u0 + q) / R + w_d
+           + lam * q * (1.0 + w_d - d / (2.0 * R)))
     return max(0.0, min(1.0, num / den))
 
 
@@ -83,7 +97,7 @@ def expected_ettr_simple(p: ETTRParams) -> float:
     u0 = p.u0_s / SECONDS_PER_DAY
     w = p.w_cp_s / SECONDS_PER_DAY
     num = 1.0 - p.lam * (u0 + d / 2.0)
-    return max(0.0, min(1.0, num / (1.0 + w / d)))
+    return max(0.0, min(1.0, num / (1.0 + _w_over_dt(w, d))))
 
 
 def ettr_contour(

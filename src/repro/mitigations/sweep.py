@@ -1,0 +1,313 @@
+"""Policy x scale sweep harness over the event-driven cluster simulator.
+
+Runs a grid of (mitigation policy, cluster scale, seed) cells, each a full
+``ClusterSim`` replay with the policy plugged into the scheduler hooks, and
+reports per-cell ETTR / MTTF / goodput plus deltas vs the baseline policy
+at the same (scale, seed) and vs the analytical ``ettr_model`` prediction
+(fed the realized interruption rates and queue waits, Fig. 9-style, so the
+comparison isolates the checkpoint/restart terms the model actually
+captures).  Cells are independent, so the grid fans out over a
+``multiprocessing`` pool.
+
+CLI:
+
+  PYTHONPATH=src python -m repro.mitigations.sweep \\
+      --policies baseline,lemon_eviction,checkpoint_optimal \\
+      --gpus 512,2048,8192 --seeds 2 --days 8 --procs 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+from collections import defaultdict
+from dataclasses import asdict, dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.cluster import analysis
+from repro.cluster.scheduler import ClusterSim
+from repro.cluster.workload import ClusterSpec
+from repro.core.ettr_model import ETTRParams, expected_ettr
+from repro.core.metrics import (goodput_loss, is_infra_failure, job_run_ettr,
+                                mttf)
+from repro.mitigations.policy import make_policy
+
+# RSC-1 scaling: 7.2k jobs/day on 2000 nodes, 83% target utilization
+JOBS_PER_NODE_DAY = 3.6
+W_CP_S = 300.0            # sync checkpoint write cost (paper Fig. 10 axis)
+U0_S = 300.0              # restart/init overhead
+# paper's typical cadence for larger jobs — the baseline accounting interval
+DEFAULT_CP_INTERVAL_S = 3600.0
+
+DEFAULT_POLICIES = ("baseline", "lemon_eviction", "checkpoint_optimal")
+DEFAULT_GPUS = (512, 2048, 8192)
+
+
+def scaled_spec(n_gpus: int, *, gpus_per_node: int = 8,
+                r_f: float = 6.5e-3) -> ClusterSpec:
+    """An RSC-1-like cluster shrunk to ``n_gpus``: job mix capped at the
+    cluster size, arrival rate and utilization target preserved."""
+    n_nodes = max(1, n_gpus // gpus_per_node)
+    return ClusterSpec(
+        "RSC-1", n_nodes=n_nodes, gpus_per_node=gpus_per_node,
+        jobs_per_day=n_nodes * JOBS_PER_NODE_DAY,
+        target_utilization=0.83, r_f=r_f,
+        max_job_gpus=n_nodes * gpus_per_node)
+
+
+@dataclass
+class CellResult:
+    """One (policy, scale, seed) grid cell."""
+
+    policy: str
+    n_gpus: int
+    seed: int
+    wall_s: float
+    n_records: int
+    n_faults: int
+    n_infra_failures: int
+    n_runs_measured: int
+    ettr_sim: float            # mean measured ETTR over qualifying runs
+    ettr_model: float          # analytic at realized rates (fig9-style)
+    ettr_model_nominal: float  # analytic at the nominal hardware-only r_f
+    mttf_large_h: float        # MTTF over qualifying-size jobs, hours
+    goodput: float             # (scheduled - failure/preemption loss)/capacity
+    n_evicted: int
+    extra: dict = field(default_factory=dict)
+
+
+def _measured_and_modeled(sim: ClusterSim, policy, *, min_gpus: int,
+                          min_hours: float, r_f_nominal: float):
+    """Per qualifying run: measured ETTR (policy's checkpoint cadence) and
+    the two analytic predictions."""
+    runs = analysis.group_runs(sim.records)
+    measured, modeled, modeled_nom = [], [], []
+    for jobs in runs.values():
+        g = jobs[0].n_gpus
+        if g < min_gpus:
+            continue
+        scheduled_s = sum(j.run_time for j in jobs)
+        if scheduled_s < min_hours * 3600.0:
+            continue
+        job_nodes = max(1, math.ceil(g / sim.spec.gpus_per_node))
+        # realized interruption rate (incl. preemptions and user failures
+        # the hardware-only analytic model does not see) — computed before
+        # the cadence so rate-tuned cadence controllers can use it
+        n_int = sum(1 for j in jobs if j.state.value != "COMPLETED")
+        run_days = max(scheduled_s, 3600.0) / 86400.0
+        rf_eff = max(n_int / run_days / job_nodes, r_f_nominal)
+        interval = policy.checkpoint_interval_s(sim, g, realized_rf=rf_eff) \
+            if policy is not None else None
+        if interval is None:
+            interval = DEFAULT_CP_INTERVAL_S
+        m = job_run_ettr(jobs, checkpoint_interval=interval, w_cp=W_CP_S,
+                         u0=U0_S)
+        measured.append(m.ettr)
+        n_att = max(m.n_interruptions + 1, 1)
+        common = dict(n_nodes=job_nodes, w_cp_s=W_CP_S, u0_s=U0_S,
+                      dt_cp_s=interval, q_s=m.queue / n_att,
+                      runtime_s=max(m.productive, 3600.0))
+        modeled.append(expected_ettr(ETTRParams(r_f=rf_eff, **common)))
+        modeled_nom.append(expected_ettr(ETTRParams(r_f=r_f_nominal,
+                                                    **common)))
+    return measured, modeled, modeled_nom
+
+
+def run_cell(policy_name: str, n_gpus: int, seed: int, *,
+             horizon_days: float = 8.0, min_gpus: Optional[int] = None,
+             min_hours: float = 12.0, policy_kwargs: Optional[dict] = None,
+             ) -> CellResult:
+    spec = scaled_spec(n_gpus)
+    policy = make_policy(policy_name, seed=seed + 9000,
+                         **(policy_kwargs or {}))
+    t0 = time.time()
+    sim = ClusterSim(spec, horizon_days=horizon_days, seed=seed,
+                     policy=policy)
+    sim.run()
+    wall = time.time() - t0
+
+    if min_gpus is None:
+        # large-ish jobs relative to the cluster (>= 1/16th of capacity,
+        # floor 64 GPUs) — small enough that every scale yields a usable
+        # qualifying-run sample inside a days-long horizon
+        min_gpus = max(64, n_gpus // 16)
+    measured, modeled, modeled_nom = _measured_and_modeled(
+        sim, policy, min_gpus=min_gpus, min_hours=min_hours,
+        r_f_nominal=spec.r_f)
+
+    large = [r for r in sim.records if r.n_gpus >= min_gpus]
+    infra = [r for r in large if is_infra_failure(r)]
+    large_runtime_s = sum(r.run_time for r in large)
+    loss = goodput_loss(sim.records)
+    scheduled_gpu_s = sum(r.run_time * r.n_gpus for r in sim.records)
+    capacity_gpu_s = spec.n_gpus * sim.horizon_s
+    goodput = (scheduled_gpu_s - loss.failure_loss_gpu_s
+               - loss.preemption_loss_gpu_s) / max(capacity_gpu_s, 1e-9)
+
+    extra = {}
+    for attr in ("evictions", "activations", "restarts", "gate_log"):
+        v = getattr(policy, attr, None)
+        if v is not None:
+            extra[f"n_{attr}"] = len(v)
+    return CellResult(
+        policy=policy_name, n_gpus=n_gpus, seed=seed, wall_s=round(wall, 2),
+        n_records=len(sim.records), n_faults=len(sim.fault_log),
+        n_infra_failures=len(infra), n_runs_measured=len(measured),
+        ettr_sim=float(np.mean(measured)) if measured else float("nan"),
+        ettr_model=float(np.mean(modeled)) if modeled else float("nan"),
+        ettr_model_nominal=(float(np.mean(modeled_nom)) if modeled_nom
+                            else float("nan")),
+        mttf_large_h=mttf(large_runtime_s / 3600.0, len(infra)),
+        goodput=goodput, n_evicted=len(sim.lemon_removal_log), extra=extra)
+
+
+def _cell_worker(args) -> CellResult:
+    name, n_gpus, seed, kw = args
+    return run_cell(name, n_gpus, seed, **kw)
+
+
+@dataclass
+class SweepResult:
+    cells: list[CellResult]
+    horizon_days: float
+    wall_s: float = 0.0
+
+    def cell(self, policy: str, n_gpus: int, seed: int
+             ) -> Optional[CellResult]:
+        for c in self.cells:
+            if (c.policy, c.n_gpus, c.seed) == (policy, n_gpus, seed):
+                return c
+        return None
+
+    def aggregate(self) -> list[dict]:
+        """Per (policy, scale): seed-mean metrics + deltas vs baseline."""
+        out = []
+        for (policy, n_gpus), cells in sorted(
+                _group(self.cells).items(),
+                key=lambda kv: (kv[0][1], kv[0][0] != "baseline", kv[0][0])):
+            base = [self.cell("baseline", n_gpus, c.seed) for c in cells]
+            row = {
+                "policy": policy, "n_gpus": n_gpus, "n_seeds": len(cells),
+                "ettr_sim": _nanmean([c.ettr_sim for c in cells]),
+                "ettr_model": _nanmean([c.ettr_model for c in cells]),
+                "ettr_model_nominal": _nanmean(
+                    [c.ettr_model_nominal for c in cells]),
+                "goodput": _nanmean([c.goodput for c in cells]),
+                "mttf_large_h": _nanmean(
+                    [c.mttf_large_h for c in cells if
+                     math.isfinite(c.mttf_large_h)]),
+                "n_evicted": sum(c.n_evicted for c in cells),
+            }
+            if all(b is not None for b in base) and policy != "baseline":
+                row["d_ettr"] = _nanmean(
+                    [c.ettr_sim - b.ettr_sim for c, b in zip(cells, base)])
+                row["d_goodput"] = _nanmean(
+                    [c.goodput - b.goodput for c, b in zip(cells, base)])
+            out.append(row)
+        return out
+
+    def table(self) -> str:
+        hdr = (f"{'policy':22s} {'gpus':>6s} {'ETTR':>6s} {'model':>6s} "
+               f"{'dETTR':>7s} {'goodput':>7s} {'dgoodp':>7s} "
+               f"{'MTTF_h':>8s} {'evict':>5s}")
+        lines = [hdr, "-" * len(hdr)]
+        for row in self.aggregate():
+            lines.append(
+                f"{row['policy']:22s} {row['n_gpus']:6d} "
+                f"{_fmt(row['ettr_sim'])} {_fmt(row['ettr_model'])} "
+                f"{_fmt(row.get('d_ettr'), '+7.3f')} "
+                f"{_fmt(row['goodput'], '7.3f')} "
+                f"{_fmt(row.get('d_goodput'), '+7.3f')} "
+                f"{_fmt(row['mttf_large_h'], '8.1f')} "
+                f"{row['n_evicted']:5d}")
+        return "\n".join(lines)
+
+    def to_json(self) -> dict:
+        return {"horizon_days": self.horizon_days, "wall_s": self.wall_s,
+                "cells": [asdict(c) for c in self.cells],
+                "aggregate": self.aggregate()}
+
+
+def _group(cells: Sequence[CellResult]) -> dict:
+    g: dict[tuple, list] = defaultdict(list)
+    for c in cells:
+        g[(c.policy, c.n_gpus)].append(c)
+    for v in g.values():
+        v.sort(key=lambda c: c.seed)
+    return g
+
+
+def _nanmean(xs) -> float:
+    xs = [x for x in xs if x is not None and not math.isnan(x)]
+    return float(np.mean(xs)) if xs else float("nan")
+
+
+def _fmt(v, spec: str = "6.3f") -> str:
+    width = int("".join(c for c in spec.split(".")[0] if c.isdigit()) or 6)
+    if v is None or (isinstance(v, float) and math.isnan(v)):
+        return "-".rjust(width)
+    return f"{v:{spec}}"
+
+
+def sweep(policies: Sequence[str] = DEFAULT_POLICIES,
+          gpus_list: Sequence[int] = DEFAULT_GPUS,
+          seeds: Sequence[int] = (0, 1), *, horizon_days: float = 8.0,
+          min_gpus: Optional[int] = None, min_hours: float = 12.0,
+          procs: int = 0,
+          policy_kwargs: Optional[dict[str, dict]] = None) -> SweepResult:
+    """Run the policy x scale x seed grid.  ``procs`` > 1 fans cells out
+    over a multiprocessing pool; 0/1 runs serially in-process."""
+    kw = dict(horizon_days=horizon_days, min_gpus=min_gpus,
+              min_hours=min_hours)
+    tasks = [(p, g, s, {**kw, "policy_kwargs":
+                        (policy_kwargs or {}).get(p)})
+             for p in policies for g in gpus_list for s in seeds]
+    t0 = time.time()
+    if procs and procs > 1 and len(tasks) > 1:
+        import multiprocessing as mp
+
+        # spawn, not fork: the host process may carry jax's thread pools
+        # (benchmark suite, pytest), and forking a multithreaded process
+        # can deadlock; workers only re-import the numpy-level sim stack
+        with mp.get_context("spawn").Pool(min(procs, len(tasks))) as pool:
+            cells = pool.map(_cell_worker, tasks)
+    else:
+        cells = [_cell_worker(t) for t in tasks]
+    cells.sort(key=lambda c: (c.n_gpus, c.policy, c.seed))
+    return SweepResult(cells, horizon_days, wall_s=time.time() - t0)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--policies", default=",".join(DEFAULT_POLICIES),
+                    help="comma-separated policy names (see "
+                         "repro.mitigations.available_policies)")
+    ap.add_argument("--gpus", default=",".join(map(str, DEFAULT_GPUS)),
+                    help="comma-separated cluster scales in GPUs")
+    ap.add_argument("--seeds", type=int, default=2,
+                    help="number of seeds per cell (0..n-1)")
+    ap.add_argument("--days", type=float, default=8.0)
+    ap.add_argument("--min-hours", type=float, default=12.0,
+                    help="min total runtime for an ETTR-qualifying run")
+    ap.add_argument("--procs", type=int, default=min(os.cpu_count() or 1, 6))
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    res = sweep(policies=args.policies.split(","),
+                gpus_list=[int(g) for g in args.gpus.split(",")],
+                seeds=range(args.seeds), horizon_days=args.days,
+                min_hours=args.min_hours, procs=args.procs)
+    print(res.table())
+    print(f"\n{len(res.cells)} cells in {res.wall_s:.1f}s "
+          f"(horizon {res.horizon_days:g} days)")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res.to_json(), f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Direct unit coverage for cluster/analysis.py on synthetic records —
+preemption cascades, goodput-loss size buckets (edges included), and the
+failure-rate timeline's day-bin edges."""
+from dataclasses import dataclass
+
+import numpy as np
+import pytest
+
+from repro.cluster import analysis
+from repro.core.metrics import JobRecord, JobState
+
+H = 3600.0
+
+
+def rec(job_id, state, *, n_gpus=8, run_h=2.0, hw=False, preempted_by=None,
+        run_id=None):
+    start = 1000.0
+    return JobRecord(
+        job_id=job_id, run_id=run_id if run_id is not None else job_id,
+        n_gpus=n_gpus, submit_t=0.0, start_t=start,
+        end_t=start + run_h * H, state=state, hw_attributed=hw,
+        preempted_by=preempted_by)
+
+
+@dataclass
+class FakeFault:
+    t: float
+    symptom: str
+
+
+# -- preemption_cascades ----------------------------------------------------
+def test_preemption_cascades_accounting():
+    records = [
+        # first-order: hourly checkpoints cap the loss at 30 min x GPUs
+        rec(1, JobState.NODE_FAIL, n_gpus=8, run_h=2.0),      # 4 GPU-h lost
+        # second-order: preempted by a recovering failed job
+        rec(2, JobState.PREEMPTED, n_gpus=16, run_h=3.0,
+            preempted_by=1),                                   # 8 GPU-h lost
+        # ordinary priority preemption: not second-order
+        rec(3, JobState.PREEMPTED, n_gpus=32, run_h=3.0),
+        rec(4, JobState.COMPLETED, n_gpus=8, run_h=5.0),
+    ]
+    out = analysis.preemption_cascades(records)
+    assert out["failure_loss_gpu_h"] == pytest.approx(4.0)
+    assert out["preemption_loss_gpu_h"] == pytest.approx(8.0)
+    assert out["second_order_fraction"] == pytest.approx(8.0 / 12.0)
+
+
+def test_preemption_cascades_no_losses():
+    out = analysis.preemption_cascades([rec(1, JobState.COMPLETED)])
+    assert out["failure_loss_gpu_h"] == 0.0
+    assert out["second_order_fraction"] == 0.0
+
+
+# -- goodput_loss_by_size ---------------------------------------------------
+def test_goodput_loss_by_size_bucket_edges():
+    records = [
+        rec(1, JobState.NODE_FAIL, n_gpus=8, run_h=2.0),    # edge of 1-8
+        rec(2, JobState.NODE_FAIL, n_gpus=9, run_h=2.0),    # edge of 9-256
+        rec(3, JobState.NODE_FAIL, n_gpus=256, run_h=2.0),  # edge of 9-256
+        rec(4, JobState.NODE_FAIL, n_gpus=257, run_h=2.0),  # edge of 257-512
+        rec(5, JobState.NODE_FAIL, n_gpus=4096, run_h=2.0),  # last bucket
+    ]
+    out = analysis.goodput_loss_by_size(records)
+    assert out["1-8"]["failure_gpu_h"] == pytest.approx(8 * 0.5)
+    assert out["9-256"]["failure_gpu_h"] == pytest.approx((9 + 256) * 0.5)
+    assert out["257-512"]["failure_gpu_h"] == pytest.approx(257 * 0.5)
+    assert out["2049-4096"]["failure_gpu_h"] == pytest.approx(4096 * 0.5)
+
+
+def test_goodput_loss_by_size_splits_orders_and_hw():
+    records = [
+        # hw-attributed FAILED counts as failure loss...
+        rec(1, JobState.FAILED, n_gpus=16, run_h=4.0, hw=True),
+        # ...plain user FAILED does not
+        rec(2, JobState.FAILED, n_gpus=16, run_h=4.0),
+        # second-order preemption lands in the preemption column
+        rec(3, JobState.PREEMPTED, n_gpus=16, run_h=4.0, preempted_by=1),
+        # non-cascade preemption is excluded
+        rec(4, JobState.PREEMPTED, n_gpus=16, run_h=4.0),
+    ]
+    out = analysis.goodput_loss_by_size(records)
+    assert out["9-256"]["failure_gpu_h"] == pytest.approx(8.0)
+    assert out["9-256"]["preemption_gpu_h"] == pytest.approx(8.0)
+    # losses cap at half the assumed checkpoint interval, not the runtime
+    short = analysis.goodput_loss_by_size(
+        [rec(1, JobState.NODE_FAIL, n_gpus=8, run_h=0.25)])
+    assert short["1-8"]["failure_gpu_h"] == pytest.approx(8 * 0.25)
+
+
+# -- failure_rate_timeline --------------------------------------------------
+def test_failure_rate_timeline_day_bin_edges():
+    n_nodes, horizon = 100, 10.0
+    faults = [
+        FakeFault(0.0, "a"),                 # day 0 (inclusive left edge)
+        FakeFault(86400.0 - 1e-3, "a"),      # still day 0
+        FakeFault(86400.0, "a"),             # exactly day 1
+        FakeFault(86400.0 * 9.999, "a"),     # last in-horizon day
+        FakeFault(86400.0 * 10.0, "a"),      # beyond horizon: dropped
+    ]
+    days, rates = analysis.failure_rate_timeline(
+        faults, n_nodes, horizon, window_days=1.0)
+    assert len(days) == 10
+    daily = rates["a"] * n_nodes / 1000.0    # undo per-1000-node scaling
+    # window=1 day means no smoothing: raw per-day counts
+    assert daily[0] == pytest.approx(2.0)
+    assert daily[1] == pytest.approx(1.0)
+    assert daily[9] == pytest.approx(1.0)
+    assert daily[2:9].sum() == pytest.approx(0.0)
+    assert sum(r.sum() for r in rates.values()) * n_nodes / 1000.0 \
+        == pytest.approx(4.0)
+
+
+def test_failure_rate_timeline_rolling_window_conserves_mass():
+    n_nodes = 50
+    faults = [FakeFault(86400.0 * 5.2, "ib"), FakeFault(86400.0 * 5.7, "ib")]
+    days, rates = analysis.failure_rate_timeline(
+        faults, n_nodes, 30.0, window_days=30.0)
+    smoothed = rates["ib"] * n_nodes / 1000.0
+    # centered 30-day window around day 5: only 21 of the 30 window days
+    # fall inside the horizon (np.convolve 'same' truncates at the edges),
+    # so each fault keeps 21/30 of its mass
+    assert smoothed.sum() == pytest.approx(2.0 * 21.0 / 30.0)
+    assert (smoothed >= 0).all()
+    # separate symptoms get separate series
+    days2, rates2 = analysis.failure_rate_timeline(
+        [FakeFault(0.0, "x"), FakeFault(0.0, "y")], n_nodes, 5.0)
+    assert set(rates2) == {"x", "y"}

@@ -8,7 +8,7 @@ from hypothesis import given, strategies as st
 from repro.core import mttf_model, stats
 from repro.core.ettr_model import (ETTRParams, daly_young_interval_s,
                                    ettr_contour, expected_ettr,
-                                   expected_ettr_simple,
+                                   expected_ettr_simple, expected_n_failures,
                                    required_w_cp_for_target)
 from repro.core.montecarlo import simulate_run_ettr
 
@@ -104,6 +104,35 @@ def test_daly_young_formula(r_f, w_cp):
     dt = daly_young_interval_s(n, r_f, w_cp)
     lam = n * r_f / 86400.0
     assert dt == pytest.approx(math.sqrt(2 * w_cp / lam), rel=1e-9)
+
+
+def test_w_cp_zero_free_checkpoint_limit():
+    """w_cp=0 degenerates the Daly-Young interval to 0; the model must hit
+    the free-checkpoint limit (w/dt -> 0), not a division blowup."""
+    p = ETTRParams(n_nodes=512, r_f=6.50e-3, w_cp_s=0.0, u0_s=300.0,
+                   runtime_s=7 * 86400)
+    assert p.resolved_dt_s() == 0.0
+    e = expected_ettr(p)
+    es = expected_ettr_simple(p)
+    nf = expected_n_failures(p)
+    for v in (e, es, nf):
+        assert math.isfinite(v), (e, es, nf)
+    assert 0.0 < e <= 1.0 and 0.0 < es <= 1.0 and nf > 0.0
+    # free checkpoints dominate costly ones; no lost work, no write tax
+    costly = ETTRParams(n_nodes=512, r_f=6.50e-3, w_cp_s=300.0, u0_s=300.0,
+                        runtime_s=7 * 86400)
+    assert e > expected_ettr(costly)
+    assert nf <= expected_n_failures(costly)
+    # the limit matches the closed form with both overhead terms zeroed
+    lam = p.lam
+    u0_d = 300.0 / 86400.0
+    assert es == pytest.approx(1.0 - lam * u0_d)
+    # an explicit interval with w_cp=0 still pays the mid-interval loss
+    explicit = ETTRParams(n_nodes=512, r_f=6.50e-3, w_cp_s=0.0, u0_s=300.0,
+                          dt_cp_s=3600.0, runtime_s=7 * 86400)
+    assert expected_ettr(explicit) < e
+    with pytest.raises(ValueError):
+        ETTRParams(n_nodes=512, w_cp_s=-1.0).resolved_dt_s()
 
 
 def test_contour_grid_shape_and_monotonicity():

@@ -1,0 +1,259 @@
+"""Mitigation lab: hook-contract, policy behavior, and sweep regression
+gates.
+
+The load-bearing guarantee is seed-equivalence: a no-op policy must leave
+the event-driven engine bit-for-bit identical to running without one —
+hooks may not consume engine RNG or push events unless they intervene.
+"""
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.cluster import analysis
+from repro.cluster.scheduler import ClusterSim
+from repro.cluster.workload import ClusterSpec
+from repro.core.metrics import JobState
+from repro.mitigations import MitigationPolicy, available_policies, make_policy
+from repro.mitigations.sweep import scaled_spec, sweep
+
+# small cluster with a heavy lemon load: repeat offenders appear within days
+LEMON_SPEC = ClusterSpec("RSC-2", n_nodes=120, jobs_per_day=520,
+                         target_utilization=0.85, r_f=6.5e-3,
+                         lemon_fraction=0.03, lemon_rate_multiplier=60.0)
+
+
+def _run(spec, seed=7, days=4.0, policy=None):
+    sim = ClusterSim(spec, horizon_days=days, seed=seed, policy=policy)
+    sim.run()
+    return sim
+
+
+# -- hook contract ----------------------------------------------------------
+def test_noop_policy_bit_for_bit():
+    """Acceptance gate: a no-op policy reproduces the bare engine's output
+    exactly — records, fault log, drain log, node histories."""
+    bare = _run(LEMON_SPEC)
+    noop = _run(LEMON_SPEC, policy=make_policy("baseline"))
+    assert bare.records == noop.records
+    assert bare.fault_log == noop.fault_log
+    assert bare.drain_log == noop.drain_log
+    assert bare.lemon_removal_log == noop.lemon_removal_log
+    assert bare.histories == noop.histories
+    assert bare.free == noop.free and bare.node_ok == noop.node_ok
+
+
+def test_hooks_fire_at_contract_points():
+    class Counting(MitigationPolicy):
+        def __init__(self):
+            self.bound = 0
+            self.counts = {"fault": 0, "drain": 0, "repair": 0,
+                           "sched": 0, "requeue": 0, "timer": 0}
+
+        def bind(self, sim):
+            self.bound += 1
+            sim.push_policy_timer(3600.0, "tick")
+
+        def on_fault(self, sim, t, fault):
+            self.counts["fault"] += 1
+
+        def on_node_drain(self, sim, t, node_id, reason):
+            self.counts["drain"] += 1
+
+        def on_node_repair(self, sim, t, node_id):
+            self.counts["repair"] += 1
+
+        def on_schedule_pass(self, sim, t):
+            self.counts["sched"] += 1
+
+        def on_job_requeue(self, sim, t, run, state):
+            self.counts["requeue"] += 1
+            assert isinstance(state, JobState)
+
+        def on_timer(self, sim, t, tag):
+            assert tag == "tick"
+            self.counts["timer"] += 1
+
+    pol = Counting()
+    sim = _run(LEMON_SPEC, policy=pol)
+    assert pol.bound == 1
+    assert pol.counts["fault"] == len(sim.fault_log) > 0
+    assert pol.counts["drain"] == len(sim.drain_log) > 0
+    assert pol.counts["timer"] == 1
+    assert pol.counts["sched"] > 0 and pol.counts["repair"] > 0
+    # every requeue hook corresponds to a non-final attempt of some run
+    from collections import Counter
+
+    per_run = Counter(r.run_id for r in sim.records)
+    assert pol.counts["requeue"] >= sum(n - 1 for n in per_run.values()
+                                        if n > 1) > 0
+
+
+def test_registry_lists_and_rejects():
+    names = available_policies()
+    for expected in ("baseline", "lemon_eviction", "health_gate",
+                     "warm_spare", "preemptive_restart", "checkpoint_fixed",
+                     "checkpoint_optimal", "checkpoint_adaptive"):
+        assert expected in names
+    with pytest.raises(KeyError, match="lemon_eviction"):
+        make_policy("not_a_policy")
+
+
+# -- concrete policies ------------------------------------------------------
+def test_lemon_eviction_policy_drains_repeat_offenders():
+    f0s, f1s, evictions = [], [], 0
+    for seed in (3, 11, 23):
+        base = _run(LEMON_SPEC, seed=seed, days=5.0)
+        pol = make_policy("lemon_eviction", seed=seed)
+        mit = _run(LEMON_SPEC, seed=seed, days=5.0, policy=pol)
+        assert len(pol.evictions) == len(mit.lemon_removal_log)
+        evictions += len(pol.evictions)
+        f0s.append(analysis.large_job_failure_rate(base.records, 64))
+        f1s.append(analysis.large_job_failure_rate(mit.records, 64))
+    assert evictions >= 3
+    # across seeds, eviction must not hurt and should usually help
+    assert np.mean(f1s) <= np.mean(f0s) + 0.01, (f0s, f1s)
+
+
+def test_warm_spare_pool_holds_and_activates():
+    pol = make_policy("warm_spare", seed=0, k=6)
+    sim = _run(LEMON_SPEC, policy=pol)
+    assert pol.k == 6
+    assert len(pol.activations) > 0, "faults must trigger spare activation"
+    assert len(pol.pool) <= pol.k
+    assert pol.reclaimed > 0, "repairs must refill the pool"
+    # pool nodes are genuinely out of scheduling
+    for node_id in pol.pool:
+        assert not sim.node_ok[node_id]
+        assert not sim.node_jobs[node_id]
+
+
+def test_health_gate_serves_probation():
+    pol = make_policy("health_gate", seed=0, min_recent_faults=2,
+                      probation_s=6 * 3600.0, residual_fault_prob=0.8)
+    sim = _run(LEMON_SPEC, policy=pol)
+    assert len(pol.gate_log) > 0, "repeat offenders must get gated"
+    # gated nodes are real repeat offenders: >=2 faults in-window by gate time
+    for t, node_id, symptom in pol.gate_log:
+        faults_before = [f for f in sim.fault_log
+                         if f.node_id == node_id and f.t <= t]
+        assert len(faults_before) >= 2
+
+
+def test_preemptive_restart_requeues_without_node_fail():
+    pol = make_policy("preemptive_restart", seed=0, degraded_threshold=2,
+                      window_days=4.0, cooldown_s=3600.0)
+    sim = _run(LEMON_SPEC, policy=pol)
+    assert len(pol.restarts) > 0
+    # controlled restarts surface as REQUEUED attempts, never NODE_FAIL
+    assert any(r.state == JobState.REQUEUED for r in sim.records)
+    # escalation: repeated restarts of one node lengthen remediation
+    by_node = {}
+    for t, node_id, dur in pol.restarts:
+        by_node.setdefault(node_id, []).append(dur)
+    for durs in by_node.values():
+        assert durs == sorted(durs)
+
+
+def test_adaptive_checkpoint_policy_tracks_observed_rate():
+    from repro.checkpoint.manager import (AdaptiveCheckpointPolicy,
+                                          CheckpointPolicy)
+
+    nominal = CheckpointPolicy(n_nodes=64, r_f_per_node_day=6.5e-3)
+    adaptive = AdaptiveCheckpointPolicy(n_nodes=64, r_f_per_node_day=6.5e-3)
+    # no observations: exactly the nominal Daly-Young pacing
+    assert adaptive.interval_s() == nominal.interval_s()
+    # observed rate 20x nominal: the interval must tighten
+    adaptive.observe(n_failures=6.5e-3 * 20 * 4000, node_days=4000)
+    assert adaptive.r_f_effective > 5 * 6.5e-3
+    assert adaptive.interval_s() < nominal.interval_s()
+
+
+def test_checkpoint_cadence_modes():
+    pol_fix = make_policy("checkpoint_fixed", seed=0, dt_s=1234.0)
+    pol_opt = make_policy("checkpoint_optimal", seed=0)
+    sim = _run(LEMON_SPEC, policy=pol_opt, days=2.0)
+    assert pol_fix.checkpoint_interval_s(sim, 512) == 1234.0
+    # optimal tightens the interval as the realized rate grows
+    slow = pol_opt.checkpoint_interval_s(sim, 512, realized_rf=6.5e-3)
+    fast = pol_opt.checkpoint_interval_s(sim, 512, realized_rf=0.5)
+    assert fast < slow
+    from repro.mitigations.policies import CheckpointCadencePolicy
+
+    with pytest.raises(ValueError):
+        CheckpointCadencePolicy(mode="bogus")
+
+
+# -- sweep harness ----------------------------------------------------------
+def test_scaled_spec_caps_job_mix():
+    from repro.cluster.workload import WorkloadGenerator
+
+    spec = scaled_spec(512)
+    assert spec.n_nodes == 64 and spec.max_job_gpus == 512
+    gen = WorkloadGenerator(spec, seed=0)
+    arr = gen.generate_arrays(2.0)
+    assert int(arr.n_gpus.max()) <= 512
+    # uncapped specs keep the full paper mix (seed behavior preserved)
+    gen_full = WorkloadGenerator(
+        ClusterSpec("RSC-1", n_nodes=64, jobs_per_day=230.0), seed=0)
+    assert max(gen_full.mix) == 4096
+
+
+def test_sweep_quick_grid_and_baseline_band():
+    res = sweep(policies=["baseline", "lemon_eviction"],
+                gpus_list=[256, 512], seeds=(0, 1), horizon_days=3.0,
+                min_hours=2.0, procs=2)
+    assert len(res.cells) == 8
+    for c in res.cells:
+        assert c.n_records > 50
+        assert not math.isnan(c.ettr_sim), c
+        assert 0.0 < c.ettr_sim <= 1.0
+        # regression band: measured ETTR lands within the analytical band
+        # (calibrated on seeds 0-4; see benchmarks/fig13_mitigations.py)
+        assert c.ettr_model - 0.10 <= c.ettr_sim <= c.ettr_model + 0.05, c
+    agg = {(r["policy"], r["n_gpus"]): r for r in res.aggregate()}
+    assert "d_ettr" in agg[("lemon_eviction", 256)]
+    assert "d_ettr" not in agg[("baseline", 256)]
+    assert "ETTR" in res.table()
+
+
+def test_sweep_multiprocessing_matches_serial():
+    kw = dict(policies=["baseline"], gpus_list=[256], seeds=(0, 1),
+              horizon_days=2.0, min_hours=2.0)
+    serial = sweep(procs=0, **kw)
+    pooled = sweep(procs=2, **kw)
+    for cs, cp in zip(serial.cells, pooled.cells):
+        assert (cs.policy, cs.n_gpus, cs.seed) == (cp.policy, cp.n_gpus,
+                                                   cp.seed)
+        assert cs.ettr_sim == pytest.approx(cp.ettr_sim, abs=1e-12)
+        assert cs.n_records == cp.n_records
+
+
+def test_fig13_quick_smoke(repo_root):
+    """Tier-1 guard: `benchmarks.run --only fig13_mitigations --quick` runs
+    end-to-end (catches API drift across the mitigation stack)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo_root, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only",
+         "fig13_mitigations", "--quick"],
+        cwd=repo_root, env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "fig13_mitigations" in proc.stdout
+    assert "ettr" in proc.stdout
+
+
+def test_run_py_unknown_only_errors(repo_root):
+    """Satellite: --only with an unregistered name must fail loudly and
+    list the registered benchmarks (it used to exit 0 silently)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo_root, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "no_such_bench"],
+        cwd=repo_root, env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode != 0
+    assert "no_such_bench" in proc.stderr
+    assert "sim_bench" in proc.stderr and "fig13_mitigations" in proc.stderr
