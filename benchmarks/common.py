@@ -60,8 +60,16 @@ def all_benchmarks() -> dict:
     return dict(_REGISTRY)
 
 
-# shared simulator fixtures (scaled for CPU wall-time; rates match paper)
+# shared simulator fixtures (scaled for CPU wall-time; rates match paper).
+# Every shared sim runs with a TraceRecorder attached (bit-identical to an
+# unrecorded run, regression-tested in tests/test_trace.py) so any figure
+# benchmark can consume the trace via get_trace().
 _SIM_CACHE: dict = {}
+_TRACE_CACHE: dict = {}
+
+
+def _sim_key(cluster, days, seed, kw):
+    return (cluster, days, seed, json.dumps(kw, sort_keys=True, default=str))
 
 
 def get_sim(cluster: str = "RSC-1", days: float = 8.0, seed: int = 0,
@@ -69,16 +77,28 @@ def get_sim(cluster: str = "RSC-1", days: float = 8.0, seed: int = 0,
     """Scaled cluster sim: node count /5, rates preserved."""
     from repro.cluster.scheduler import ClusterSim
     from repro.cluster.workload import RSC1, RSC2
+    from repro.trace import TraceRecorder
     import dataclasses
 
-    key = (cluster, days, seed, json.dumps(kw, sort_keys=True, default=str))
+    key = _sim_key(cluster, days, seed, kw)
     if key in _SIM_CACHE:
         return _SIM_CACHE[key]
     spec0 = RSC1 if cluster == "RSC-1" else RSC2
     spec = dataclasses.replace(
         spec0, n_nodes=spec0.n_nodes // 5,
         jobs_per_day=spec0.jobs_per_day / 5)
-    sim = ClusterSim(spec, horizon_days=days, seed=seed, **kw)
+    sim = ClusterSim(spec, horizon_days=days, seed=seed,
+                     recorder=TraceRecorder(), **kw)
     sim.run()
     _SIM_CACHE[key] = sim
     return sim
+
+
+def get_trace(cluster: str = "RSC-1", days: float = 8.0, seed: int = 0,
+              **kw):
+    """The shared sim's recorded trace (record once, analyze many)."""
+    key = _sim_key(cluster, days, seed, kw)
+    if key not in _TRACE_CACHE:
+        sim = get_sim(cluster, days, seed, **kw)
+        _TRACE_CACHE[key] = sim.recorder.finalize(sim)
+    return _TRACE_CACHE[key]

@@ -1,17 +1,20 @@
-"""Figure 3: scheduler job-status breakdown by jobs and GPU runtime."""
-from benchmarks.common import benchmark, get_sim
+"""Figure 3: scheduler job-status breakdown by jobs and GPU runtime.
+
+Trace-driven: analyzes the shared sim's recorded trace (record trace ->
+analyze trace), not in-engine counters."""
+from benchmarks.common import benchmark, get_trace
 from repro.cluster import analysis
 
 
 @benchmark("fig3_job_status")
 def run(rep):
-    sim = get_sim("RSC-1")
-    sb = analysis.status_breakdown(sim.records)
+    trace = get_trace("RSC-1")
+    sb = analysis.status_breakdown(trace)
     for state, frac in sorted(sb["jobs"].items(), key=lambda kv: -kv[1]):
         rep.add(f"jobs.{state}", round(frac, 4))
     for state, frac in sorted(sb["gpu_time"].items(), key=lambda kv: -kv[1]):
         rep.add(f"gpu_time.{state}", round(frac, 4))
-    imp = analysis.hw_impact(sim.records)
+    imp = analysis.hw_impact(trace)
     rep.add("hw_attributed.job_fraction", round(imp["hw_job_fraction"], 5),
             "paper: ~0.2%")
     rep.add("hw_attributed.runtime_fraction",

@@ -1,14 +1,16 @@
-"""Figure 4: attributed hardware failures per GPU-hour by symptom."""
-from benchmarks.common import benchmark, get_sim
+"""Figure 4: attributed hardware failures per GPU-hour by symptom.
+
+Trace-driven: rates and denominators come from each cluster's recorded
+trace (jobs + faults tables and meta), not from the live sim object."""
+from benchmarks.common import benchmark, get_trace
 from repro.cluster import analysis
 
 
 @benchmark("fig4_attribution")
 def run(rep):
     for cluster in ("RSC-1", "RSC-2"):
-        sim = get_sim(cluster)
-        rates = analysis.attribution_rates(
-            sim.records, sim.fault_log, sim.spec.n_gpus, sim.horizon_s)
+        trace = get_trace(cluster)
+        rates = analysis.attribution_rates(trace)
         for sym, rate in list(rates.items())[:8]:
             rep.add(f"{cluster}.{sym}", f"{rate:.3e} /GPU-h")
         top4 = set(list(rates)[:4])
@@ -19,10 +21,10 @@ def run(rep):
                         "gpu_memory_errors", "pcie_errors",
                         "gpu_unavailable"}) >= 2,
             ",".join(top4))
-    s1 = get_sim("RSC-1")
-    s2 = get_sim("RSC-2")
-    r1 = len(s1.fault_log) / (s1.spec.n_nodes * s1.horizon_s / 86400)
-    r2 = len(s2.fault_log) / (s2.spec.n_nodes * s2.horizon_s / 86400)
+    t1 = get_trace("RSC-1")
+    t2 = get_trace("RSC-2")
+    r1 = t1.n_rows("faults") / (t1.n_nodes * t1.horizon_days)
+    r2 = t2.n_rows("faults") / (t2.n_nodes * t2.horizon_days)
     rep.add("RSC-1 node failure rate /1000 node-days", round(r1 * 1000, 2),
             "paper: 6.50")
     rep.add("RSC-2 node failure rate /1000 node-days", round(r2 * 1000, 2),

@@ -1,17 +1,16 @@
 """Figure 5: failure-rate evolution with episodes + health-check
 introductions ('new health checks expose new failure modes').
 
-Runs its own scaled long-horizon sim (150 days, 200 nodes) with the
-RSC-1-like episode schedule compressed into the window."""
-import dataclasses
-
+Runs its own scaled long-horizon sim (100 days, 150 nodes) with the
+RSC-1-like episode schedule compressed into the window; the analysis is
+trace-driven (faults table + meta of the recorded trace)."""
 import numpy as np
 
 from benchmarks.common import benchmark
 from repro.cluster import analysis
 from repro.cluster.failures import Episode
-from repro.cluster.scheduler import ClusterSim
 from repro.cluster.workload import ClusterSpec
+from repro.trace import simulate_trace
 
 DAYS = 100.0
 EPISODES = (
@@ -26,11 +25,10 @@ CHECKS_INTRODUCED = {"filesystem_mount": 42.0, "gpu_driver_firmware": 20.0}
 def run(rep):
     spec = ClusterSpec("RSC-1", n_nodes=150, jobs_per_day=500,
                        target_utilization=0.8, r_f=6.5e-3)
-    sim = ClusterSim(spec, horizon_days=DAYS, seed=1,
-                     episodes=EPISODES, check_introduced=CHECKS_INTRODUCED)
-    sim.run()
-    days, rates = analysis.failure_rate_timeline(
-        sim.fault_log, spec.n_nodes, DAYS)
+    _, trace = simulate_trace(spec, horizon_days=DAYS, seed=1,
+                              episodes=EPISODES,
+                              check_introduced=CHECKS_INTRODUCED)
+    days, rates = analysis.failure_rate_timeline(trace)
     total = np.zeros(len(days))
     for s, r in rates.items():
         total += r
@@ -49,7 +47,7 @@ def run(rep):
         rep.add("ib_spike_multiplier", round(during / max(before, 1e-3), 1))
         rep.check("IB-link episode visible (Fig 5 summer spike)",
                   during > 1.5 * max(before, 0.05))
-    mount_faults = [f for f in sim.fault_log
+    mount_faults = [f for f in trace.fault_records()
                     if f.symptom == "filesystem_mount"]
     pre = [f for f in mount_faults
            if f.t / 86400 < CHECKS_INTRODUCED["filesystem_mount"]]

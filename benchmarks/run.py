@@ -15,7 +15,7 @@ from benchmarks import (fig3_job_status, fig4_attribution, fig5_timeline,  # noq
                         fig6_job_mix, fig7_mttf, fig8_goodput_loss,
                         fig9_ettr, fig10_contours, fig12_adaptive_routing,
                         fig13_mitigations, kernel_bench, roofline_table,
-                        runtime_ettr, sim_bench, table2_lemon)
+                        runtime_ettr, sim_bench, table2_lemon, trace_bench)
 from benchmarks import common
 from benchmarks.common import all_benchmarks
 

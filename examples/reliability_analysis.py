@@ -1,9 +1,14 @@
-"""Cluster-operator workflow: simulate an RSC-like cluster, then run the
-paper's full §III analysis — status mix, attribution, MTTF curve + CIs,
-ETTR, goodput cascades — and §IV mitigations (lemon detection).
+"""Cluster-operator workflow: simulate an RSC-like cluster (recording its
+trace), then run the paper's full §III analysis — status mix, attribution,
+MTTF curve + CIs, ETTR, goodput cascades — and §IV mitigations (lemon
+detection).  With --trace, skip the simulation and run the full report on
+a saved (.npz/.jsonl) or ingested (Philly-style .csv) trace instead.
 
   PYTHONPATH=src python examples/reliability_analysis.py [--days 8]
   PYTHONPATH=src python examples/reliability_analysis.py --mitigations
+  PYTHONPATH=src python examples/reliability_analysis.py --save-trace run.npz
+  PYTHONPATH=src python examples/reliability_analysis.py --trace run.npz
+  PYTHONPATH=src python examples/reliability_analysis.py --trace jobs.csv
 """
 import argparse
 import sys
@@ -26,30 +31,72 @@ def main() -> None:
     ap.add_argument("--mitigations", action="store_true",
                     help="run a mitigation-lab what-if: lemon eviction as a "
                          "live scheduler policy (repro.mitigations)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="skip the simulation: run the full Fig. 3-9 "
+                         "report on a saved (.npz/.jsonl) or ingested "
+                         "(Philly-style .csv) trace")
+    ap.add_argument("--save-trace", default=None, metavar="PATH",
+                    help="save the simulated trace (.npz or .jsonl) for "
+                         "later re-analysis")
     args = ap.parse_args()
+    if args.save_trace and not args.save_trace.endswith((".npz", ".jsonl")):
+        ap.error(f"--save-trace {args.save_trace!r}: use a .npz or .jsonl "
+                 "suffix (checked up front so a long run is not wasted)")
+    if args.trace and args.mitigations:
+        ap.error("--mitigations runs live scheduler policies and needs a "
+                 "simulation; it cannot be combined with --trace")
+
+    if args.trace:
+        from repro.trace.report import compute_report, load_any, print_report
+
+        trace = load_any(args.trace)
+        print(f"report from trace {args.trace} "
+              f"(source: {trace.meta.get('source', '?')})")
+        if args.save_trace:
+            from repro.trace import io as trace_io
+
+            trace_io.save(trace, args.save_trace)
+            print(f"trace re-saved to {args.save_trace}")
+        print_report(compute_report(trace))
+        return
+
+    from repro.trace import TraceRecorder
 
     spec = ClusterSpec("RSC-1", n_nodes=args.nodes,
                        jobs_per_day=args.nodes * 3.6,
                        target_utilization=0.83, r_f=6.5e-3)
     print(f"simulating {spec.name}: {spec.n_nodes} nodes, "
           f"{args.days:.0f} days, r_f={spec.r_f*1000:.2f}/1000 node-days...")
-    sim = ClusterSim(spec, horizon_days=args.days, seed=0)
+    recorder = TraceRecorder()
+    sim = ClusterSim(spec, horizon_days=args.days, seed=0, recorder=recorder)
     sim.run()
-    print(f"  {len(sim.records)} job attempts, {len(sim.fault_log)} faults, "
+    # record trace -> analyze trace: all §III metrics below consume the
+    # trace object, not in-engine counters
+    trace = recorder.finalize(sim)
+    print(f"  {trace.n_rows('jobs')} job attempts, "
+          f"{trace.n_rows('faults')} faults, "
           f"{len(sim.drain_log)} node drains\n")
+    if args.save_trace:
+        from repro.trace import io as trace_io
+
+        trace_io.save(trace, args.save_trace)
+        print(f"  trace saved to {args.save_trace} "
+              f"(re-analyze: python -m repro.trace.report "
+              f"{args.save_trace})\n")
 
     print("== Figure 3: job status mix ==")
-    sb = analysis.status_breakdown(sim.records)
+    sb = analysis.status_breakdown(trace)
     for k, v in sorted(sb["jobs"].items(), key=lambda kv: -kv[1]):
         print(f"  {k:14s} {v:6.1%} of jobs, "
               f"{sb['gpu_time'].get(k, 0):6.1%} of GPU time")
-    imp = analysis.hw_impact(sim.records)
+    imp = analysis.hw_impact(trace)
     print(f"  HW-attributed: {imp['hw_job_fraction']:.2%} of jobs, "
           f"{imp['hw_runtime_fraction']:.1%} of runtime (Obs 4)\n")
 
     print("== Figure 7: MTTF by job size (90% Gamma CIs) ==")
-    rf = mttf_model.fit_r_f(sim.records, min_gpus=64) or spec.r_f
-    for p in mttf_model.empirical_mttf_curve(sim.records):
+    records = trace.job_records()
+    rf = mttf_model.fit_r_f(records, min_gpus=64) or spec.r_f
+    for p in mttf_model.empirical_mttf_curve(records):
         if p.n_failures >= 1 and p.n_gpus >= 64:
             th = mttf_model.projected_mttf_hours(p.n_gpus, rf)
             print(f"  {p.n_gpus:5d} GPUs: {p.mttf_hours:8.1f} h "
@@ -61,7 +108,7 @@ def main() -> None:
           f"131k GPUs -> {mttf_model.projected_mttf_hours(131072, rf):.2f} h\n")
 
     print("== Figure 8: goodput loss ==")
-    casc = analysis.preemption_cascades(sim.records)
+    casc = analysis.preemption_cascades(trace)
     print(f"  failure loss:    {casc['failure_loss_gpu_h']:.0f} GPU-h")
     print(f"  preemption loss: {casc['preemption_loss_gpu_h']:.0f} GPU-h "
           f"({casc['second_order_fraction']:.0%} second-order)\n")
@@ -74,8 +121,8 @@ def main() -> None:
                      enable_lemon_detection=True,
                      lemon_scan_period_days=1.0, lemon_detector=det)
     mit.run()
-    f0 = analysis.large_job_failure_rate(sim.records, 128)
-    f1 = analysis.large_job_failure_rate(mit.records, 128)
+    f0 = analysis.large_job_failure_rate(trace, 128)
+    f1 = analysis.large_job_failure_rate(mit, 128)
     print(f"  large-job (128+) failure rate: {f0:.1%} -> {f1:.1%} "
           f"with {len(mit.lemon_removal_log)} lemons removed "
           f"(paper: 14% -> 4%)")
@@ -89,10 +136,9 @@ def main() -> None:
         what_if = ClusterSim(spec, horizon_days=args.days, seed=0,
                              policy=pol)
         what_if.run()
-        w0 = analysis.large_job_failure_rate(sim.records, 128)
-        w1 = analysis.large_job_failure_rate(what_if.records, 128)
+        w1 = analysis.large_job_failure_rate(what_if, 128)
         print(f"  policy path: {len(pol.evictions)} evictions, large-job "
-              f"failure rate {w0:.1%} -> {w1:.1%}")
+              f"failure rate {f0:.1%} -> {w1:.1%}")
         n_gpus = spec.n_gpus
         base = run_cell("baseline", n_gpus, seed=0, horizon_days=args.days)
         mitc = run_cell("lemon_eviction", n_gpus, seed=0,

@@ -1,17 +1,61 @@
-"""Figure-oriented summaries over simulator output (paper §III)."""
+"""Figure-oriented summaries over cluster traces (paper §III).
+
+Every metric here computes from a *trace* — the workload-agnostic record
+of job attempts and faults defined by ``repro.trace.schema`` — so the
+same analysis runs over a live ``ClusterSim``, a saved/ingested
+``Trace``, or a plain list of ``JobRecord`` objects.  The in-simulator
+path is "record trace -> analyze trace": the trace-derived numbers are
+regression-tested exactly equal to the legacy in-engine counters on
+identical seeds (tests/test_trace.py).
+
+Input normalization: functions taking job records accept a
+``repro.trace.Trace`` (jobs table, materialized via ``job_records()``),
+a ``ClusterSim`` (``.records``), or a ``list[JobRecord]``; functions
+taking faults likewise accept a ``Trace`` (faults table), a
+``ClusterSim`` (``.fault_log``), or a list of fault-like objects.
+"""
 from __future__ import annotations
 
 from collections import defaultdict
-from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.metrics import (GoodputLoss, JobRecord, JobState,
-                                goodput_loss, job_run_ettr, mttf_by_job_size)
+from repro.core.metrics import (JobRecord, JobState, goodput_loss,
+                                job_run_ettr)
 
 
-def status_breakdown(records: list[JobRecord]) -> dict[str, dict[str, float]]:
-    """Figure 3: share of jobs and of GPU-runtime per terminal state."""
+def _job_records(x) -> list[JobRecord]:
+    """Normalize a jobs input: ClusterSim -> .records, Trace ->
+    .job_records(), anything else is already a record list."""
+    recs = getattr(x, "records", None)
+    if recs is not None:
+        return recs
+    materialize = getattr(x, "job_records", None)
+    if materialize is not None:
+        return materialize()
+    return x
+
+
+def _fault_records(x):
+    """Normalize a faults input: ClusterSim -> .fault_log, Trace ->
+    .fault_records(), anything else is already a fault list."""
+    log = getattr(x, "fault_log", None)
+    if log is not None:
+        return log
+    materialize = getattr(x, "fault_records", None)
+    if materialize is not None:
+        return materialize()
+    return x
+
+
+def status_breakdown(records) -> dict[str, dict[str, float]]:
+    """Figure 3: share of jobs and of GPU-runtime per terminal state.
+
+    Trace inputs: jobs table (``state``, ``n_gpus``, ``start_t``/``end_t``
+    runtime).  Reproduces the paper's headline status mix (RSC-1: ~60%
+    COMPLETED / 24% FAILED / 10% CANCELLED by job count, Fig. 3 top) and
+    the GPU-time-weighted mix (Fig. 3 bottom)."""
+    records = _job_records(records)
     n = len(records)
     gpu_time = sum(r.run_time * r.n_gpus for r in records)
     by_state_jobs = defaultdict(float)
@@ -26,9 +70,16 @@ def status_breakdown(records: list[JobRecord]) -> dict[str, dict[str, float]]:
     }
 
 
-def hw_impact(records: list[JobRecord]) -> dict[str, float]:
-    """Observation 4: share of jobs / GPU-runtime affected by attributed
-    hardware failures."""
+def hw_impact(records) -> dict[str, float]:
+    """Observation 4 (§III): share of jobs / GPU-runtime affected by
+    attributed hardware failures.
+
+    Trace inputs: jobs table (``state``, ``hw_attributed``, ``run_id``).
+    A job counts as HW-failed when it ended NODE_FAIL, or FAILED with a
+    critical health check attributed; "runtime impacted" charges the whole
+    GPU-time of every job run touched by a HW event — the paper's <1% of
+    jobs vs 19% of runtime asymmetry."""
+    records = _job_records(records)
     n = len(records)
     gpu_time = sum(r.run_time * r.n_gpus for r in records)
     hw_jobs = [r for r in records
@@ -44,9 +95,28 @@ def hw_impact(records: list[JobRecord]) -> dict[str, float]:
     }
 
 
-def attribution_rates(records: list[JobRecord], fault_log,
-                      n_gpus_total: int, horizon_s: float) -> dict[str, float]:
-    """Figure 4: attributed failures per GPU-hour, by symptom."""
+def attribution_rates(records, fault_log=None, n_gpus_total=None,
+                      horizon_s=None) -> dict[str, float]:
+    """Figure 4: attributed failures per GPU-hour, by Table I symptom.
+
+    Trace inputs: jobs table (``state``, ``symptoms`` taxonomy labels);
+    normalization denominators ``n_gpus_total`` / ``horizon_s`` default
+    from trace meta (or ClusterSim spec) when omitted.  ``fault_log`` is
+    accepted for signature compatibility and ignored — the attributed
+    rates count the labels on the jobs a fault actually killed, not raw
+    fault events.  The paper's ranking: IB links, filesystem mounts, GPU
+    memory errors and PCIe errors dominate (Obs 5)."""
+    spec = getattr(records, "spec", None)     # ClusterSim carries a spec
+    if n_gpus_total is None:
+        n_gpus_total = (spec.n_gpus if spec is not None
+                        else getattr(records, "n_gpus", None))
+    if horizon_s is None:
+        horizon_s = getattr(records, "horizon_s", None)
+    if n_gpus_total is None or horizon_s is None:
+        raise ValueError("attribution_rates needs n_gpus_total and "
+                         "horizon_s (explicit, or from Trace meta / "
+                         "ClusterSim spec)")
+    records = _job_records(records)
     gpu_hours = n_gpus_total * horizon_s / 3600.0
     counts = defaultdict(int)
     for r in records:
@@ -56,9 +126,27 @@ def attribution_rates(records: list[JobRecord], fault_log,
             sorted(counts.items(), key=lambda kv: -kv[1])}
 
 
-def failure_rate_timeline(fault_log, n_nodes: int, horizon_days: float,
+def failure_rate_timeline(fault_log, n_nodes=None, horizon_days=None,
                           window_days: float = 30.0):
-    """Figure 5: failures per 1000 node-days, 30-day rolling, per symptom."""
+    """Figure 5: failures per 1000 node-days, 30-day rolling, per symptom.
+
+    Trace inputs: faults table (``t``, ``symptom``); ``n_nodes`` /
+    ``horizon_days`` default from trace meta when ``fault_log`` is a
+    ``Trace``.  Returns ``(days, {symptom: rate_series})`` — the paper's
+    "failure modes ebb and flow" evolution plot (Obs 6)."""
+    spec = getattr(fault_log, "spec", None)   # ClusterSim carries a spec
+    if n_nodes is None:
+        n_nodes = (spec.n_nodes if spec is not None
+                   else getattr(fault_log, "n_nodes", None))
+    if horizon_days is None:
+        horizon_days = getattr(fault_log, "horizon_days", None)
+        if horizon_days is None and spec is not None:
+            horizon_days = fault_log.horizon_s / 86400.0
+    if n_nodes is None or horizon_days is None:
+        raise ValueError("failure_rate_timeline needs n_nodes and "
+                         "horizon_days (explicit, or from Trace meta / "
+                         "ClusterSim spec)")
+    fault_log = _fault_records(fault_log)
     days = np.arange(0, horizon_days, 1.0)
     symptoms = sorted({f.symptom for f in fault_log})
     out = {s: np.zeros(len(days)) for s in symptoms}
@@ -75,8 +163,34 @@ def failure_rate_timeline(fault_log, n_nodes: int, horizon_days: float,
     return days, rates
 
 
-def preemption_cascades(records: list[JobRecord]) -> dict:
-    """Observation 9 / Figure 8: second-order preemption losses."""
+def job_size_mix(records) -> dict[int, dict[str, float]]:
+    """Figure 6 / Observation 7: share of job attempts and of GPU-time per
+    job size.
+
+    Trace inputs: jobs table (``n_gpus``, runtime).  On RSC-1 the smallest
+    half of jobs consumes a few percent of GPU-time while 1k+-GPU jobs
+    dominate it — the "medians lie" observation."""
+    records = _job_records(records)
+    n = len(records)
+    gpu_time = sum(r.run_time * r.n_gpus for r in records)
+    jobs = defaultdict(float)
+    time_share = defaultdict(float)
+    for r in records:
+        jobs[r.n_gpus] += 1
+        time_share[r.n_gpus] += r.run_time * r.n_gpus
+    return {size: {"job_fraction": jobs[size] / max(n, 1),
+                   "gpu_time_share": time_share[size] / max(gpu_time, 1e-9)}
+            for size in sorted(jobs)}
+
+
+def preemption_cascades(records) -> dict:
+    """Observation 9 / Figure 8: second-order preemption losses.
+
+    Trace inputs: jobs table (``state``, ``preempted_by`` instigator
+    links).  Splits lost GPU-hours into first-order (failures) and
+    second-order (healthy victims preempted by recovering failed jobs) —
+    the paper's preemption-cascade amplification."""
+    records = _job_records(records)
     loss = goodput_loss(records)
     total = loss.failure_loss_gpu_s + loss.preemption_loss_gpu_s
     return {
@@ -87,13 +201,17 @@ def preemption_cascades(records: list[JobRecord]) -> dict:
     }
 
 
-def goodput_loss_by_size(records: list[JobRecord],
-                         assumed_cp_interval: float = 3600.0):
-    """Figure 8: lost GPU-hours by job-size bucket, split first/second order."""
+def goodput_loss_by_size(records, assumed_cp_interval: float = 3600.0):
+    """Figure 8: lost GPU-hours by job-size bucket, split first/second
+    order.
+
+    Trace inputs: jobs table (``n_gpus``, ``state``, ``hw_attributed``,
+    ``preempted_by``).  Assumes hourly checkpoints, so each interruption
+    loses at most 30 min x GPUs — the paper's Fig. 8 accounting."""
+    records = _job_records(records)
     buckets = [(1, 8), (9, 256), (257, 512), (513, 1024), (1025, 2048),
                (2049, 4096)]
     out = {}
-    pre_ids = {r.preempted_by for r in records if r.preempted_by is not None}
     for lo, hi in buckets:
         f_loss = p_loss = 0.0
         for r in records:
@@ -110,10 +228,12 @@ def goodput_loss_by_size(records: list[JobRecord],
     return out
 
 
-def large_job_failure_rate(records: list[JobRecord],
-                           min_gpus: int = 512) -> float:
-    """Fraction of large-job attempts ending in NODE_FAIL/hw-FAILED
-    (the 14% -> 4% lemon-detection metric)."""
+def large_job_failure_rate(records, min_gpus: int = 512) -> float:
+    """§IV-A lemon-detection headline: fraction of large-job attempts
+    ending in NODE_FAIL / hw-attributed FAILED (the 14% -> 4% metric).
+
+    Trace inputs: jobs table (``n_gpus``, ``state``, ``hw_attributed``)."""
+    records = _job_records(records)
     big = [r for r in records if r.n_gpus >= min_gpus]
     if not big:
         return 0.0
@@ -123,18 +243,27 @@ def large_job_failure_rate(records: list[JobRecord],
     return len(bad) / len(big)
 
 
-def group_runs(records: list[JobRecord]) -> dict[int, list[JobRecord]]:
-    """Group scheduler records into job runs (requeued attempts share a
-    run_id) — the unit the ETTR analyses score."""
+def group_runs(records) -> dict[int, list[JobRecord]]:
+    """Group job attempts into *job runs* (§II-D: requeued attempts share
+    a ``run_id``) — the unit the ETTR/MTTF analyses score.
+
+    Trace inputs: jobs table (``run_id``)."""
+    records = _job_records(records)
     runs = defaultdict(list)
     for r in records:
         runs[r.run_id].append(r)
     return runs
 
 
-def run_ettrs(records: list[JobRecord], *, min_gpus: int = 256,
-              min_hours: float = 48.0, **ettr_kw):
-    """Figure 9: measured ETTR per qualifying job run."""
+def run_ettrs(records, *, min_gpus: int = 256, min_hours: float = 48.0,
+              **ettr_kw):
+    """Figure 9: measured ETTR per qualifying job run.
+
+    Trace inputs: jobs table via ``group_runs`` (run grouping, queue and
+    runtime per attempt, terminal states as §II-D interruptions).
+    Returns ``[(n_gpus, RunETTR), ...]`` for runs with at least
+    ``min_gpus`` GPUs and ``min_hours`` total runtime — compared against
+    the analytical ``core.ettr_model`` expectation in Fig. 9 / Obs 10."""
     runs = group_runs(records)
     out = []
     for run_id, jobs in runs.items():

@@ -39,6 +39,17 @@ bit-for-bit identical to running without the hooks: hooks never consume the
 simulator's RNG streams and a no-op never pushes events, so the lazy-tick
 and bucket-index invariants above survive untouched (regression-tested in
 tests/test_mitigations.py).
+
+Trace hook points (repro.trace): an optional ``recorder`` rides alongside
+the policy hooks and *streams* the events the engine does not already log —
+node state transitions (``on_node_event``: drain / repair / hold / release /
+evict) and per-tick scheduling-pass stats (``on_sched_pass``); job records
+and faults are column-ized from ``self.records`` / ``self.fault_log`` at
+``recorder.finalize(sim)``.  The recorder is a pure observer: it never
+consumes RNG and never pushes events, so a recorded run is bit-for-bit
+identical to an unrecorded one, and ``recorder=None`` costs one ``is not
+None`` check per hook site (zero-overhead-when-off; regression-tested in
+tests/test_trace.py, overhead-benchmarked in benchmarks/trace_bench.py).
 """
 from __future__ import annotations
 
@@ -92,11 +103,15 @@ class ClusterSim:
                  seed: int = 0, enable_lemon_detection: bool = False,
                  lemon_scan_period_days: float = 7.0,
                  lemon_detector: Optional[LemonDetector] = None,
-                 episodes=(), check_introduced=None, policy=None):
+                 episodes=(), check_introduced=None, policy=None,
+                 recorder=None):
         self.spec = spec
         # optional repro.mitigations.MitigationPolicy (duck-typed; the
         # scheduler never imports the mitigations package)
         self.policy = policy
+        # optional repro.trace.TraceRecorder (duck-typed, same reasoning)
+        self.recorder = recorder
+        self.seed = seed
         self.horizon_s = horizon_days * 86400.0
         self.rng = np.random.default_rng(seed + 1)
         self.gen = WorkloadGenerator(spec, seed=seed)
@@ -309,6 +324,8 @@ class ClusterSim:
         t0 = fault.t if fault else (now if now is not None else self._now)
         self.drain_log.append((t0, node_id, reason))
         self._push(t0 + repair_s, "repair", node_id)
+        if self.recorder is not None:
+            self.recorder.on_node_event(t0, node_id, "drain", reason)
         if self.policy is not None:
             self.policy.on_node_drain(self, t0, node_id, reason)
 
@@ -414,14 +431,16 @@ class ClusterSim:
             return expiry
         return _INF
 
-    def _schedule_pass(self, t: float) -> tuple[bool, bool]:
-        """One tick-aligned scheduling pass.  Returns (changed, blocked):
-        ``changed`` — at least one job was placed or preempted (so a retry
-        at the next tick can make further progress); ``blocked`` — a
-        preemption-eligible job is waiting only on the 2 h victim guard."""
+    def _schedule_pass(self, t: float) -> tuple[int, int, bool]:
+        """One tick-aligned scheduling pass.  Returns (n_started,
+        n_preempted, blocked): placements/preemptions > 0 mean progress
+        was made (so a retry at the next tick can make further progress);
+        ``blocked`` — a preemption-eligible job is waiting only on the 2 h
+        victim guard."""
         deferred = []
         scanned = 0
-        changed = False
+        n_started = 0
+        n_preempted = 0
         blocked_preemptor = False
         # once a preemption attempt at priority p fails, every eligible
         # victim below p has already been interrupted — later attempts at
@@ -438,8 +457,7 @@ class ClusterSim:
                     blocked_preemptor = True
                 else:
                     ok, n_victims = self._try_preempt(t, run)
-                    if n_victims:
-                        changed = True
+                    n_preempted += n_victims
                     if ok:
                         nodes = self._alloc_nodes(req.n_gpus)
                     else:
@@ -453,10 +471,10 @@ class ClusterSim:
                     break
                 continue
             self._start_job(t, run, nodes, submit_t=sub_t)
-            changed = True
+            n_started += 1
         for item in deferred:
             heapq.heappush(self.queue, item)
-        return changed, blocked_preemptor
+        return n_started, n_preempted, blocked_preemptor
 
     # -- lemon scan ---------------------------------------------------------
     def _lemon_scan(self, t: float) -> None:
@@ -477,6 +495,9 @@ class ClusterSim:
         already evicted."""
         if node_id in self.removed_lemons:
             return False
+        if self.recorder is not None:
+            self.recorder.on_node_event(t, node_id, "evict",
+                                        ",".join(tripped))
         self.lemon_removal_log.append((t, node_id, tuple(tripped)))
         self.removed_lemons.add(node_id)
         # replace with a healthy node: clear fault process lemon flag
@@ -501,6 +522,8 @@ class ClusterSim:
         self.node_ok[node_id] = False
         self.node_draining[node_id] = False
         self._reindex(node_id)
+        if self.recorder is not None:
+            self.recorder.on_node_event(self._now, node_id, "hold")
         return True
 
     def release_node(self, t: float, node_id: int) -> bool:
@@ -517,6 +540,8 @@ class ClusterSim:
         self.node_draining[node_id] = False
         self._reindex(node_id)
         self._arm_sched(t)
+        if self.recorder is not None:
+            self.recorder.on_node_event(t, node_id, "release")
         return True
 
     def restart_node(self, t: float, node_id: int,
@@ -551,6 +576,8 @@ class ClusterSim:
         self._arm_sched(t)
         self._push(self.faults.next_fault_time(node_id, t),
                    "fault_node", node_id)
+        if self.recorder is not None:
+            self.recorder.on_node_event(t, node_id, "repair")
 
     # -- main loop -----------------------------------------------------------
     def run(self) -> None:
@@ -564,6 +591,8 @@ class ClusterSim:
         n_arr = len(arr_t)
         ai = 0
 
+        if self.recorder is not None:
+            self.recorder.bind(self)
         if self.policy is not None:
             self.policy.bind(self)
         for i in range(self.spec.n_nodes):
@@ -578,6 +607,9 @@ class ClusterSim:
         events = self.events
         horizon = self.horizon_s
         running = self.running
+        # hoisted bound hook: the sched branch is the hottest recorder site
+        on_sched_pass = (None if self.recorder is None
+                         else self.recorder.on_sched_pass)
         while events or ai < n_arr:
             t_ev = events[0][0] if events else _INF
             # merge-iterate arrivals with the event heap: arrivals are
@@ -618,8 +650,15 @@ class ClusterSim:
                 # _pass_t absorbs same-tick re-arms from in-pass preemption
                 # releases: the changed/blocked retry logic below covers them
                 self._pass_t = t
-                changed, blocked = self._schedule_pass(t)
+                if on_sched_pass is None:
+                    n_started, n_preempted, blocked = self._schedule_pass(t)
+                else:
+                    n_queued = len(self.queue)
+                    n_started, n_preempted, blocked = self._schedule_pass(t)
+                    on_sched_pass(t, n_queued, n_started, n_preempted,
+                                  blocked)
                 self._pass_t = -1.0
+                changed = n_started > 0 or n_preempted > 0
                 if self.queue:
                     if changed:
                         # progress was made but jobs remain: continue at the
@@ -644,7 +683,13 @@ class ClusterSim:
                 if self.policy is not None:
                     act = self.policy.on_node_repair(self, t, node_id)
                     if act == POLICY_HOLD:
-                        continue   # policy keeps the node (warm spare pool)
+                        # policy keeps the node (warm spare pool); record
+                        # the hold so node-state sequences in the trace
+                        # stay reconstructable (drain -> hold -> release)
+                        if self.recorder is not None:
+                            self.recorder.on_node_event(t, node_id, "hold",
+                                                        "policy")
+                        continue
                     if act:        # health gate: delay return-to-service
                         self._push(t + float(act), "repair", node_id)
                         continue

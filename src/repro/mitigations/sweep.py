@@ -9,11 +9,18 @@ comparison isolates the checkpoint/restart terms the model actually
 captures).  Cells are independent, so the grid fans out over a
 ``multiprocessing`` pool.
 
+Every cell runs with a ``repro.trace.TraceRecorder`` attached and scores
+its metrics *from the recorded trace* (record trace -> analyze trace, the
+trace-layer contract); ``--save-traces DIR`` archives each cell's trace as
+npz so any cell can be re-analyzed later with
+``python -m repro.trace.report``.
+
 CLI:
 
   PYTHONPATH=src python -m repro.mitigations.sweep \\
       --policies baseline,lemon_eviction,checkpoint_optimal \\
-      --gpus 512,2048,8192 --seeds 2 --days 8 --procs 4
+      --gpus 512,2048,8192 --seeds 2 --days 8 --procs 4 \\
+      [--save-traces traces/]
 """
 from __future__ import annotations
 
@@ -35,6 +42,9 @@ from repro.core.ettr_model import ETTRParams, expected_ettr
 from repro.core.metrics import (goodput_loss, is_infra_failure, job_run_ettr,
                                 mttf)
 from repro.mitigations.policy import make_policy
+from repro.trace import TraceRecorder
+from repro.trace import io as trace_io
+from repro.trace.schema import Trace
 
 # RSC-1 scaling: 7.2k jobs/day on 2000 nodes, 83% target utilization
 JOBS_PER_NODE_DAY = 3.6
@@ -78,13 +88,15 @@ class CellResult:
     goodput: float             # (scheduled - failure/preemption loss)/capacity
     n_evicted: int
     extra: dict = field(default_factory=dict)
+    trace_path: Optional[str] = None   # npz archive (--save-traces)
 
 
-def _measured_and_modeled(sim: ClusterSim, policy, *, min_gpus: int,
-                          min_hours: float, r_f_nominal: float):
-    """Per qualifying run: measured ETTR (policy's checkpoint cadence) and
-    the two analytic predictions."""
-    runs = analysis.group_runs(sim.records)
+def _measured_and_modeled(sim: ClusterSim, trace: Trace, policy, *,
+                          min_gpus: int, min_hours: float,
+                          r_f_nominal: float):
+    """Per qualifying run (grouped from the cell's trace): measured ETTR
+    (policy's checkpoint cadence) and the two analytic predictions."""
+    runs = analysis.group_runs(trace)
     measured, modeled, modeled_nom = [], [], []
     for jobs in runs.values():
         g = jobs[0].n_gpus
@@ -120,14 +132,19 @@ def _measured_and_modeled(sim: ClusterSim, policy, *, min_gpus: int,
 def run_cell(policy_name: str, n_gpus: int, seed: int, *,
              horizon_days: float = 8.0, min_gpus: Optional[int] = None,
              min_hours: float = 12.0, policy_kwargs: Optional[dict] = None,
-             ) -> CellResult:
+             trace_dir: Optional[str] = None) -> CellResult:
+    """One grid cell: replay with the policy attached, record the trace,
+    and score every metric from it (optionally archiving the trace as npz
+    under ``trace_dir``)."""
     spec = scaled_spec(n_gpus)
     policy = make_policy(policy_name, seed=seed + 9000,
                          **(policy_kwargs or {}))
+    recorder = TraceRecorder()
     t0 = time.time()
     sim = ClusterSim(spec, horizon_days=horizon_days, seed=seed,
-                     policy=policy)
+                     policy=policy, recorder=recorder)
     sim.run()
+    trace = recorder.finalize(sim)
     wall = time.time() - t0
 
     if min_gpus is None:
@@ -136,33 +153,44 @@ def run_cell(policy_name: str, n_gpus: int, seed: int, *,
         # qualifying-run sample inside a days-long horizon
         min_gpus = max(64, n_gpus // 16)
     measured, modeled, modeled_nom = _measured_and_modeled(
-        sim, policy, min_gpus=min_gpus, min_hours=min_hours,
+        sim, trace, policy, min_gpus=min_gpus, min_hours=min_hours,
         r_f_nominal=spec.r_f)
 
-    large = [r for r in sim.records if r.n_gpus >= min_gpus]
+    records = trace.job_records()
+    large = [r for r in records if r.n_gpus >= min_gpus]
     infra = [r for r in large if is_infra_failure(r)]
     large_runtime_s = sum(r.run_time for r in large)
-    loss = goodput_loss(sim.records)
-    scheduled_gpu_s = sum(r.run_time * r.n_gpus for r in sim.records)
+    loss = goodput_loss(records)
+    scheduled_gpu_s = sum(r.run_time * r.n_gpus for r in records)
     capacity_gpu_s = spec.n_gpus * sim.horizon_s
     goodput = (scheduled_gpu_s - loss.failure_loss_gpu_s
                - loss.preemption_loss_gpu_s) / max(capacity_gpu_s, 1e-9)
 
-    extra = {}
+    extra = {"n_node_events": trace.n_rows("node_events"),
+             "n_sched_passes": trace.n_rows("sched_passes")}
     for attr in ("evictions", "activations", "restarts", "gate_log"):
         v = getattr(policy, attr, None)
         if v is not None:
             extra[f"n_{attr}"] = len(v)
+    trace_path = None
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
+        trace_path = os.path.join(
+            trace_dir, f"{policy_name}_{n_gpus}gpu_seed{seed}.npz")
+        trace_io.save(trace, trace_path)
+    n_evicted = int(np.sum(
+        trace.tables["node_events"]["event"] == "evict"))
     return CellResult(
         policy=policy_name, n_gpus=n_gpus, seed=seed, wall_s=round(wall, 2),
-        n_records=len(sim.records), n_faults=len(sim.fault_log),
+        n_records=len(records), n_faults=trace.n_rows("faults"),
         n_infra_failures=len(infra), n_runs_measured=len(measured),
         ettr_sim=float(np.mean(measured)) if measured else float("nan"),
         ettr_model=float(np.mean(modeled)) if modeled else float("nan"),
         ettr_model_nominal=(float(np.mean(modeled_nom)) if modeled_nom
                             else float("nan")),
         mttf_large_h=mttf(large_runtime_s / 3600.0, len(infra)),
-        goodput=goodput, n_evicted=len(sim.lemon_removal_log), extra=extra)
+        goodput=goodput, n_evicted=n_evicted, extra=extra,
+        trace_path=trace_path)
 
 
 def _cell_worker(args) -> CellResult:
@@ -258,11 +286,13 @@ def sweep(policies: Sequence[str] = DEFAULT_POLICIES,
           seeds: Sequence[int] = (0, 1), *, horizon_days: float = 8.0,
           min_gpus: Optional[int] = None, min_hours: float = 12.0,
           procs: int = 0,
-          policy_kwargs: Optional[dict[str, dict]] = None) -> SweepResult:
+          policy_kwargs: Optional[dict[str, dict]] = None,
+          trace_dir: Optional[str] = None) -> SweepResult:
     """Run the policy x scale x seed grid.  ``procs`` > 1 fans cells out
-    over a multiprocessing pool; 0/1 runs serially in-process."""
+    over a multiprocessing pool; 0/1 runs serially in-process.
+    ``trace_dir`` archives each cell's trace as npz."""
     kw = dict(horizon_days=horizon_days, min_gpus=min_gpus,
-              min_hours=min_hours)
+              min_hours=min_hours, trace_dir=trace_dir)
     tasks = [(p, g, s, {**kw, "policy_kwargs":
                         (policy_kwargs or {}).get(p)})
              for p in policies for g in gpus_list for s in seeds]
@@ -295,13 +325,19 @@ def main() -> None:
                     help="min total runtime for an ETTR-qualifying run")
     ap.add_argument("--procs", type=int, default=min(os.cpu_count() or 1, 6))
     ap.add_argument("--json", default=None)
+    ap.add_argument("--save-traces", default=None, metavar="DIR",
+                    help="archive each cell's trace as npz under DIR "
+                         "(re-analyzable with python -m repro.trace.report)")
     args = ap.parse_args()
 
     res = sweep(policies=args.policies.split(","),
                 gpus_list=[int(g) for g in args.gpus.split(",")],
                 seeds=range(args.seeds), horizon_days=args.days,
-                min_hours=args.min_hours, procs=args.procs)
+                min_hours=args.min_hours, procs=args.procs,
+                trace_dir=args.save_traces)
     print(res.table())
+    if args.save_traces:
+        print(f"per-cell traces saved under {args.save_traces}/")
     print(f"\n{len(res.cells)} cells in {res.wall_s:.1f}s "
           f"(horizon {res.horizon_days:g} days)")
     if args.json:

@@ -1,0 +1,19 @@
+"""Trace layer: structured event traces as the simulator's first-class
+output, plus external-trace ingestion.
+
+  * ``schema``   — columnar repro-trace/v1 tables + the ``Trace`` object
+  * ``recorder`` — ``TraceRecorder``, the scheduler's zero-overhead-when-off
+                   trace hook; ``simulate_trace`` for record->analyze runs
+  * ``io``       — npz / jsonl round-trip persistence
+  * ``ingest``   — Philly-style CSV job tables -> ``Trace``
+  * ``report``   — ``python -m repro.trace.report TRACE``: the full
+                   Fig. 3-9 metric table from any trace
+
+See docs/trace_schema.md for the schema reference.
+"""
+from repro.trace.ingest import ingest_philly_csv
+from repro.trace.recorder import TraceRecorder, simulate_trace
+from repro.trace.schema import NO_JOB, SCHEMA, TABLES, Trace
+
+__all__ = ["NO_JOB", "SCHEMA", "TABLES", "Trace", "TraceRecorder",
+           "ingest_philly_csv", "simulate_trace"]

@@ -1,0 +1,106 @@
+"""Trace persistence: compressed npz (columnar) and jsonl (row-stream).
+
+Both formats round-trip bit-exactly (float64 values survive npz natively
+and jsonl via Python's shortest-repr float serialization); regression-
+tested in tests/test_trace.py.  npz is the compact archival format for
+paper-scale traces; jsonl is grep-able and diff-able for small ones.
+
+  from repro.trace import io as trace_io
+  trace_io.save(trace, "run.npz")       # dispatches on suffix
+  trace = trace_io.load("run.npz")
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.trace.schema import TABLES, Trace, table_from_columns
+
+_META_KEY = "__meta__"
+
+
+def save(trace: Trace, path: str) -> str:
+    """Write ``trace`` to ``path``; format picked from the suffix
+    (``.npz`` or ``.jsonl``).  Returns the path."""
+    if path.endswith(".npz"):
+        save_npz(trace, path)
+    elif path.endswith(".jsonl"):
+        save_jsonl(trace, path)
+    else:
+        raise ValueError(f"unknown trace suffix on {path!r} "
+                         "(expected .npz or .jsonl)")
+    return path
+
+
+def load(path: str) -> Trace:
+    if path.endswith(".npz"):
+        return load_npz(path)
+    if path.endswith(".jsonl"):
+        return load_jsonl(path)
+    raise ValueError(f"unknown trace suffix on {path!r} "
+                     "(expected .npz or .jsonl)")
+
+
+# -- npz ----------------------------------------------------------------
+def save_npz(trace: Trace, path: str) -> None:
+    payload = {_META_KEY: np.array(json.dumps(trace.meta))}
+    for name, cols in TABLES.items():
+        tbl = trace.tables[name]
+        for col, _ in cols:
+            payload[f"{name}.{col}"] = tbl[col]
+    np.savez_compressed(path, **payload)
+
+
+def load_npz(path: str) -> Trace:
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z[_META_KEY][()]))
+        tables = {name: {col: z[f"{name}.{col}"] for col, _ in cols}
+                  for name, cols in TABLES.items()}
+    return Trace(meta, tables).validate()
+
+
+# -- jsonl --------------------------------------------------------------
+_PY_CAST = {"f8": float, "i8": int, "bool": bool, "str": str}
+
+
+def save_jsonl(trace: Trace, path: str) -> None:
+    with open(path, "w") as f:
+        f.write(json.dumps({"meta": trace.meta}) + "\n")
+        for name, cols in TABLES.items():
+            tbl = trace.tables[name]
+            casts = [(col, _PY_CAST[kind]) for col, kind in cols]
+            lists = [tbl[col].tolist() for col, _ in cols]
+            for row in zip(*lists):
+                obj = {"table": name}
+                for (col, cast), v in zip(casts, row):
+                    obj[col] = cast(v)
+                f.write(json.dumps(obj) + "\n")
+
+
+def load_jsonl(path: str) -> Trace:
+    meta = None
+    columns: dict[str, dict[str, list]] = {
+        name: {col: [] for col, _ in cols} for name, cols in TABLES.items()}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            obj = json.loads(line)
+            if meta is None:
+                meta = obj["meta"]
+                continue
+            tbl = columns[obj["table"]]
+            for col in tbl:
+                tbl[col].append(obj[col])
+    if meta is None:
+        raise ValueError(f"{path!r}: empty jsonl trace (no meta line)")
+    tables = {name: table_from_columns(name, cols)
+              for name, cols in columns.items()}
+    return Trace(meta, tables).validate()
+
+
+def file_size(path: str) -> int:
+    return os.path.getsize(path)

@@ -1,0 +1,352 @@
+"""Trace-layer regression gates (repro.trace).
+
+The trace layer's three contracts, each tested here:
+
+  1. Recording is invisible: a run with a TraceRecorder attached is
+     bit-for-bit identical to an unrecorded run on the same seed, and
+     the no-recorder path is the pre-trace engine unchanged.
+  2. Traces are lossless: npz and jsonl round-trips are bit-equal, and
+     every §III metric computed from a trace — including one that went
+     through disk — exactly equals the metric computed from the
+     in-engine record/fault lists (seeds 0-2).
+  3. External traces are first-class: a Philly-style CSV ingests into
+     the same schema and drives the same report.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.cluster import analysis
+from repro.cluster.scheduler import SCHED_TICK_S, ClusterSim
+from repro.cluster.workload import ClusterSpec
+from repro.core.metrics import JobState, mttf_by_job_size
+from repro.trace import TraceRecorder, ingest_philly_csv, simulate_trace
+from repro.trace import io as trace_io
+from repro.trace.report import compute_report, load_any
+from repro.trace.schema import TABLES
+
+# busy little cluster: high r_f so faults/drains/NODE_FAILs actually
+# populate every table within a fast-test horizon
+SPEC = ClusterSpec("RSC-1", n_nodes=80, jobs_per_day=320.0,
+                   target_utilization=0.83, r_f=0.08)
+DAYS = 6.0
+
+PHILLY_CSV = os.path.join(os.path.dirname(__file__), "data",
+                          "philly_mini.csv")
+
+
+def _run(seed, recorder=None):
+    sim = ClusterSim(SPEC, horizon_days=DAYS, seed=seed, recorder=recorder)
+    sim.run()
+    return sim
+
+
+@pytest.fixture(scope="module")
+def sim_trace():
+    rec = TraceRecorder()
+    sim = _run(0, rec)
+    return sim, rec.finalize(sim)
+
+
+# -- contract 1: recording is invisible ------------------------------------
+def test_recorder_off_is_bit_identical_to_recorder_on():
+    bare = _run(0)
+    rec = TraceRecorder()
+    recorded = _run(0, rec)
+    assert bare.records == recorded.records
+    assert bare.fault_log == recorded.fault_log
+    assert bare.drain_log == recorded.drain_log
+    assert bare.lemon_removal_log == recorded.lemon_removal_log
+
+
+# -- contract 2: lossless round-trip + metric equivalence ------------------
+def _assert_traces_equal(a, b):
+    assert a.meta == b.meta
+    for name, cols in TABLES.items():
+        for col, _ in cols:
+            assert np.array_equal(a.tables[name][col],
+                                  b.tables[name][col]), (name, col)
+
+
+def test_npz_roundtrip_bit_equal(sim_trace, tmp_path):
+    sim, trace = sim_trace
+    path = trace_io.save(trace, str(tmp_path / "t.npz"))
+    back = trace_io.load(path)
+    _assert_traces_equal(trace, back)
+    assert back == trace          # Trace value equality (numpy-safe)
+    assert back != "not a trace"  # NotImplemented -> False, no crash
+    # materialization from columns reproduces the engine's records exactly
+    assert back.job_records() == sim.records
+    assert back.fault_records() == sim.fault_log
+
+
+def test_jsonl_roundtrip_bit_equal(sim_trace, tmp_path):
+    sim, trace = sim_trace
+    path = trace_io.save(trace, str(tmp_path / "t.jsonl"))
+    back = trace_io.load(path)
+    _assert_traces_equal(trace, back)
+    assert back.job_records() == sim.records
+    assert back.fault_records() == sim.fault_log
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_trace_metrics_equal_counter_metrics(seed, tmp_path):
+    """Acceptance gate: every paper metric computed from the trace —
+    through a disk round-trip, so materialization is exercised — matches
+    the in-engine counter path exactly on the same seed."""
+    rec = TraceRecorder()
+    sim = _run(seed, rec)
+    path = trace_io.save(rec.finalize(sim), str(tmp_path / f"s{seed}.npz"))
+    trace = trace_io.load(path)
+
+    assert analysis.status_breakdown(trace) == \
+        analysis.status_breakdown(sim.records)
+    assert analysis.hw_impact(trace) == analysis.hw_impact(sim.records)
+    assert analysis.attribution_rates(trace) == analysis.attribution_rates(
+        sim.records, sim.fault_log, SPEC.n_gpus, sim.horizon_s)
+    assert analysis.preemption_cascades(trace) == \
+        analysis.preemption_cascades(sim.records)
+    assert analysis.goodput_loss_by_size(trace) == \
+        analysis.goodput_loss_by_size(sim.records)
+    assert analysis.large_job_failure_rate(trace, 64) == \
+        analysis.large_job_failure_rate(sim.records, 64)
+    assert analysis.job_size_mix(trace) == analysis.job_size_mix(sim.records)
+    assert analysis.run_ettrs(trace, min_gpus=8, min_hours=0.5) == \
+        analysis.run_ettrs(sim.records, min_gpus=8, min_hours=0.5)
+    assert mttf_by_job_size(trace.job_records()) == \
+        mttf_by_job_size(sim.records)
+    days_t, rates_t = analysis.failure_rate_timeline(trace)
+    days_c, rates_c = analysis.failure_rate_timeline(
+        sim.fault_log, SPEC.n_nodes, DAYS)
+    assert np.array_equal(days_t, days_c)
+    assert set(rates_t) == set(rates_c)
+    for s in rates_t:
+        assert np.array_equal(rates_t[s], rates_c[s]), s
+
+
+def test_trace_table_invariants(sim_trace):
+    """Streamed tables line up with the engine's own logs: every job
+    start is claimed by exactly one recorded scheduling pass (on a 30 s
+    tick), and drain events mirror the drain log."""
+    sim, trace = sim_trace
+    sp = trace.tables["sched_passes"]
+    assert int(sp["n_started"].sum()) == len(sim.records)
+    assert np.all(np.abs(sp["t"] % SCHED_TICK_S) < 1e-6)
+    assert np.all(sp["n_queued"] >= sp["n_started"])
+    ne = trace.tables["node_events"]
+    assert int((ne["event"] == "drain").sum()) == len(sim.drain_log)
+    n_preempted_passes = int(sp["n_preempted"].sum())
+    n_preempted_records = sum(1 for r in sim.records
+                              if r.state == JobState.PREEMPTED)
+    assert n_preempted_passes == n_preempted_records
+    # the bare simulator emits no checkpoint events (schema reserved slot)
+    assert trace.n_rows("checkpoints") == 0
+
+
+def test_warm_spare_holds_are_recorded():
+    """Policy-held nodes (POLICY_HOLD on repair) must appear in
+    node_events so node-state sequences stay reconstructable: every
+    release is preceded by a hold for that node."""
+    from repro.mitigations import make_policy
+
+    rec = TraceRecorder()
+    sim = ClusterSim(SPEC, horizon_days=DAYS, seed=0, recorder=rec,
+                     policy=make_policy("warm_spare", seed=0))
+    sim.run()
+    trace = rec.finalize(sim)
+    ne = trace.tables["node_events"]
+    held: set[int] = set()
+    n_holds = n_releases = 0
+    for node_id, event in zip(ne["node_id"].tolist(),
+                              ne["event"].tolist()):
+        if event == "hold":
+            held.add(node_id)
+            n_holds += 1
+        elif event == "release":
+            assert node_id in held, f"release without hold: node {node_id}"
+            held.discard(node_id)
+            n_releases += 1
+    # the warm-spare pool actually cycled (the fixture's r_f guarantees
+    # drains, so spares activate and repaired nodes refill the pool)
+    assert n_holds >= 1 and n_releases >= 1
+
+
+def test_recorder_checkpoint_hook_lands_in_table():
+    rec = TraceRecorder()
+    sim = _run(1, rec)
+    rec.on_checkpoint(1234.5, 42, 30.0)
+    trace = rec.finalize(sim)
+    cp = trace.tables["checkpoints"]
+    assert trace.n_rows("checkpoints") == 1
+    assert cp["t"][0] == 1234.5 and cp["job_id"][0] == 42
+    assert str(cp["kind"][0]) == "write"
+
+
+def test_recorder_rejects_reuse_across_runs():
+    """Reusing a recorder would silently merge two runs' event streams;
+    bind() must refuse."""
+    rec = TraceRecorder()
+    _run(0, rec)
+    with pytest.raises(ValueError, match="reused"):
+        _run(1, rec)
+
+
+def test_simulate_trace_helper():
+    sim, trace = simulate_trace(SPEC, horizon_days=2.0, seed=3)
+    assert trace.meta["seed"] == 3
+    assert trace.n_rows("jobs") == len(sim.records)
+    assert trace.cluster == "RSC-1" and trace.n_nodes == SPEC.n_nodes
+
+
+# -- contract 3: external-trace ingestion ----------------------------------
+def test_philly_csv_ingest_fixture():
+    trace = ingest_philly_csv(PHILLY_CSV)
+    jobs = trace.tables["jobs"]
+    # 10 rows, 1 never-started row skipped
+    assert trace.n_rows("jobs") == 9
+    assert trace.meta["n_skipped"] == 1
+    assert trace.meta["source"] == "ingest:philly"
+    # status labels map onto the simulator's JobState vocabulary
+    states = set(jobs["state"].tolist())
+    assert states == {"COMPLETED", "FAILED", "CANCELLED"}
+    # the two attempts of job ..._0002 share a run_id (requeue semantics)
+    runs = analysis.group_runs(trace)
+    assert sorted(len(v) for v in runs.values()) == [1] * 7 + [2]
+    two = [v for v in runs.values() if len(v) == 2][0]
+    assert [j.state for j in sorted(two, key=lambda j: j.submit_t)] == \
+        [JobState.FAILED, JobState.COMPLETED]
+    # trace clock starts at the earliest submit
+    assert float(jobs["submit_t"].min()) == 0.0
+    assert trace.horizon_s == float(jobs["end_t"].max())
+    # empty event tables, but still schema-valid
+    assert trace.n_rows("faults") == 0
+    trace.validate()
+
+
+def test_philly_ingest_drives_full_report():
+    trace = ingest_philly_csv(PHILLY_CSV)
+    report = compute_report(trace, min_gpus=16, min_hours=1.0)
+    mix = report["fig3_status_mix"]["jobs"]
+    assert mix["COMPLETED"] == pytest.approx(5 / 9, abs=1e-4)
+    assert mix["FAILED"] == pytest.approx(3 / 9, abs=1e-4)
+    # fault-derived sections degrade gracefully (no faults table content)
+    assert "fig4_attribution_per_gpu_h" not in report
+    assert "fig5_failure_rate_per_1000_node_days" not in report
+    # job-derived figures still compute
+    assert report["fig9_measured_ettr"]["n_qualifying_runs"] >= 1
+    assert 256 in report["fig6_job_size_mix"]
+
+
+def test_philly_ingest_skips_clock_skewed_rows(tmp_path):
+    """A row whose end precedes the clamped start (submit > end) is
+    malformed, not a zero-runtime job — it must be skipped."""
+    p = tmp_path / "skew.csv"
+    p.write_text(
+        "jobid,submitted_time,start_time,finished_time,status,gpu_num\n"
+        "a,100,90,200,Pass,8\n"     # start before submit: clamp, keep
+        "b,100,50,80,Pass,8\n"      # end before clamped start: skip
+        "c,0,10,20,Failed,4\n")
+    trace = ingest_philly_csv(str(p))
+    assert trace.n_rows("jobs") == 2
+    assert trace.meta["n_skipped"] == 1
+    jobs = trace.tables["jobs"]
+    assert np.all(jobs["end_t"] >= jobs["start_t"])
+    assert np.all(jobs["start_t"] >= jobs["submit_t"])
+
+
+def test_philly_ingest_rejects_non_finite_times(tmp_path):
+    """'nan'/'inf' cells must not poison the trace with NaN times."""
+    p = tmp_path / "nan.csv"
+    p.write_text(
+        "jobid,submitted_time,start_time,finished_time,status,gpu_num\n"
+        "a,0,10,nan,Pass,8\n"
+        "b,0,10,inf,Pass,8\n"
+        "c,0,10,20,Pass,4\n")
+    trace = ingest_philly_csv(str(p))
+    assert trace.n_rows("jobs") == 1
+    assert trace.meta["n_skipped"] == 2
+    assert np.isfinite(trace.tables["jobs"]["end_t"]).all()
+    assert np.isfinite(trace.meta["horizon_s"])
+
+
+def test_philly_ingest_counts_unknown_statuses(tmp_path):
+    """Unrecognized terminal labels map to FAILED conservatively, but the
+    misclassification is visible in meta['unknown_statuses']."""
+    p = tmp_path / "odd.csv"
+    p.write_text(
+        "jobid,submitted_time,start_time,finished_time,status,gpu_num\n"
+        "a,0,10,20,Terminated,8\n"
+        "b,0,10,30,Terminated,8\n"
+        "c,0,10,40,Pass,4\n")
+    trace = ingest_philly_csv(str(p))
+    assert trace.meta["unknown_statuses"] == {"Terminated": 2}
+    assert sorted(trace.tables["jobs"]["state"].tolist()) == \
+        ["COMPLETED", "FAILED", "FAILED"]
+    # clean vocabularies carry no unknown-status key at all
+    clean = ingest_philly_csv(PHILLY_CSV)
+    assert "unknown_statuses" not in clean.meta
+
+
+def test_analysis_denominators_default_from_cluster_sim(sim_trace):
+    """The analysis module's contract: a live ClusterSim is as good as a
+    Trace, including for the meta-defaulted denominators."""
+    sim, trace = sim_trace
+    assert analysis.attribution_rates(sim) == analysis.attribution_rates(
+        trace)
+    days_s, rates_s = analysis.failure_rate_timeline(sim)
+    days_t, rates_t = analysis.failure_rate_timeline(trace)
+    assert np.array_equal(days_s, days_t)
+    assert set(rates_s) == set(rates_t)
+    for s in rates_s:
+        assert np.array_equal(rates_s[s], rates_t[s])
+
+
+def test_load_any_dispatch(tmp_path, sim_trace):
+    _, trace = sim_trace
+    npz = trace_io.save(trace, str(tmp_path / "t.npz"))
+    assert load_any(npz).meta == trace.meta
+    assert load_any(PHILLY_CSV).meta["source"] == "ingest:philly"
+    with pytest.raises(ValueError):
+        load_any(str(tmp_path / "t.parquet"))
+
+
+# -- CLI + benchmark smoke (tier-1 guards) ---------------------------------
+def _subproc(args, repo_root, timeout=300):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo_root, "src")
+    return subprocess.run([sys.executable, *args], cwd=repo_root, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_report_cli_on_simulated_and_ingested_traces(repo_root, tmp_path):
+    """Acceptance gate: `python -m repro.trace.report` produces the full
+    metric table from a simulated trace and from the ingested CSV."""
+    npz = str(tmp_path / "sim.npz")
+    proc = _subproc(["-m", "repro.trace.report", "--simulate", "--nodes",
+                     "100", "--days", "3", "--save", npz], repo_root)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "Figure 3: job status mix" in proc.stdout
+    assert "Figure 9: measured ETTR" in proc.stdout
+
+    proc = _subproc(["-m", "repro.trace.report", npz], repo_root)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "Figure 3: job status mix" in proc.stdout
+
+    proc = _subproc(["-m", "repro.trace.report", PHILLY_CSV,
+                     "--min-gpus", "16", "--min-hours", "1"], repo_root)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "Figure 3: job status mix" in proc.stdout
+    assert "ingest:philly" in proc.stdout
+
+
+def test_trace_bench_quick_smoke(repo_root):
+    """Tier-1 guard: `benchmarks.run --only trace_bench --quick` runs
+    end-to-end and the recording-overhead budget (<10%) holds."""
+    proc = _subproc(["-m", "benchmarks.run", "--only", "trace_bench",
+                     "--quick"], repo_root)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "recording_overhead" in proc.stdout
+    assert "[PASS] recording overhead < 10%" in proc.stdout, proc.stdout
