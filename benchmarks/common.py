@@ -17,9 +17,16 @@ class Report:
     rows: list = field(default_factory=list)
     checks: list = field(default_factory=list)
     wall_s: float = 0.0
+    # benchmark-declared metadata for the --json trajectory file: scale
+    # labels ("2000n_5d", "16seed_x_3scale"), modes, machine-relevant knobs
+    meta: dict = field(default_factory=dict)
 
     def add(self, key: str, value, note: str = "") -> None:
         self.rows.append((key, value, note))
+
+    def label(self, key: str, value) -> None:
+        """Attach a scale/config label to the report (lands in --json)."""
+        self.meta[key] = value
 
     def check(self, desc: str, ok: bool, detail: str = "") -> None:
         self.checks.append((desc, bool(ok), detail))
@@ -40,6 +47,30 @@ _REGISTRY: dict[str, callable] = {}
 # small-scale defaults (used by CI/tier-1 tests to catch API/perf-path
 # regressions without paying full-scale wall time)
 QUICK = False
+
+# set by `benchmarks.run --profile`: benchmarks that support it (sim_bench)
+# run one representative workload under cProfile and print the top
+# cumulative hotspots instead of the full timing grid
+PROFILE = False
+
+
+def git_sha() -> str:
+    """Current commit (+ '-dirty' when the tree has changes); '?' outside
+    a git checkout — recorded in --json so perf points are attributable."""
+    import os
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=root, timeout=10,
+            capture_output=True, text=True).stdout.strip() or "?"
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=root, timeout=10,
+            capture_output=True, text=True).stdout.strip()
+        return sha + ("-dirty" if dirty else "")
+    except Exception:  # noqa: BLE001 — no git / not a checkout
+        return "?"
 
 
 def benchmark(name: str):

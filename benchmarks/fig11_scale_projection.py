@@ -1,0 +1,96 @@
+"""Figure 11 / §V: failure-model fit + MTTF scale projection from a seed
+ensemble.
+
+The paper's forward-looking claims — MTTF ~ 1.8 h at 16,384 GPUs and
+~0.23 h (14 min) at 131,072 GPUs — come from fitting the r_f failure
+model to measured cluster data and projecting MTTF = (N * r_f)^-1 out to
+future scales.  This benchmark reproduces that pipeline statistically:
+a 16-seed x 3-scale ensemble of full replays (under a minute on 8
+cores), a per-cell r_f fit, and band checks that the injected rate and
+the single-seed analytical ``ettr_model`` prediction fall inside the
+ensemble bands before projecting to the paper's headline scales.
+"""
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import benchmark
+
+R_F_INJECTED = 6.5e-3     # RSC-1 calibration (failures per node-day)
+
+
+@benchmark("fig11_scale_projection")
+def run(rep):
+    from repro.core.mttf_model import projected_mttf_hours
+    from repro.ensemble.run import (MODEL_PAD_HI, MODEL_PAD_LO,
+                                    analytic_ettr, run_ensemble)
+
+    procs = min(os.cpu_count() or 1, 8)
+    if common.QUICK:
+        gpus, seeds, days, min_hours = [256, 512], 2, 2.0, 4.0
+    else:
+        gpus, seeds, days, min_hours = [1024, 4096, 16384], 16, 8.0, 12.0
+    rep.label("grid", f"{seeds}seed_x_{len(gpus)}scale_{days:g}d")
+    rep.label("procs", procs)
+
+    t0 = time.time()
+    agg = run_ensemble(gpus, range(seeds), horizon_days=days,
+                       r_f=R_F_INJECTED, min_hours=min_hours, procs=procs)
+    wall = time.time() - t0
+    rep.add("ensemble_wall_s", round(wall, 2),
+            f"{agg.n_cells} cells on {procs} procs")
+
+    fitted_all = []
+    for g in agg.scales():
+        bands = agg.bands(g)
+        b_rf = bands["fitted_r_f"]
+        b_ettr = bands["ettr_model_nominal"]
+        b_meas = bands["ettr_sim"]
+        rep.add(f"{g}gpu.fitted_r_f_x1000",
+                f"{b_rf.mean * 1000:.2f} [{b_rf.lo * 1000:.2f},"
+                f"{b_rf.hi * 1000:.2f}] n={b_rf.n}",
+                f"injected {R_F_INJECTED * 1000:.2f}")
+        if b_meas.n:
+            rep.add(f"{g}gpu.ettr_measured",
+                    f"{b_meas.mean:.3f} [{b_meas.lo:.3f},{b_meas.hi:.3f}] "
+                    f"n={b_meas.n}")
+        fitted_all.extend(c.fitted_r_f for c in agg.cells_at(g)
+                          if np.isfinite(c.fitted_r_f) and c.fitted_r_f > 0)
+        if not common.QUICK:
+            rep.check(
+                f"{g} GPUs: injected r_f inside fitted ensemble band",
+                b_rf.contains(R_F_INJECTED, pad_lo=0.3 * R_F_INJECTED,
+                              pad_hi=0.3 * R_F_INJECTED),
+                f"{R_F_INJECTED * 1000:.2f} vs [{b_rf.lo * 1000:.2f},"
+                f"{b_rf.hi * 1000:.2f}] /1000 node-days")
+            model = analytic_ettr(g, R_F_INJECTED)
+            rep.check(
+                f"{g} GPUs: analytical ettr_model prediction inside "
+                f"ensemble band (PR-2 calibration pad)",
+                b_ettr.contains(model, pad_lo=MODEL_PAD_LO,
+                                pad_hi=MODEL_PAD_HI),
+                f"{model:.3f} vs [{b_ettr.lo:.3f},{b_ettr.hi:.3f}]")
+
+    if fitted_all:
+        rf_fit = float(np.mean(fitted_all))
+        rep.add("ensemble_fitted_r_f_x1000", round(rf_fit * 1000, 2),
+                f"paper RSC-1: {R_F_INJECTED * 1000:.2f}, "
+                f"n={len(fitted_all)} cells")
+        p16k = projected_mttf_hours(16384, rf_fit)
+        p131k = projected_mttf_hours(131072, rf_fit)
+        rep.add("projection_16384gpu_h", round(p16k, 2), "paper: 1.8")
+        rep.add("projection_131072gpu_h", round(p131k, 3), "paper: 0.23")
+        if not common.QUICK:
+            rep.check("fitted-rate 16,384-GPU MTTF projection within 2.5x "
+                      "of the paper's 1.8 h", 1.8 / 2.5 < p16k < 1.8 * 2.5,
+                      f"{p16k:.2f}h")
+            rep.check("fitted-rate 131,072-GPU projection within 2.5x of "
+                      "the paper's 0.23 h", 0.23 / 2.5 < p131k < 0.23 * 2.5,
+                      f"{p131k:.3f}h")
+    if not common.QUICK:
+        budget = 60.0 * max(1.0, 8.0 / procs)
+        rep.check(f"16-seed x 3-scale ensemble within budget "
+                  f"({budget:.0f}s at {procs} procs)", wall < budget,
+                  f"{wall:.1f}s")

@@ -1,19 +1,28 @@
 """Benchmark suite entry point: one benchmark per paper figure/table.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig7_mttf] [--json out.json]
+  PYTHONPATH=src python -m benchmarks.run [--only fig7_mttf[,sim_bench]]
+      [--json out.json] [--quick] [--profile]
+
+``--json`` writes a machine-readable trajectory point: per-benchmark rows,
+checks, wall-clock, and scale labels plus the git SHA and timestamp of the
+run (see BENCH_sim.json for the committed sim_bench + ensemble_bench
+baseline).  ``--profile`` runs profile-aware benchmarks (sim_bench) under
+cProfile and prints the top cumulative hotspots instead of timings.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import platform
 import sys
 import time
 import traceback
 
 # importing registers each benchmark
-from benchmarks import (fig3_job_status, fig4_attribution, fig5_timeline,  # noqa: F401
-                        fig6_job_mix, fig7_mttf, fig8_goodput_loss,
-                        fig9_ettr, fig10_contours, fig12_adaptive_routing,
+from benchmarks import (ensemble_bench, fig3_job_status, fig4_attribution,  # noqa: F401
+                        fig5_timeline, fig6_job_mix, fig7_mttf,
+                        fig8_goodput_loss, fig9_ettr, fig10_contours,
+                        fig11_scale_projection, fig12_adaptive_routing,
                         fig13_mitigations, kernel_bench, roofline_table,
                         runtime_ettr, sim_bench, table2_lemon, trace_bench)
 from benchmarks import common
@@ -22,23 +31,31 @@ from benchmarks.common import all_benchmarks
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
     ap.add_argument("--json", default=None)
     ap.add_argument("--quick", action="store_true",
                     help="small-scale defaults (CI smoke mode)")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile mode for profile-aware benchmarks "
+                         "(sim_bench): top-20 cumulative hotspots")
     args = ap.parse_args()
     common.QUICK = args.quick
-    if args.only and args.only not in all_benchmarks():
-        names = "\n  ".join(sorted(all_benchmarks()))
-        ap.error(f"unknown benchmark {args.only!r}; registered benchmarks:"
-                 f"\n  {names}")
+    common.PROFILE = args.profile
+    only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - set(all_benchmarks())
+        if unknown:
+            names = "\n  ".join(sorted(all_benchmarks()))
+            ap.error(f"unknown benchmark(s) {sorted(unknown)}; registered "
+                     f"benchmarks:\n  {names}")
 
     t0 = time.time()
     results = {}
     n_warn = 0
     failures = []
     for name, fn in all_benchmarks().items():
-        if args.only and args.only != name:
+        if only and name not in only:
             continue
         try:
             rep = fn()
@@ -47,6 +64,7 @@ def main() -> None:
                 "rows": [[k, str(v), n] for k, v, n in rep.rows],
                 "checks": [[d, ok, det] for d, ok, det in rep.checks],
                 "wall_s": rep.wall_s,
+                "labels": rep.meta,
             }
             n_warn += sum(1 for _, ok, _ in rep.checks if not ok)
         except Exception as e:  # noqa: BLE001
@@ -55,14 +73,26 @@ def main() -> None:
             traceback.print_exc()
     total_checks = sum(len(r["checks"]) for r in results.values())
     passed = total_checks - n_warn
+    wall = time.time() - t0
     print(f"\n{'='*70}")
     print(f"benchmarks: {len(results)} ran, {len(failures)} errored "
           f"({failures if failures else ''})")
     print(f"paper-claim checks: {passed}/{total_checks} passed, "
-          f"{n_warn} warnings; total {time.time()-t0:.0f}s")
+          f"{n_warn} warnings; total {wall:.0f}s")
     if args.json:
+        out = {
+            "meta": {
+                "git_sha": common.git_sha(),
+                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                "python": platform.python_version(),
+                "machine": platform.machine(),
+                "quick": args.quick,
+                "wall_s": round(wall, 2),
+            },
+            "benchmarks": results,
+        }
         with open(args.json, "w") as f:
-            json.dump(results, f, indent=1)
+            json.dump(out, f, indent=1)
     if failures:
         sys.exit(1)
 

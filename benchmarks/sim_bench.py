@@ -4,11 +4,16 @@ Tracks the event-driven scheduler core's perf trajectory: the paper's
 headline analyses cover 11 months x {2000, 1000} nodes x ~4M jobs, so the
 full-trace replays the figure benchmarks depend on must stay minutes-fast
 on one CPU.  Reports wall-time and jobs/sec at 500- and 2000-node scales,
-plus a full RSC-1 11-month replay, and checks the >=10x speedup over the
-pre-rewrite (eager-tick, set-scan) scheduler baseline.
+plus a full RSC-1 11-month replay; checks the >=10x speedup over the
+pre-rewrite (eager-tick, set-scan) seed scheduler and the >=2x hot-path-v2
+speedup over the PR-1 engine at the 2000-node scale.
 
 Quick mode (`benchmarks.run --quick`) runs a 100-node/2-day smoke scale
 only — used by the tier-1 test to catch perf-path API regressions.
+
+Profile mode (`benchmarks.run --only sim_bench --profile`) runs one replay
+under cProfile and prints the top-20 cumulative hotspots — the tooling
+this and future perf PRs use to pick targets.
 """
 import time
 
@@ -19,6 +24,11 @@ from benchmarks.common import benchmark
 # scans, per-job Python-loop workload gen) at 500 nodes / 5 days / 10980
 # job attempts on this repo's reference CPU — the >=10x target baseline
 SEED_JOBS_PER_SEC_500N_5D = 1766.0
+
+# measured on the PR-1 engine (lazy ticks, bucket index, string event
+# kinds, per-pass deferred re-heapification) at 2000 nodes / 5 days on the
+# same reference CPU — the hot-path-v2 >=2x target baseline
+PR1_JOBS_PER_SEC_2000N_5D = 26065.0
 
 
 def _run_scale(rep, label, spec, days, seed=0):
@@ -36,11 +46,44 @@ def _run_scale(rep, label, spec, days, seed=0):
     return wall, jps
 
 
+def _profile(rep, spec, days):
+    """One replay under cProfile: top-20 cumulative hotspots to stdout."""
+    import cProfile
+    import io
+    import pstats
+
+    from repro.cluster.scheduler import ClusterSim
+
+    sim = ClusterSim(spec, horizon_days=days, seed=0)
+    prof = cProfile.Profile()
+    prof.enable()
+    sim.run()
+    prof.disable()
+    buf = io.StringIO()
+    pstats.Stats(prof, stream=buf).sort_stats("cumulative").print_stats(20)
+    print(buf.getvalue())
+    rep.add("profiled_job_attempts", len(sim.records))
+    rep.add("profiled_scale", f"{spec.n_nodes}n_{days:g}d")
+    rep.check("profile mode completed", True, "top-20 cumulative printed")
+
+
 @benchmark("sim_bench")
 def run(rep):
     from repro.cluster.workload import RSC1, RSC2, ClusterSpec
 
+    if common.PROFILE:
+        if common.QUICK:
+            spec = ClusterSpec("RSC-1", n_nodes=100, jobs_per_day=400.0,
+                               target_utilization=0.83, r_f=6.5e-3)
+            rep.label("scale", "profile_100n_2d")
+            _profile(rep, spec, 2.0)
+        else:
+            rep.label("scale", "profile_2000n_5d")
+            _profile(rep, RSC1, 5.0)
+        return
+
     if common.QUICK:
+        rep.label("scale", "100n_2d")
         spec = ClusterSpec("RSC-1", n_nodes=100, jobs_per_day=400.0,
                            target_utilization=0.83, r_f=6.5e-3)
         wall, jps = _run_scale(rep, "quick_100n_2d", spec, 2.0)
@@ -48,6 +91,7 @@ def run(rep):
                   f"{wall:.2f}s")
         return
 
+    rep.label("scales", ["500n_5d", "2000n_5d", "rsc1_330d", "rsc2_330d"])
     spec500 = ClusterSpec("RSC-1", n_nodes=500, jobs_per_day=2000.0,
                           target_utilization=0.83, r_f=6.5e-3)
     _, jps500 = _run_scale(rep, "500n_5d", spec500, 5.0)
@@ -59,8 +103,14 @@ def run(rep):
               f"{jps500:.0f} vs {SEED_JOBS_PER_SEC_500N_5D:.0f} jobs/s")
 
     # paper-scale cluster, short horizon: stresses per-event constants at
-    # 2000 nodes / 7.2k jobs/day
-    _run_scale(rep, "2000n_5d", RSC1, 5.0)
+    # 2000 nodes / 7.2k jobs/day — the hot-path-v2 headline scale
+    _, jps2000 = _run_scale(rep, "2000n_5d", RSC1, 5.0)
+    rep.add("2000n_5d.speedup_vs_pr1",
+            round(jps2000 / PR1_JOBS_PER_SEC_2000N_5D, 2),
+            f"PR-1 engine: {PR1_JOBS_PER_SEC_2000N_5D:.0f} jobs/s")
+    rep.check("2000n/5d >=2x jobs/sec over PR-1 engine (hot-path v2)",
+              jps2000 >= 2.0 * PR1_JOBS_PER_SEC_2000N_5D,
+              f"{jps2000:.0f} vs {PR1_JOBS_PER_SEC_2000N_5D:.0f} jobs/s")
 
     # the headline scale: full 11-month RSC-1 replay (~2.4M job attempts)
     wall1, jps1 = _run_scale(rep, "rsc1_330d_full", RSC1, 330.0)

@@ -24,10 +24,35 @@ jobs — in minutes on one CPU):
     whole-node allocation and tightest-fit placement O(1) per job instead of
     an O(n_nodes) set scan + ``np.nonzero`` per allocation attempt.
   * **priority-indexed preemption**: whole-node running jobs are indexed by
-    priority (plus a guard-expiry heap), so victim selection walks only the
-    lower-priority candidates instead of sorting every running job.
+    priority (plus a guard-expiry heap); victim selection walks candidates
+    in ascending priority and stops at the first victim set that covers the
+    node deficit instead of materializing every eligible victim.
   * arrivals are generated as vectorized column arrays and merge-iterated
     with the event heap, never materialized as heap events.
+
+Hot-path v2 (ensemble-throughput pass, on top of the devices above):
+  * **int-coded event kinds**: heap tuples carry ``K_FINISH``/``K_SCHED``/…
+    ints instead of strings; the dispatch loop compares small ints, ordered
+    by event frequency.
+  * **dedicated fault stream**: per-node fault chains live in their own
+    ``(t, node_id)`` heap, merge-iterated with the event heap like arrivals,
+    so thousands of pending per-node fault events no longer deepen every
+    push/pop on the main heap; the initial chain is armed with one
+    vectorized draw (``FaultProcess.next_fault_times``) that consumes the
+    exact same RNG stream as the per-node scalar path.
+  * **allocation-free scheduling pass**: jobs deferred by a pass stay in a
+    persistent *sorted* list that the next pass merge-iterates with the
+    queue heap (deferral order == pop order, so sortedness is invariant);
+    deferred jobs re-enter the heap never instead of twice per pass.
+  * scratch-list reuse, hoisted attribute lookups, inlined bucket reindex
+    on the alloc/release paths, and memoized ``JobState`` lookups.
+
+The v2 pass preserves the event order, RNG consumption order, and set-op
+sequence of the v1 engine bit-for-bit (only heap tie-breaks between events
+at *exactly* equal continuous times — probability zero — could differ), so
+seed-equivalence, lazy-tick granularity, and recorded-vs-unrecorded
+identity all survive untouched (regression-tested in tests/test_sim_perf.py
+and tests/test_trace.py).
 
 Mitigation hook points (repro.mitigations): an optional ``policy`` observes
 the simulation at fixed points — ``bind`` / ``on_fault`` / ``on_node_drain``
@@ -79,6 +104,23 @@ POLICY_HOLD = "hold"
 
 _INF = float("inf")
 
+# int-coded event kinds (heap tuples: (t, seq, kind, payload)); node fault
+# chains do NOT appear here — they live in their own (t, node_id) heap
+K_FINISH = 0
+K_SCHED = 1
+K_KILL = 2
+K_REPAIR = 3
+K_LEMON = 4
+K_POLICY = 5
+
+# memoized enum lookups: JobState.__call__ costs an enum __new__ per job
+_STATE_OF = {s.value: s for s in JobState}
+_TIMEOUT = JobState.TIMEOUT
+_NODE_FAIL = JobState.NODE_FAIL
+_FAILED = JobState.FAILED
+_PREEMPTED = JobState.PREEMPTED
+_CANCELLED = JobState.CANCELLED
+
 
 @dataclass(slots=True)
 class RunState:
@@ -126,6 +168,7 @@ class ClusterSim:
 
         n = spec.n_nodes
         g = spec.gpus_per_node
+        self._g = g
         self.free = [g] * n
         self.node_ok = [True] * n                  # schedulable
         self.node_draining = [False] * n
@@ -139,14 +182,23 @@ class ClusterSim:
         self.full_free = self._buckets[g]          # alias for introspection
 
         self.queue: list[tuple] = []   # (-priority, submit_t, seq, RunState)
+        # jobs a scheduling pass could not place, in pop (= sorted) order;
+        # the next pass merge-iterates this with the queue heap instead of
+        # re-pushing every deferral (see _schedule_pass)
+        self._deferred: list[tuple] = []
+        self._def_scratch: list[tuple] = []
         self.running: dict[int, Running] = {}
-        # whole-node running jobs by priority (preemption victim index);
-        # inner dict used as an ordered set so equal-priority victims are
-        # preempted in start order, matching the seed's stable sort
-        self._running_by_prio: dict[int, dict[int, None]] = {}
+        # whole-node running jobs by priority (preemption victim index):
+        # job_id -> start_t, insertion-ordered.  Insertion time == start
+        # time, so each inner dict is sorted by start_t; equal-priority
+        # victims are preempted in start order (matching the seed's stable
+        # sort) and the guard-eligibility scan can stop at the first
+        # too-young entry instead of walking every candidate
+        self._running_by_prio: dict[int, dict[int, float]] = {}
         # (start_t + guard, job_id) for whole-node jobs: next guard expiry
         self._guard_heap: list[tuple] = []
         self.events: list[tuple] = []  # (t, seq, kind, payload)
+        self._fault_heap: list[tuple] = []  # (t, node_id) per-node chains
         self._seq = itertools.count()
         self.records: list[JobRecord] = []
         self.fault_log: list[Fault] = []
@@ -160,7 +212,7 @@ class ClusterSim:
         self._pass_t = -1.0             # tick of the pass currently running
 
     # ------------------------------------------------------------------
-    def _push(self, t: float, kind: str, payload) -> int:
+    def _push(self, t: float, kind: int, payload) -> int:
         seq = next(self._seq)
         heapq.heappush(self.events, (t, seq, kind, payload))
         return seq
@@ -173,7 +225,7 @@ class ClusterSim:
         skip — that pass re-arms per its outcome (progress -> next tick,
         guard-blocked -> earliest expiry), so coverage is preserved
         inductively without ever stacking duplicate events on one tick."""
-        if not self.queue:
+        if not self.queue and not self._deferred:
             return
         tick = SCHED_TICK_S * math.ceil(t / SCHED_TICK_S)
         if tick <= self._pass_t:   # same-tick re-arm from inside the pass
@@ -182,7 +234,7 @@ class ClusterSim:
         if armed and armed[0] <= tick:
             return
         heapq.heappush(armed, tick)
-        self._push(tick, "sched", None)
+        self._push(tick, K_SCHED, None)
 
     # -- node capacity management --------------------------------------
     def _reindex(self, i: int) -> None:
@@ -197,65 +249,73 @@ class ClusterSim:
                 self._buckets[b].add(i)
             self._bucket_of[i] = b
 
-    def _take(self, i: int, gpus: int) -> None:
-        self.free[i] -= gpus
-        self._reindex(i)
-
     def _alloc_nodes(self, req_gpus: int) -> Optional[dict]:
-        g = self.spec.gpus_per_node
-        full = self._buckets[g]
+        g = self._g
+        buckets = self._buckets
+        full = buckets[g]
         if req_gpus >= g:
             n_nodes = -(-req_gpus // g)
             if len(full) < n_nodes:
                 return None
+            free = self.free
+            bucket_of = self._bucket_of
             out = {}
             for _ in range(n_nodes):
                 i = full.pop()
-                self.free[i] = 0
-                self._bucket_of[i] = -1
+                free[i] = 0
+                bucket_of[i] = -1
                 out[i] = g
             return out
         # small job: tightest fit — smallest free-GPU bucket that fits,
-        # falling back to a fully-free node
+        # falling back to a fully-free node.  A bucketed node is schedulable
+        # and not draining by construction, so the reindex is inlined.
         for f in range(req_gpus, g):
-            b = self._buckets[f]
+            b = buckets[f]
             if b:
                 i = next(iter(b))
-                self._take(i, req_gpus)
+                nf = f - req_gpus
+                self.free[i] = nf
+                b.discard(i)
+                if nf > 0:
+                    buckets[nf].add(i)
+                    self._bucket_of[i] = nf
+                else:
+                    self._bucket_of[i] = -1
                 return {i: req_gpus}
         if full:
             i = next(iter(full))
-            self._take(i, req_gpus)
+            nf = g - req_gpus          # > 0: req_gpus < g here
+            self.free[i] = nf
+            full.discard(i)
+            buckets[nf].add(i)
+            self._bucket_of[i] = nf
             return {i: req_gpus}
         return None
-
-    def _release(self, nodes: dict) -> None:
-        for i, g_used in nodes.items():
-            self.free[i] += g_used
-            self._reindex(i)
-            if self.node_draining[i] and not self.node_jobs[i]:
-                self._drain_now(i, None, reason="low_sev_after_job",
-                                now=self._now)
-        self._arm_sched(self._now)
 
     # -- job lifecycle ---------------------------------------------------
     def _start_job(self, t: float, run: RunState, nodes: dict,
                    submit_t: float) -> None:
         job_id = next(self._job_ids)
-        dur = min(run.remaining_s, MAX_LIFETIME_S)
-        seq = self._push(t + dur, "finish", job_id)
+        rem = run.remaining_s
+        dur = rem if rem < MAX_LIFETIME_S else MAX_LIFETIME_S
+        seq = next(self._seq)
+        heapq.heappush(self.events, (t + dur, seq, K_FINISH, job_id))
         r = Running(run, job_id, t, submit_t, nodes, seq)
         self.running[job_id] = r
         req = run.request
-        if req.n_gpus >= self.spec.gpus_per_node:
-            self._running_by_prio.setdefault(req.priority, {})[job_id] = None
+        if req.n_gpus >= self._g:
+            self._running_by_prio.setdefault(req.priority, {})[job_id] = t
             heapq.heappush(self._guard_heap,
                            (t + PREEMPTION_GUARD_S, job_id))
-        single = req.n_nodes == 1 and req.n_gpus <= 8
-        for i in nodes:
-            self.node_jobs[i].add(job_id)
-            if single:
-                self.histories[i].single_node_jobs += 1
+        node_jobs = self.node_jobs
+        if req.n_gpus <= 8:   # single-node job (n_nodes == 1)
+            histories = self.histories
+            for i in nodes:
+                node_jobs[i].add(job_id)
+                histories[i].single_node_jobs += 1
+        else:
+            for i in nodes:
+                node_jobs[i].add(job_id)
 
     def _record(self, r: Running, t: float, state: JobState,
                 hw: bool = False, symptoms=(), preempted_by=None) -> None:
@@ -267,17 +327,40 @@ class ClusterSim:
             symptoms=tuple(symptoms), preempted_by=preempted_by))
 
     def _end_job(self, r: Running, t: float) -> None:
-        del self.running[r.job_id]
+        """Remove a finished/interrupted job and release its nodes (the
+        release/reindex/drain-check loop is fused and inlined — this is the
+        hottest per-job path after the scheduling pass itself)."""
+        job_id = r.job_id
+        del self.running[job_id]
         req = r.run.request
-        if req.n_gpus >= self.spec.gpus_per_node:
+        if req.n_gpus >= self._g:
             s = self._running_by_prio.get(req.priority)
             if s is not None:
-                s.pop(r.job_id, None)
+                s.pop(job_id, None)
                 if not s:
                     del self._running_by_prio[req.priority]
-        for i in r.nodes:
-            self.node_jobs[i].discard(r.job_id)
-        self._release(r.nodes)
+        free = self.free
+        node_ok = self.node_ok
+        draining = self.node_draining
+        buckets = self._buckets
+        bucket_of = self._bucket_of
+        node_jobs = self.node_jobs
+        for i, g_used in r.nodes.items():
+            node_jobs[i].discard(job_id)
+            f = free[i] + g_used
+            free[i] = f
+            b = f if (node_ok[i] and not draining[i]) else -1
+            old = bucket_of[i]
+            if b != old:
+                if old >= 0:
+                    buckets[old].discard(i)
+                if b >= 0:
+                    buckets[b].add(i)
+                bucket_of[i] = b
+            if draining[i] and not node_jobs[i]:
+                self._drain_now(i, None, reason="low_sev_after_job",
+                                now=self._now)
+        self._arm_sched(self._now)
 
     def _interrupt(self, r: Running, t: float, state: JobState,
                    hw: bool, symptoms=(), preempted_by=None,
@@ -288,15 +371,16 @@ class ClusterSim:
         self._record(r, t, state, hw, symptoms, preempted_by)
         self._end_job(r, t)
         # lemon signals
-        if state == JobState.NODE_FAIL:
+        if state is _NODE_FAIL:
             multi = r.run.request.n_nodes > 1
+            rng_random = self.rng.random
             for i in r.nodes:
                 h = self.histories[i]
                 if multi:
                     h.multi_node_node_fails += 1
                 else:
                     h.single_node_node_fails += 1
-                if self.rng.random() < 0.3:
+                if rng_random() < 0.3:
                     h.excl_jobid_count += 1
         if requeue and r.run.attempts < MAX_REQUEUES and r.run.remaining_s > 1.0:
             r.run.attempts += 1
@@ -323,7 +407,7 @@ class ClusterSim:
             repair_s = fault.repair_s if fault else 3600.0
         t0 = fault.t if fault else (now if now is not None else self._now)
         self.drain_log.append((t0, node_id, reason))
-        self._push(t0 + repair_s, "repair", node_id)
+        self._push(t0 + repair_s, K_REPAIR, node_id)
         if self.recorder is not None:
             self.recorder.on_node_event(t0, node_id, "drain", reason)
         if self.policy is not None:
@@ -337,10 +421,10 @@ class ClusterSim:
             h.xid_cnt += 1
         if not fault.transient:
             h.tickets += 1
-        # next fault on this node
+        # next fault on this node (dedicated chain heap, not the event heap)
         if node_id not in self.removed_lemons:
-            self._push(self.faults.next_fault_time(node_id, t), "fault_node",
-                       node_id)
+            heapq.heappush(self._fault_heap,
+                           (self.faults.next_fault_time(node_id, t), node_id))
         if not self.node_ok[node_id]:
             return
 
@@ -350,9 +434,8 @@ class ClusterSim:
             # health check catches it within the 5-min cadence; the kill +
             # drain happen at detection time (deferred event for causality)
             delay = float(self.rng.uniform(0, CHECK_PERIOD_S))
-            self._push(t + delay, "kill_node", {
-                "node_id": node_id, "fault": fault, "state": "NODE_FAIL",
-                "hw": True, "reason": f"check:{fault.symptom}"})
+            self._push(t + delay, K_KILL, (
+                node_id, fault, _NODE_FAIL, True, f"check:{fault.symptom}"))
         elif fault.detectable_by_check:
             # low severity: drain after running jobs complete
             if has_victims:
@@ -364,59 +447,65 @@ class ClusterSim:
             # undetected: the job crashes; NODE_FAIL heartbeat catch-all
             delay = float(self.rng.exponential(600.0))
             hw_attr = self.rng.random() < 0.5  # a check fires in the window
-            self._push(t + delay, "kill_node", {
-                "node_id": node_id, "fault": fault,
-                "state": "FAILED" if hw_attr else "NODE_FAIL",
-                "hw": hw_attr, "reason": "node_fail_heartbeat"})
+            self._push(t + delay, K_KILL, (
+                node_id, fault, _FAILED if hw_attr else _NODE_FAIL,
+                hw_attr, "node_fail_heartbeat"))
 
-    def _handle_kill(self, t: float, payload: dict) -> None:
-        node_id = payload["node_id"]
-        fault: Fault = payload["fault"]
+    def _handle_kill(self, t: float, payload: tuple) -> None:
+        node_id, fault, state, hw, reason = payload
         if not self.node_ok[node_id]:
             return
-        state = JobState(payload["state"])
         for j in list(self.node_jobs[node_id]):
             r = self.running.get(j)
             if r is not None:
-                self._interrupt(r, t, state, hw=payload["hw"],
+                self._interrupt(r, t, state, hw=hw,
                                 symptoms=(fault.symptom, *fault.co_symptoms))
         fault2 = Fault(t, node_id, fault.symptom, fault.co_symptoms,
                        fault.transient, fault.detectable_by_check,
                        fault.repair_s)
-        self._drain_now(node_id, fault2, reason=payload["reason"])
+        self._drain_now(node_id, fault2, reason=reason)
 
     # -- scheduling pass ---------------------------------------------------
     def _try_preempt(self, t: float, run: RunState) -> tuple[bool, int]:
         """Free whole nodes for a high-priority multi-node job.  Returns
-        (enough victims freed, #victims interrupted)."""
+        (enough victims freed, #victims interrupted).
+
+        Victims are taken in ascending-priority order from the whole-node
+        index (insertion = start order within a priority), skipping jobs
+        still inside the 2 h guard, and the walk stops as soon as the node
+        deficit is covered — the v1 pass materialized every eligible victim
+        before interrupting any."""
         need = run.request.n_nodes
-        have = len(self._buckets[self.spec.gpus_per_node])
-        deficit = need - have
+        deficit = need - len(self._buckets[self._g])
         if deficit <= 0:
             return True, 0
         p = run.request.priority
-        # victims in ascending-priority order from the whole-node index;
-        # within a priority, insertion (= start) order
         guard_cutoff = t - PREEMPTION_GUARD_S
-        victims = []
-        for prio in sorted(k for k in self._running_by_prio if k < p):
-            for jid in self._running_by_prio[prio]:
-                r = self.running[jid]
-                if r.start_t <= guard_cutoff:
-                    victims.append(r)
-        freed = 0
-        n_victims = 0
+        by_prio = self._running_by_prio
+        running = self.running
         # paper Fig. 8 accounting: a preemption is "second order" only when
         # the instigator is a requeued job recovering from a failure
         instigator = run.request.run_id if run.attempts > 0 else None
-        for v in victims:
-            if freed >= deficit:
-                break
-            freed += len(v.nodes)
-            n_victims += 1
-            self._interrupt(v, t, JobState.PREEMPTED, hw=False,
-                            preempted_by=instigator)
-        return freed >= deficit, n_victims
+        freed = 0
+        n_victims = 0
+        for prio in sorted(k for k in by_prio if k < p):
+            # guard-eligible prefix only: values are start_t in insertion
+            # (= start) order, so the first too-young entry ends the scan;
+            # snapshot before interrupting (interrupts pop from this dict)
+            prefix = []
+            for jid, start_t in by_prio[prio].items():
+                if start_t > guard_cutoff:
+                    break
+                prefix.append(jid)
+            for jid in prefix:
+                r = running[jid]
+                freed += len(r.nodes)
+                n_victims += 1
+                self._interrupt(r, t, _PREEMPTED, hw=False,
+                                preempted_by=instigator)
+                if freed >= deficit:
+                    return True, n_victims
+        return False, n_victims
 
     def _next_guard_expiry(self, t: float) -> float:
         """Earliest future preemption-guard expiry among running whole-node
@@ -436,44 +525,75 @@ class ClusterSim:
         n_preempted, blocked): placements/preemptions > 0 mean progress
         was made (so a retry at the next tick can make further progress);
         ``blocked`` — a preemption-eligible job is waiting only on the 2 h
-        victim guard."""
-        deferred = []
+        victim guard.
+
+        Allocation-free inner loop: the pass consumes the global priority
+        order by merge-iterating the queue heap with the previous pass's
+        deferred list (which is sorted, because deferrals happen in pop
+        order and leftover entries are >= every consumed one), and this
+        pass's deferrals accumulate in a reused scratch list that becomes
+        the next pass's deferred list — a job deferred N passes in a row
+        costs zero heap operations after its first pop."""
+        queue = self.queue
+        deferred = self._deferred
+        new_def = self._def_scratch
+        di = 0
+        dn = len(deferred)
         scanned = 0
         n_started = 0
         n_preempted = 0
+        n_def = 0
         blocked_preemptor = False
         # once a preemption attempt at priority p fails, every eligible
         # victim below p has already been interrupted — later attempts at
         # priority <= p this pass can be skipped outright
         exhausted_below = -1
-        g = self.spec.gpus_per_node
-        while self.queue and scanned < 200:
-            negp, sub_t, seq, run = heapq.heappop(self.queue)
+        g = self._g
+        alloc = self._alloc_nodes
+        heappop = heapq.heappop
+        while scanned < 200:
+            if queue:
+                if di < dn and deferred[di] <= queue[0]:
+                    item = deferred[di]
+                    di += 1
+                else:
+                    item = heappop(queue)
+            elif di < dn:
+                item = deferred[di]
+                di += 1
+            else:
+                break
             scanned += 1
+            run = item[3]
             req = run.request
-            nodes = self._alloc_nodes(req.n_gpus)
-            if nodes is None and req.priority >= 7 and req.n_gpus > g:
+            n_gpus = req.n_gpus
+            nodes = alloc(n_gpus)
+            if nodes is None and req.priority >= 7 and n_gpus > g:
                 if req.priority <= exhausted_below:
                     blocked_preemptor = True
                 else:
                     ok, n_victims = self._try_preempt(t, run)
                     n_preempted += n_victims
                     if ok:
-                        nodes = self._alloc_nodes(req.n_gpus)
+                        nodes = alloc(n_gpus)
                     else:
                         blocked_preemptor = True
-                        exhausted_below = max(exhausted_below, req.priority)
+                        exhausted_below = req.priority
             if nodes is None:
-                deferred.append((negp, sub_t, seq, run))
+                new_def.append(item)
+                n_def += 1
                 # gang scheduling: don't let smaller lower-priority jobs jump
                 # far ahead; allow limited backfill depth
-                if len(deferred) > 50:
+                if n_def > 50:
                     break
                 continue
-            self._start_job(t, run, nodes, submit_t=sub_t)
+            self._start_job(t, run, nodes, item[1])
             n_started += 1
-        for item in deferred:
-            heapq.heappush(self.queue, item)
+        if di < dn:
+            new_def.extend(deferred[di:])
+        self._deferred = new_def
+        deferred.clear()
+        self._def_scratch = deferred
         return n_started, n_preempted, blocked_preemptor
 
     # -- lemon scan ---------------------------------------------------------
@@ -510,7 +630,7 @@ class ClusterSim:
             else:
                 self.node_ok[node_id] = False
                 self._reindex(node_id)
-                self._push(t + replace_after_s, "repair", node_id)
+                self._push(t + replace_after_s, K_REPAIR, node_id)
         return True
 
     def hold_node(self, node_id: int) -> bool:
@@ -565,7 +685,7 @@ class ClusterSim:
 
     def push_policy_timer(self, t: float, tag=None) -> None:
         """Arm a policy callback: on_timer(sim, t, tag) fires at time t."""
-        self._push(t, "policy", tag)
+        self._push(t, K_POLICY, tag)
 
     def _return_to_service(self, t: float, node_id: int) -> None:
         if node_id in self.removed_lemons:
@@ -574,8 +694,8 @@ class ClusterSim:
         self.node_draining[node_id] = False
         self._reindex(node_id)
         self._arm_sched(t)
-        self._push(self.faults.next_fault_time(node_id, t),
-                   "fault_node", node_id)
+        heapq.heappush(self._fault_heap,
+                       (self.faults.next_fault_time(node_id, t), node_id))
         if self.recorder is not None:
             self.recorder.on_node_event(t, node_id, "repair")
 
@@ -589,35 +709,49 @@ class ClusterSim:
         arr_prio = arrivals.priority.tolist()
         arr_out = arrivals.outcome.tolist()
         n_arr = len(arr_t)
+        start_job_id = arrivals.start_job_id
         ai = 0
 
         if self.recorder is not None:
             self.recorder.bind(self)
         if self.policy is not None:
             self.policy.bind(self)
-        for i in range(self.spec.n_nodes):
-            self._push(self.faults.next_fault_time(i, 0.0), "fault_node", i)
+        # batched fault delivery: the initial per-node chain is one
+        # vectorized draw (same RNG stream as n scalar calls) heapified
+        # into the dedicated fault stream
+        first = self.faults.next_fault_times(0.0).tolist()
+        fheap = [(first[i], i) for i in range(self.spec.n_nodes)]
+        heapq.heapify(fheap)
+        self._fault_heap = fheap
         if self.enable_lemon:
             t = self.lemon_scan_period_s
             while t < self.horizon_s:
-                self._push(t, "lemon_scan", None)
+                self._push(t, K_LEMON, None)
                 t += self.lemon_scan_period_s
 
         self._now = 0.0
         events = self.events
         horizon = self.horizon_s
         running = self.running
+        policy = self.policy
+        node_ok = self.node_ok
+        removed = self.removed_lemons
+        sample_fault = self.faults.sample_fault
+        heappop = heapq.heappop
+        state_of = _STATE_OF
         # hoisted bound hook: the sched branch is the hottest recorder site
         on_sched_pass = (None if self.recorder is None
                          else self.recorder.on_sched_pass)
-        while events or ai < n_arr:
+        while True:
             t_ev = events[0][0] if events else _INF
-            # merge-iterate arrivals with the event heap: arrivals are
-            # already time-sorted, so they never touch the heap
-            if ai < n_arr and arr_t[ai] <= t_ev:
+            t_f = fheap[0][0] if fheap else _INF
+            t_min = t_f if t_f < t_ev else t_ev
+            if ai < n_arr and arr_t[ai] <= t_min:
+                # merge-iterate arrivals with the event/fault heaps:
+                # arrivals are already time-sorted, so they never touch them
                 t = arr_t[ai]
                 self._now = t
-                jid = arrivals.start_job_id + ai
+                jid = start_job_id + ai
                 req = JobRequest(
                     job_id=jid, run_id=jid, submit_t=t, n_gpus=arr_gpus[ai],
                     duration_s=arr_dur[ai], priority=arr_prio[ai],
@@ -625,42 +759,54 @@ class ClusterSim:
                 ai += 1
                 self._enqueue(t, RunState(req, req.duration_s))
                 continue
-            t, seq, kind, payload = heapq.heappop(events)
-            self._now = t
-            if t > horizon:
+            if t_min > horizon:   # also covers both-heaps-empty (inf)
                 break
-            if kind == "finish":
+            if t_f < t_ev:
+                t, node_id = heappop(fheap)
+                self._now = t
+                if node_ok[node_id] or node_id not in removed:
+                    fault = sample_fault(node_id, t)
+                    self._handle_fault(t, fault)
+                    if policy is not None:
+                        policy.on_fault(self, t, fault)
+                continue
+            t, seq, kind, payload = heappop(events)
+            self._now = t
+            if kind == K_FINISH:
                 r = running.get(payload)
                 if r is None or r.finish_seq != seq:
                     continue   # cancelled/stale finish
+                run_ = r.run
                 ran = t - r.start_t
-                r.run.productive_s += ran
-                r.run.remaining_s = max(r.run.remaining_s - ran, 0.0)
-                state = JobState(r.run.request.outcome) \
-                    if r.run.remaining_s <= 1.0 else JobState.TIMEOUT
+                run_.productive_s += ran
+                rem = run_.remaining_s - ran
+                if rem < 0.0:
+                    rem = 0.0
+                run_.remaining_s = rem
+                state = state_of[run_.request.outcome] if rem <= 1.0 \
+                    else _TIMEOUT
                 self._record(r, t, state)
                 self._end_job(r, t)
-            elif kind == "sched":
+            elif kind == K_SCHED:
                 if self._armed and self._armed[0] <= t:
-                    heapq.heappop(self._armed)
-                if self.policy is not None:
+                    heappop(self._armed)
+                if policy is not None:
                     # interventions (evictions, spare releases) land before
                     # the pass so this tick's placements see them
-                    self.policy.on_schedule_pass(self, t)
+                    policy.on_schedule_pass(self, t)
                 # _pass_t absorbs same-tick re-arms from in-pass preemption
                 # releases: the changed/blocked retry logic below covers them
                 self._pass_t = t
                 if on_sched_pass is None:
                     n_started, n_preempted, blocked = self._schedule_pass(t)
                 else:
-                    n_queued = len(self.queue)
+                    n_queued = len(self.queue) + len(self._deferred)
                     n_started, n_preempted, blocked = self._schedule_pass(t)
                     on_sched_pass(t, n_queued, n_started, n_preempted,
                                   blocked)
                 self._pass_t = -1.0
-                changed = n_started > 0 or n_preempted > 0
-                if self.queue:
-                    if changed:
+                if self.queue or self._deferred:
+                    if n_started > 0 or n_preempted > 0:
                         # progress was made but jobs remain: continue at the
                         # next tick (backfill depth / capacity may now allow
                         # more placements)
@@ -671,17 +817,10 @@ class ClusterSim:
                         expiry = self._next_guard_expiry(t)
                         if expiry < _INF:
                             self._arm_sched(expiry)
-            elif kind == "fault_node":
-                if not self.node_ok[payload] and payload in self.removed_lemons:
-                    continue
-                fault = self.faults.sample_fault(payload, t)
-                self._handle_fault(t, fault)
-                if self.policy is not None:
-                    self.policy.on_fault(self, t, fault)
-            elif kind == "repair":
+            elif kind == K_REPAIR:
                 node_id = payload
-                if self.policy is not None:
-                    act = self.policy.on_node_repair(self, t, node_id)
+                if policy is not None:
+                    act = policy.on_node_repair(self, t, node_id)
                     if act == POLICY_HOLD:
                         # policy keeps the node (warm spare pool); record
                         # the hold so node-state sequences in the trace
@@ -691,17 +830,17 @@ class ClusterSim:
                                                         "policy")
                         continue
                     if act:        # health gate: delay return-to-service
-                        self._push(t + float(act), "repair", node_id)
+                        self._push(t + float(act), K_REPAIR, node_id)
                         continue
                 self._return_to_service(t, node_id)
-            elif kind == "kill_node":
+            elif kind == K_KILL:
                 self._handle_kill(t, payload)
-            elif kind == "lemon_scan":
+            elif kind == K_LEMON:
                 self._lemon_scan(t)
-            elif kind == "policy":
-                if self.policy is not None:
-                    self.policy.on_timer(self, t, payload)
+            elif kind == K_POLICY:
+                if policy is not None:
+                    policy.on_timer(self, t, payload)
 
         # close out still-running jobs as CANCELLED at horizon (censored)
         for r in list(self.running.values()):
-            self._record(r, self.horizon_s, JobState.CANCELLED)
+            self._record(r, self.horizon_s, _CANCELLED)

@@ -60,8 +60,11 @@ RSC2 = ClusterSpec("RSC-2", n_nodes=1000, jobs_per_day=4400.0,
 MIXES = {"RSC-1": RSC1_MIX, "RSC-2": RSC2_MIX}
 
 
-@dataclass
+@dataclass(slots=True)
 class JobRequest:
+    """One arrival (``slots=True``: the event loop materializes one per
+    arrival and requeued runs keep theirs alive for the whole horizon)."""
+
     job_id: int
     run_id: int
     submit_t: float

@@ -1,0 +1,30 @@
+"""Ensemble engine: many-seed replay grids with streaming aggregation.
+
+The paper's headline projections (MTTF vs. GPU scale §V, ETTR efficacy
+bands Fig. 9/12) are statistical claims — one replay is an anecdote; an
+*ensemble* of replays over a seed x scale grid gives the mean and the
+band.  This package runs those grids on a worker pool and streams each
+worker's per-cell stats (scored in-worker from its recorded trace, which
+never leaves the worker) into a deterministic band aggregator:
+
+    PYTHONPATH=src python -m repro.ensemble.run \\
+        --gpus 1024,4096,16384 --seeds 16
+
+Pieces:
+  * ``runner``    — spawn-pool cell executor (``run_cells``), the
+    RSC-1-like ``scaled_spec``, and ``score_cell`` (the one place a
+    replay's trace is turned into ETTR/MTTF/goodput/attribution stats —
+    the mitigation sweep scores its cells through it too).
+  * ``aggregate`` — ``EnsembleAggregator``: order-independent online
+    accumulation; bands are bit-identical for any worker count and any
+    cell completion order (tests/test_ensemble.py).
+  * ``run``       — the CLI front door.
+"""
+from repro.ensemble.aggregate import EnsembleAggregator, MetricBand
+from repro.ensemble.runner import (CellStats, ReplayCell, run_cells,
+                                   run_replay_cell, scaled_spec, score_cell)
+
+__all__ = [
+    "CellStats", "EnsembleAggregator", "MetricBand", "ReplayCell",
+    "run_cells", "run_replay_cell", "scaled_spec", "score_cell",
+]

@@ -1,0 +1,269 @@
+"""Worker-pool ensemble executor + per-cell replay scoring.
+
+One *cell* is one full ``ClusterSim`` replay at a (scale, seed) grid
+point.  Cells are embarrassingly parallel, so ``run_cells`` fans any
+picklable task list out over a ``multiprocessing`` spawn pool and streams
+results back in completion order; each replay cell records a trace,
+scores it in-worker with ``score_cell``, and returns only the compact
+``CellStats`` scalars — a paper-scale ensemble never holds more than one
+trace per worker in RAM.
+
+``run_cells`` is the repo's single worker-pool implementation: the
+mitigation sweep (``repro.mitigations.sweep``) and the ensemble CLI both
+execute through it.
+"""
+from __future__ import annotations
+
+import math
+import os
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster import analysis
+from repro.cluster.workload import ClusterSpec
+from repro.core import mttf_model
+from repro.core.ettr_model import ETTRParams, expected_ettr
+from repro.core.metrics import (goodput_loss, is_infra_failure, job_run_ettr,
+                                mttf)
+
+# RSC-1 scaling: 7.2k jobs/day on 2000 nodes, 83% target utilization
+JOBS_PER_NODE_DAY = 3.6
+W_CP_S = 300.0            # sync checkpoint write cost (paper Fig. 10 axis)
+U0_S = 300.0              # restart/init overhead
+# paper's typical cadence for larger jobs — the baseline accounting interval
+DEFAULT_CP_INTERVAL_S = 3600.0
+
+
+def scaled_spec(n_gpus: int, *, gpus_per_node: int = 8,
+                r_f: float = 6.5e-3) -> ClusterSpec:
+    """An RSC-1-like cluster shrunk (or grown) to ``n_gpus``: job mix
+    capped at the cluster size, per-node arrival rate and utilization
+    target preserved."""
+    n_nodes = max(1, n_gpus // gpus_per_node)
+    return ClusterSpec(
+        "RSC-1", n_nodes=n_nodes, gpus_per_node=gpus_per_node,
+        jobs_per_day=n_nodes * JOBS_PER_NODE_DAY,
+        target_utilization=0.83, r_f=r_f,
+        max_job_gpus=n_nodes * gpus_per_node)
+
+
+def default_min_gpus(n_gpus: int) -> int:
+    """Qualifying-job floor for the ETTR/MTTF metrics: large-ish relative
+    to the cluster (>= 1/16th of capacity, floor 64 GPUs) — small enough
+    that every scale yields a usable sample inside a days-long horizon."""
+    return max(64, n_gpus // 16)
+
+
+# ---------------------------------------------------------------------------
+# per-cell scoring (shared by the ensemble runner and the mitigation sweep)
+# ---------------------------------------------------------------------------
+def _measured_and_modeled(sim, trace, policy, *, min_gpus: int,
+                          min_hours: float, r_f_nominal: float):
+    """Per qualifying run (grouped from the cell's trace): measured ETTR
+    (the policy's checkpoint cadence, hourly if no policy) and the two
+    analytic predictions (realized interruption rates / nominal r_f)."""
+    runs = analysis.group_runs(trace)
+    measured, modeled, modeled_nom = [], [], []
+    for jobs in runs.values():
+        g = jobs[0].n_gpus
+        if g < min_gpus:
+            continue
+        scheduled_s = sum(j.run_time for j in jobs)
+        if scheduled_s < min_hours * 3600.0:
+            continue
+        job_nodes = max(1, math.ceil(g / sim.spec.gpus_per_node))
+        # realized interruption rate (incl. preemptions and user failures
+        # the hardware-only analytic model does not see) — computed before
+        # the cadence so rate-tuned cadence controllers can use it
+        n_int = sum(1 for j in jobs if j.state.value != "COMPLETED")
+        run_days = max(scheduled_s, 3600.0) / 86400.0
+        rf_eff = max(n_int / run_days / job_nodes, r_f_nominal)
+        interval = policy.checkpoint_interval_s(sim, g, realized_rf=rf_eff) \
+            if policy is not None else None
+        if interval is None:
+            interval = DEFAULT_CP_INTERVAL_S
+        m = job_run_ettr(jobs, checkpoint_interval=interval, w_cp=W_CP_S,
+                         u0=U0_S)
+        measured.append(m.ettr)
+        n_att = max(m.n_interruptions + 1, 1)
+        common = dict(n_nodes=job_nodes, w_cp_s=W_CP_S, u0_s=U0_S,
+                      dt_cp_s=interval, q_s=m.queue / n_att,
+                      runtime_s=max(m.productive, 3600.0))
+        modeled.append(expected_ettr(ETTRParams(r_f=rf_eff, **common)))
+        modeled_nom.append(expected_ettr(ETTRParams(r_f=r_f_nominal,
+                                                    **common)))
+    return measured, modeled, modeled_nom
+
+
+def score_cell(sim, trace, *, policy=None, min_gpus: Optional[int] = None,
+               min_hours: float = 12.0,
+               r_f_nominal: Optional[float] = None) -> dict:
+    """Score one replay's recorded trace into the shared per-cell metric
+    dict: measured/modeled ETTR over qualifying runs, MTTF over large
+    jobs, goodput, fitted failure rate, and the fault attribution mix.
+    Pure function of (trace, policy cadence) — bit-deterministic, which
+    is what makes ensemble bands reproducible across worker counts."""
+    spec = sim.spec
+    if r_f_nominal is None:
+        r_f_nominal = spec.r_f
+    if min_gpus is None:
+        min_gpus = default_min_gpus(spec.n_nodes * spec.gpus_per_node)
+    measured, modeled, modeled_nom = _measured_and_modeled(
+        sim, trace, policy, min_gpus=min_gpus, min_hours=min_hours,
+        r_f_nominal=r_f_nominal)
+
+    records = trace.job_records()
+    large = [r for r in records if r.n_gpus >= min_gpus]
+    infra = [r for r in large if is_infra_failure(r)]
+    large_runtime_s = sum(r.run_time for r in large)
+    loss = goodput_loss(records)
+    scheduled_gpu_s = sum(r.run_time * r.n_gpus for r in records)
+    capacity_gpu_s = spec.n_nodes * spec.gpus_per_node * sim.horizon_s
+    goodput = (scheduled_gpu_s - loss.failure_loss_gpu_s
+               - loss.preemption_loss_gpu_s) / max(capacity_gpu_s, 1e-9)
+
+    # Fig. 4-style attribution mix: fraction of logged faults per symptom
+    # (sorted by symptom for deterministic ordering)
+    symptoms = trace.tables["faults"]["symptom"]
+    attribution: dict[str, float] = {}
+    if len(symptoms):
+        uniq, counts = np.unique(symptoms, return_counts=True)
+        total = float(counts.sum())
+        attribution = {str(s): float(c) / total
+                       for s, c in zip(uniq.tolist(), counts.tolist())}
+
+    n_evicted = int(np.sum(trace.tables["node_events"]["event"] == "evict"))
+    return {
+        "n_records": len(records),
+        "n_faults": trace.n_rows("faults"),
+        "n_infra_failures": len(infra),
+        "n_runs_measured": len(measured),
+        "ettr_sim": float(np.mean(measured)) if measured else float("nan"),
+        "ettr_model": float(np.mean(modeled)) if modeled else float("nan"),
+        "ettr_model_nominal": (float(np.mean(modeled_nom)) if modeled_nom
+                               else float("nan")),
+        "mttf_large_h": mttf(large_runtime_s / 3600.0, len(infra)),
+        "goodput": goodput,
+        "fitted_r_f": mttf_model.fit_r_f(records, min_gpus=min_gpus // 2),
+        "attribution": attribution,
+        "n_evicted": n_evicted,
+    }
+
+
+# ---------------------------------------------------------------------------
+# replay cells
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ReplayCell:
+    """One (scale, seed) grid point of a bare-engine replay ensemble."""
+
+    n_gpus: int
+    seed: int
+    horizon_days: float = 8.0
+    r_f: float = 6.5e-3
+    min_hours: float = 12.0
+    min_gpus: Optional[int] = None   # None -> default_min_gpus(n_gpus)
+
+
+@dataclass
+class CellStats:
+    """Compact per-cell result streamed back from a worker (scalars plus
+    the small attribution dict — never the trace itself)."""
+
+    n_gpus: int
+    seed: int
+    wall_s: float
+    sim_days: float
+    n_records: int
+    n_faults: int
+    n_infra_failures: int
+    n_runs_measured: int
+    ettr_sim: float
+    ettr_model: float
+    ettr_model_nominal: float
+    mttf_large_h: float
+    goodput: float
+    fitted_r_f: float
+    n_evicted: int
+    attribution: dict = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+
+def run_replay_cell(cell: ReplayCell) -> CellStats:
+    """One full replay with a trace recorder attached, scored in-process
+    (module-level: spawn-picklable pool worker)."""
+    from repro.cluster.scheduler import ClusterSim
+    from repro.trace import TraceRecorder
+
+    spec = scaled_spec(cell.n_gpus, r_f=cell.r_f)
+    recorder = TraceRecorder()
+    t0 = time.time()
+    sim = ClusterSim(spec, horizon_days=cell.horizon_days, seed=cell.seed,
+                     recorder=recorder)
+    sim.run()
+    trace = recorder.finalize(sim)
+    stats = score_cell(sim, trace, policy=None, min_gpus=cell.min_gpus,
+                       min_hours=cell.min_hours, r_f_nominal=cell.r_f)
+    return CellStats(n_gpus=cell.n_gpus, seed=cell.seed,
+                     wall_s=round(time.time() - t0, 3),
+                     sim_days=cell.horizon_days, **stats)
+
+
+def grid(gpus_list: Sequence[int], seeds: Sequence[int], *,
+         horizon_days: float = 8.0, r_f: float = 6.5e-3,
+         min_hours: float = 12.0) -> list[ReplayCell]:
+    """The seed x scale grid, scale-major (matches aggregation order)."""
+    return [ReplayCell(n_gpus=g, seed=s, horizon_days=horizon_days,
+                       r_f=r_f, min_hours=min_hours)
+            for g in gpus_list for s in seeds]
+
+
+# ---------------------------------------------------------------------------
+# worker-pool executor
+# ---------------------------------------------------------------------------
+def _indexed_call(arg):
+    worker, i, task = arg
+    return i, worker(task)
+
+
+def run_cells(worker: Callable, tasks: Sequence, *, procs: int = 0,
+              on_result: Optional[Callable] = None) -> list:
+    """Execute ``worker(task)`` for every task, fanning out over a
+    ``multiprocessing`` spawn pool when ``procs > 1``.
+
+    Results stream back in *completion* order — ``on_result(i, result)``
+    fires as each cell lands, so an aggregator can fold cells online —
+    and the returned list is in *task* order regardless.  ``worker`` must
+    be a module-level function and tasks picklable (spawn contract).
+
+    spawn, not fork: the host process may carry jax's thread pools
+    (benchmark suite, pytest), and forking a multithreaded process can
+    deadlock; workers only re-import the numpy-level sim stack."""
+    n = len(tasks)
+    results: list = [None] * n
+    if procs and procs > 1 and n > 1:
+        import multiprocessing as mp
+
+        with mp.get_context("spawn").Pool(min(procs, n)) as pool:
+            it = pool.imap_unordered(
+                _indexed_call, [(worker, i, t) for i, t in enumerate(tasks)])
+            for i, res in it:
+                results[i] = res
+                if on_result is not None:
+                    on_result(i, res)
+    else:
+        for i, task in enumerate(tasks):
+            res = worker(task)
+            results[i] = res
+            if on_result is not None:
+                on_result(i, res)
+    return results
+
+
+def default_procs() -> int:
+    return min(os.cpu_count() or 1, 8)

@@ -6,8 +6,10 @@ reports per-cell ETTR / MTTF / goodput plus deltas vs the baseline policy
 at the same (scale, seed) and vs the analytical ``ettr_model`` prediction
 (fed the realized interruption rates and queue waits, Fig. 9-style, so the
 comparison isolates the checkpoint/restart terms the model actually
-captures).  Cells are independent, so the grid fans out over a
-``multiprocessing`` pool.
+captures).  Cells are independent, so the grid fans out over the shared
+ensemble executor (``repro.ensemble.runner.run_cells`` — the repo's one
+worker-pool implementation) and each cell is scored by the shared
+``repro.ensemble.runner.score_cell``.
 
 Every cell runs with a ``repro.trace.TraceRecorder`` attached and scores
 its metrics *from the recorded trace* (record trace -> analyze trace, the
@@ -35,38 +37,16 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.cluster import analysis
 from repro.cluster.scheduler import ClusterSim
-from repro.cluster.workload import ClusterSpec
-from repro.core.ettr_model import ETTRParams, expected_ettr
-from repro.core.metrics import (goodput_loss, is_infra_failure, job_run_ettr,
-                                mttf)
+from repro.ensemble.runner import (  # noqa: F401  (re-exported for compat)
+    DEFAULT_CP_INTERVAL_S, JOBS_PER_NODE_DAY, U0_S, W_CP_S, default_min_gpus,
+    run_cells, scaled_spec, score_cell)
 from repro.mitigations.policy import make_policy
 from repro.trace import TraceRecorder
 from repro.trace import io as trace_io
-from repro.trace.schema import Trace
-
-# RSC-1 scaling: 7.2k jobs/day on 2000 nodes, 83% target utilization
-JOBS_PER_NODE_DAY = 3.6
-W_CP_S = 300.0            # sync checkpoint write cost (paper Fig. 10 axis)
-U0_S = 300.0              # restart/init overhead
-# paper's typical cadence for larger jobs — the baseline accounting interval
-DEFAULT_CP_INTERVAL_S = 3600.0
 
 DEFAULT_POLICIES = ("baseline", "lemon_eviction", "checkpoint_optimal")
 DEFAULT_GPUS = (512, 2048, 8192)
-
-
-def scaled_spec(n_gpus: int, *, gpus_per_node: int = 8,
-                r_f: float = 6.5e-3) -> ClusterSpec:
-    """An RSC-1-like cluster shrunk to ``n_gpus``: job mix capped at the
-    cluster size, arrival rate and utilization target preserved."""
-    n_nodes = max(1, n_gpus // gpus_per_node)
-    return ClusterSpec(
-        "RSC-1", n_nodes=n_nodes, gpus_per_node=gpus_per_node,
-        jobs_per_day=n_nodes * JOBS_PER_NODE_DAY,
-        target_utilization=0.83, r_f=r_f,
-        max_job_gpus=n_nodes * gpus_per_node)
 
 
 @dataclass
@@ -91,51 +71,13 @@ class CellResult:
     trace_path: Optional[str] = None   # npz archive (--save-traces)
 
 
-def _measured_and_modeled(sim: ClusterSim, trace: Trace, policy, *,
-                          min_gpus: int, min_hours: float,
-                          r_f_nominal: float):
-    """Per qualifying run (grouped from the cell's trace): measured ETTR
-    (policy's checkpoint cadence) and the two analytic predictions."""
-    runs = analysis.group_runs(trace)
-    measured, modeled, modeled_nom = [], [], []
-    for jobs in runs.values():
-        g = jobs[0].n_gpus
-        if g < min_gpus:
-            continue
-        scheduled_s = sum(j.run_time for j in jobs)
-        if scheduled_s < min_hours * 3600.0:
-            continue
-        job_nodes = max(1, math.ceil(g / sim.spec.gpus_per_node))
-        # realized interruption rate (incl. preemptions and user failures
-        # the hardware-only analytic model does not see) — computed before
-        # the cadence so rate-tuned cadence controllers can use it
-        n_int = sum(1 for j in jobs if j.state.value != "COMPLETED")
-        run_days = max(scheduled_s, 3600.0) / 86400.0
-        rf_eff = max(n_int / run_days / job_nodes, r_f_nominal)
-        interval = policy.checkpoint_interval_s(sim, g, realized_rf=rf_eff) \
-            if policy is not None else None
-        if interval is None:
-            interval = DEFAULT_CP_INTERVAL_S
-        m = job_run_ettr(jobs, checkpoint_interval=interval, w_cp=W_CP_S,
-                         u0=U0_S)
-        measured.append(m.ettr)
-        n_att = max(m.n_interruptions + 1, 1)
-        common = dict(n_nodes=job_nodes, w_cp_s=W_CP_S, u0_s=U0_S,
-                      dt_cp_s=interval, q_s=m.queue / n_att,
-                      runtime_s=max(m.productive, 3600.0))
-        modeled.append(expected_ettr(ETTRParams(r_f=rf_eff, **common)))
-        modeled_nom.append(expected_ettr(ETTRParams(r_f=r_f_nominal,
-                                                    **common)))
-    return measured, modeled, modeled_nom
-
-
 def run_cell(policy_name: str, n_gpus: int, seed: int, *,
              horizon_days: float = 8.0, min_gpus: Optional[int] = None,
              min_hours: float = 12.0, policy_kwargs: Optional[dict] = None,
              trace_dir: Optional[str] = None) -> CellResult:
     """One grid cell: replay with the policy attached, record the trace,
-    and score every metric from it (optionally archiving the trace as npz
-    under ``trace_dir``)."""
+    and score every metric from it through the shared ensemble scorer
+    (optionally archiving the trace as npz under ``trace_dir``)."""
     spec = scaled_spec(n_gpus)
     policy = make_policy(policy_name, seed=seed + 9000,
                          **(policy_kwargs or {}))
@@ -147,27 +89,11 @@ def run_cell(policy_name: str, n_gpus: int, seed: int, *,
     trace = recorder.finalize(sim)
     wall = time.time() - t0
 
-    if min_gpus is None:
-        # large-ish jobs relative to the cluster (>= 1/16th of capacity,
-        # floor 64 GPUs) — small enough that every scale yields a usable
-        # qualifying-run sample inside a days-long horizon
-        min_gpus = max(64, n_gpus // 16)
-    measured, modeled, modeled_nom = _measured_and_modeled(
-        sim, trace, policy, min_gpus=min_gpus, min_hours=min_hours,
-        r_f_nominal=spec.r_f)
-
-    records = trace.job_records()
-    large = [r for r in records if r.n_gpus >= min_gpus]
-    infra = [r for r in large if is_infra_failure(r)]
-    large_runtime_s = sum(r.run_time for r in large)
-    loss = goodput_loss(records)
-    scheduled_gpu_s = sum(r.run_time * r.n_gpus for r in records)
-    capacity_gpu_s = spec.n_gpus * sim.horizon_s
-    goodput = (scheduled_gpu_s - loss.failure_loss_gpu_s
-               - loss.preemption_loss_gpu_s) / max(capacity_gpu_s, 1e-9)
-
+    stats = score_cell(sim, trace, policy=policy, min_gpus=min_gpus,
+                       min_hours=min_hours, r_f_nominal=spec.r_f)
     extra = {"n_node_events": trace.n_rows("node_events"),
-             "n_sched_passes": trace.n_rows("sched_passes")}
+             "n_sched_passes": trace.n_rows("sched_passes"),
+             "fitted_r_f": stats["fitted_r_f"]}
     for attr in ("evictions", "activations", "restarts", "gate_log"):
         v = getattr(policy, attr, None)
         if v is not None:
@@ -178,19 +104,15 @@ def run_cell(policy_name: str, n_gpus: int, seed: int, *,
         trace_path = os.path.join(
             trace_dir, f"{policy_name}_{n_gpus}gpu_seed{seed}.npz")
         trace_io.save(trace, trace_path)
-    n_evicted = int(np.sum(
-        trace.tables["node_events"]["event"] == "evict"))
     return CellResult(
         policy=policy_name, n_gpus=n_gpus, seed=seed, wall_s=round(wall, 2),
-        n_records=len(records), n_faults=trace.n_rows("faults"),
-        n_infra_failures=len(infra), n_runs_measured=len(measured),
-        ettr_sim=float(np.mean(measured)) if measured else float("nan"),
-        ettr_model=float(np.mean(modeled)) if modeled else float("nan"),
-        ettr_model_nominal=(float(np.mean(modeled_nom)) if modeled_nom
-                            else float("nan")),
-        mttf_large_h=mttf(large_runtime_s / 3600.0, len(infra)),
-        goodput=goodput, n_evicted=n_evicted, extra=extra,
-        trace_path=trace_path)
+        n_records=stats["n_records"], n_faults=stats["n_faults"],
+        n_infra_failures=stats["n_infra_failures"],
+        n_runs_measured=stats["n_runs_measured"],
+        ettr_sim=stats["ettr_sim"], ettr_model=stats["ettr_model"],
+        ettr_model_nominal=stats["ettr_model_nominal"],
+        mttf_large_h=stats["mttf_large_h"], goodput=stats["goodput"],
+        n_evicted=stats["n_evicted"], extra=extra, trace_path=trace_path)
 
 
 def _cell_worker(args) -> CellResult:
@@ -288,25 +210,16 @@ def sweep(policies: Sequence[str] = DEFAULT_POLICIES,
           procs: int = 0,
           policy_kwargs: Optional[dict[str, dict]] = None,
           trace_dir: Optional[str] = None) -> SweepResult:
-    """Run the policy x scale x seed grid.  ``procs`` > 1 fans cells out
-    over a multiprocessing pool; 0/1 runs serially in-process.
-    ``trace_dir`` archives each cell's trace as npz."""
+    """Run the policy x scale x seed grid on the shared ensemble executor
+    (``procs`` > 1 fans cells out over its spawn pool; 0/1 runs serially
+    in-process).  ``trace_dir`` archives each cell's trace as npz."""
     kw = dict(horizon_days=horizon_days, min_gpus=min_gpus,
               min_hours=min_hours, trace_dir=trace_dir)
     tasks = [(p, g, s, {**kw, "policy_kwargs":
                         (policy_kwargs or {}).get(p)})
              for p in policies for g in gpus_list for s in seeds]
     t0 = time.time()
-    if procs and procs > 1 and len(tasks) > 1:
-        import multiprocessing as mp
-
-        # spawn, not fork: the host process may carry jax's thread pools
-        # (benchmark suite, pytest), and forking a multithreaded process
-        # can deadlock; workers only re-import the numpy-level sim stack
-        with mp.get_context("spawn").Pool(min(procs, len(tasks))) as pool:
-            cells = pool.map(_cell_worker, tasks)
-    else:
-        cells = [_cell_worker(t) for t in tasks]
+    cells = run_cells(_cell_worker, tasks, procs=procs)
     cells.sort(key=lambda c: (c.n_gpus, c.policy, c.seed))
     return SweepResult(cells, horizon_days, wall_s=time.time() - t0)
 

@@ -103,6 +103,26 @@ def test_vectorized_monte_carlo_queue_waits_lower_ettr():
     assert mq.ettr_mean < m0.ettr_mean
 
 
+def test_quick_scale_jobs_per_sec_floor():
+    """Perf floor guard at the CI smoke scale (100 nodes / 2 days): the
+    hot-path-v2 engine sustains ~40k jobs/sec here on the reference CPU;
+    a drop below 3k (>10x regression headroom for noisy CI machines)
+    means a perf-path regression, not machine noise.  Best-of-3 damps
+    cold-start and scheduler-jitter effects."""
+    import time
+
+    spec = ClusterSpec("RSC-1", n_nodes=100, jobs_per_day=400.0,
+                       target_utilization=0.83, r_f=6.5e-3)
+    best = 0.0
+    for trial in range(3):
+        t0 = time.perf_counter()
+        sim = ClusterSim(spec, horizon_days=2.0, seed=trial)
+        sim.run()
+        wall = time.perf_counter() - t0
+        best = max(best, len(sim.records) / max(wall, 1e-9))
+    assert best >= 3000.0, f"quick-scale jobs/sec collapsed: {best:.0f}"
+
+
 def test_sim_bench_quick_smoke(repo_root):
     """Tier-1 guard for the perf path: `benchmarks.run --only sim_bench
     --quick` must run end-to-end (catches API drift and crashes)."""
@@ -115,3 +135,18 @@ def test_sim_bench_quick_smoke(repo_root):
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "sim_bench" in proc.stdout
     assert "jobs_per_sec" in proc.stdout
+
+
+def test_sim_bench_profile_smoke(repo_root):
+    """`benchmarks.run --only sim_bench --quick --profile` prints the
+    top-cumulative cProfile table (the perf-PR tooling satellite)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo_root, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "sim_bench",
+         "--quick", "--profile"],
+        cwd=repo_root, env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "cumulative" in proc.stdout       # pstats table header
+    assert "_schedule_pass" in proc.stdout   # the known hot path shows up
+    assert "profile mode completed" in proc.stdout
