@@ -54,6 +54,15 @@ QUICK = False
 PROFILE = False
 
 
+def peak_rss_mb() -> float:
+    """This process's peak RSS high-water mark in MB — recorded in the
+    --json perf trajectory so the constant-memory claims (hot-path v3
+    spill mode) are tracked alongside throughput."""
+    import resource
+
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
 def git_sha() -> str:
     """Current commit (+ '-dirty' when the tree has changes); '?' outside
     a git checkout — recorded in --json so perf points are attributable."""

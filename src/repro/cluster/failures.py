@@ -37,6 +37,11 @@ CO_OCCURRENCE = {
     "ib_link_error": [("gpu_unavailable", 0.02)],
 }
 
+# canonical symptom order — the stable int-code vocabulary the engine's
+# columnar fault log pre-seeds (repro.trace.store.Interner), so symptom
+# codes are identical across runs, seeds, and spill part files
+SYMPTOMS: tuple[str, ...] = tuple(SYMPTOM_MIX)
+
 
 @dataclass(frozen=True)
 class Episode:

@@ -31,28 +31,57 @@ jobs — in minutes on one CPU):
     with the event heap, never materialized as heap events.
 
 Hot-path v2 (ensemble-throughput pass, on top of the devices above):
-  * **int-coded event kinds**: heap tuples carry ``K_FINISH``/``K_SCHED``/…
-    ints instead of strings; the dispatch loop compares small ints, ordered
-    by event frequency.
-  * **dedicated fault stream**: per-node fault chains live in their own
-    ``(t, node_id)`` heap, merge-iterated with the event heap like arrivals,
-    so thousands of pending per-node fault events no longer deepen every
-    push/pop on the main heap; the initial chain is armed with one
-    vectorized draw (``FaultProcess.next_fault_times``) that consumes the
-    exact same RNG stream as the per-node scalar path.
-  * **allocation-free scheduling pass**: jobs deferred by a pass stay in a
-    persistent *sorted* list that the next pass merge-iterates with the
-    queue heap (deferral order == pop order, so sortedness is invariant);
-    deferred jobs re-enter the heap never instead of twice per pass.
-  * scratch-list reuse, hoisted attribute lookups, inlined bucket reindex
-    on the alloc/release paths, and memoized ``JobState`` lookups.
+int-coded event kinds; per-node fault chains in a dedicated ``(t,
+node_id)`` heap armed by one vectorized draw
+(``FaultProcess.next_fault_times``); an allocation-free scheduling pass
+(persistent sorted deferred list merge-iterated with the queue heap);
+guard-eligible-prefix preemption walks; fused release/reindex/drain in
+``_end_job``; ``__slots__`` everywhere hot; memoized ``JobState``.
 
-The v2 pass preserves the event order, RNG consumption order, and set-op
-sequence of the v1 engine bit-for-bit (only heap tie-breaks between events
-at *exactly* equal continuous times — probability zero — could differ), so
-seed-equivalence, lazy-tick granularity, and recorded-vs-unrecorded
-identity all survive untouched (regression-tested in tests/test_sim_perf.py
-and tests/test_trace.py).
+Hot-path v3 (columnar-store pass, on top of v2):
+  * **columnar append logs**: job records and faults no longer accumulate
+    as per-event Python objects — ``_record``/``_handle_fault`` append
+    plain tuples into chunked columnar stores
+    (``repro.trace.store.ChunkedStore``) whose chunks *are* the
+    repro-trace/v1 columns (enums int-coded through per-column
+    vocabularies).  ``TraceRecorder.finalize`` becomes a near-free
+    slice/concat, and the O(total-jobs) object-list RAM floor under long
+    replays disappears.  ``sim.records`` / ``sim.fault_log`` stay
+    API-compatible: they are materializing views (cached, incrementally
+    extended) over the stores.
+  * **SoA node state**: per-node scheduling state lives in flat parallel
+    arrays — ``free`` (GPUs), ``_bucket_of``, and a single merged
+    ``_node_state`` status array (ACTIVE / DRAINING / DOWN replaces the
+    two boolean arrays, halving status loads on the release path).
+    Bucket *membership* stays as per-bucket sets: which member a bucket
+    yields is part of the frozen event-sequence contract (sha256-gated in
+    tests/test_sim_perf.py), so the index is maintained as O(1) set ops
+    while the status/free arrays are plain SoA.  ``node_ok`` /
+    ``node_draining`` remain as derived read-only views.
+  * **batch-drained main loop**: consecutive arrivals and consecutive
+    event-heap pops are drained in inner loops that only re-check the
+    competing streams' head timestamps when they can actually have
+    changed (an arrival arming an earlier tick, a repair pushing a new
+    fault chain), instead of recomputing every head every iteration.
+    Tie-break order (arrival <= fault/event, event <= fault) is
+    preserved exactly.
+  * **sorted priority index**: the preemption walk iterates an
+    incrementally-maintained sorted priority-key list instead of
+    re-sorting the index keys on every attempt.
+  * **paused cyclic GC**: ``run()`` executes with the cyclic collector
+    paused (restored on exit).  The engine's steady-state allocations
+    are acyclic — refcounting frees them promptly — and the columnar
+    logs keep the long-lived heap flat, so generational scans were pure
+    overhead (measured 10-17%, growing with horizon).
+  * **streaming spill**: ``TraceRecorder(trace_spill_dir=...)`` redirects
+    every completed chunk to npz part files, so a full 330-day replay
+    records in near-constant RSS (see ``repro.trace.store``).
+
+The v3 pass preserves the event order, RNG consumption order, and set-op
+sequence of the v2 engine bit-for-bit — sha256 digests of the full
+record/fault/drain/lemon sequences plus RNG stream positions are pinned
+across five configs (incl. lemon eviction, RSC-1 scale, and a
+spill-enabled run) in tests/test_sim_perf.py.
 
 Mitigation hook points (repro.mitigations): an optional ``policy`` observes
 the simulation at fixed points — ``bind`` / ``on_fault`` / ``on_node_drain``
@@ -69,7 +98,7 @@ Trace hook points (repro.trace): an optional ``recorder`` rides alongside
 the policy hooks and *streams* the events the engine does not already log —
 node state transitions (``on_node_event``: drain / repair / hold / release /
 evict) and per-tick scheduling-pass stats (``on_sched_pass``); job records
-and faults are column-ized from ``self.records`` / ``self.fault_log`` at
+and faults come straight from the engine's columnar stores at
 ``recorder.finalize(sim)``.  The recorder is a pure observer: it never
 consumes RNG and never pushes events, so a recorded run is bit-for-bit
 identical to an unrecorded one, and ``recorder=None`` costs one ``is not
@@ -78,19 +107,24 @@ tests/test_trace.py, overhead-benchmarked in benchmarks/trace_bench.py).
 """
 from __future__ import annotations
 
+import gc
 import heapq
 import itertools
 import math
+from bisect import bisect_left, insort
 from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
 
-from repro.cluster.failures import Fault, FaultProcess
-from repro.cluster.workload import ClusterSpec, JobRequest, WorkloadGenerator
+from repro.cluster.failures import SYMPTOMS, Fault, FaultProcess
+from repro.cluster.workload import (OUTCOME_STRS, ClusterSpec, JobRequest,
+                                    WorkloadGenerator)
 from repro.core.lemon import LemonDetector, NodeHistory
 from repro.core.metrics import JobRecord, JobState
 from repro.core.taxonomy import TAXONOMY
+from repro.trace.schema import NO_JOB
+from repro.trace.store import ChunkedStore, Interner
 
 PREEMPTION_GUARD_S = 2 * 3600.0
 MAX_LIFETIME_S = 7 * 86400.0
@@ -113,26 +147,39 @@ K_REPAIR = 3
 K_LEMON = 4
 K_POLICY = 5
 
+# SoA node status codes (one merged array instead of node_ok/node_draining)
+N_ACTIVE = 0     # schedulable (node_ok and not draining)
+N_DRAINING = 1   # in service but leaving once its jobs finish
+N_DOWN = 2       # out of service (repair / hold / evicted-idle)
+
 # memoized enum lookups: JobState.__call__ costs an enum __new__ per job
 _STATE_OF = {s.value: s for s in JobState}
+_STATES = tuple(JobState)
+_STATE_CODE = {s: i for i, s in enumerate(_STATES)}
 _TIMEOUT = JobState.TIMEOUT
+_OUT_STRS = OUTCOME_STRS
 _NODE_FAIL = JobState.NODE_FAIL
 _FAILED = JobState.FAILED
 _PREEMPTED = JobState.PREEMPTED
 _CANCELLED = JobState.CANCELLED
 
 
-@dataclass(slots=True)
-class RunState:
-    request: JobRequest
-    remaining_s: float
-    attempts: int = 0
-    productive_s: float = 0.0
+def _state_interner() -> Interner:
+    it = Interner()
+    for s in _STATES:
+        it.code(s, s.value)
+    return it
+
+
+# v3: the per-run state lives on the JobRequest itself (they were 1:1;
+# see workload.JobRequest) — RunState survives as an alias for callers
+# that type-annotated against it
+RunState = JobRequest
 
 
 @dataclass(slots=True)
 class Running:
-    run: RunState
+    run: JobRequest
     job_id: int
     start_t: float
     submit_t: float
@@ -169,9 +216,9 @@ class ClusterSim:
         n = spec.n_nodes
         g = spec.gpus_per_node
         self._g = g
+        # SoA node state: parallel flat arrays indexed by node id
         self.free = [g] * n
-        self.node_ok = [True] * n                  # schedulable
-        self.node_draining = [False] * n
+        self._node_state = [N_ACTIVE] * n
         self.node_jobs: list[set] = [set() for _ in range(n)]
         # free-GPU bucket index: _buckets[f] holds schedulable nodes with
         # exactly f free GPUs (f >= 1); _bucket_of[i] = -1 means unindexed
@@ -179,6 +226,11 @@ class ClusterSim:
         self._buckets: list[set] = [set() for _ in range(g + 1)]
         self._buckets[g] = set(range(n))
         self._bucket_of = [g] * n
+        # occupancy bitmask over the bucket index (bit f set iff
+        # _buckets[f] is non-empty): tightest-fit placement finds its
+        # bucket with one shift + lowest-set-bit instead of a scan, and
+        # a hopeless allocation fails in O(1)
+        self._bucket_mask = 1 << g
         self.full_free = self._buckets[g]          # alias for introspection
 
         self.queue: list[tuple] = []   # (-priority, submit_t, seq, RunState)
@@ -187,21 +239,52 @@ class ClusterSim:
         # re-pushing every deferral (see _schedule_pass)
         self._deferred: list[tuple] = []
         self._def_scratch: list[tuple] = []
+        # capacity epoch: bumped whenever free GPUs can have *increased*
+        # (job release, node repair/release/drain-cancel).  A deferred
+        # job whose allocation failed at epoch E provably fails again
+        # while the epoch is still E (allocations only consume), so the
+        # pass skips its alloc attempt outright — preemption-eligible
+        # jobs are exempt (guard expiry unlocks victims over time).
+        # _def_epochs[i] is the failure epoch of _deferred[i] (-1 =
+        # always retry).  Whole-node jobs compare against _full_epoch
+        # instead — their allocations depend only on the full-node
+        # bucket, which gains members far more rarely than "any GPU
+        # freed", so their skip fires on almost every retry.
+        self._free_epoch = 0
+        self._full_epoch = 0
+        self._def_epochs: list[int] = []
+        self._def_ep_scratch: list[int] = []
         self.running: dict[int, Running] = {}
         # whole-node running jobs by priority (preemption victim index):
         # job_id -> start_t, insertion-ordered.  Insertion time == start
         # time, so each inner dict is sorted by start_t; equal-priority
         # victims are preempted in start order (matching the seed's stable
         # sort) and the guard-eligibility scan can stop at the first
-        # too-young entry instead of walking every candidate
+        # too-young entry instead of walking every candidate.
+        # _prio_keys mirrors the dict's keys as a sorted list so the
+        # preemption walk never re-sorts.
         self._running_by_prio: dict[int, dict[int, float]] = {}
+        self._prio_keys: list[int] = []
         # (start_t + guard, job_id) for whole-node jobs: next guard expiry
         self._guard_heap: list[tuple] = []
         self.events: list[tuple] = []  # (t, seq, kind, payload)
         self._fault_heap: list[tuple] = []  # (t, node_id) per-node chains
         self._seq = itertools.count()
-        self.records: list[JobRecord] = []
-        self.fault_log: list[Fault] = []
+        # columnar logs (hot-path v3): rows append as int-coded tuples;
+        # .records / .fault_log materialize lazily for API compatibility
+        self._state_int = _state_interner()
+        self._sym_int = Interner()
+        self._sym_int.code((), "")                 # code 0 == no symptoms
+        self._fsym_int = Interner()
+        self._fsym_int.seed(SYMPTOMS)              # stable symptom codes
+        self._cos_int = Interner()
+        self._cos_int.code((), "")
+        self._jobs_log = ChunkedStore("jobs", interners={
+            "state": self._state_int, "symptoms": self._sym_int})
+        self._faults_log = ChunkedStore("faults", interners={
+            "symptom": self._fsym_int, "co_symptoms": self._cos_int})
+        self._records_view: list[JobRecord] = []
+        self._faults_view: list[Fault] = []
         self.drain_log: list[tuple] = []
         self.histories = [NodeHistory(i) for i in range(n)]
         self.removed_lemons: set[int] = set()
@@ -210,6 +293,62 @@ class ClusterSim:
         self._now = 0.0
         self._armed: list[float] = []   # outstanding sched-pass ticks (heap)
         self._pass_t = -1.0             # tick of the pass currently running
+        self._trace_spill_dir: Optional[str] = None
+
+    # -- columnar-log views (API compatibility) -------------------------
+    @property
+    def n_records(self) -> int:
+        """Job-attempt count without materializing record objects."""
+        return self._jobs_log.rows
+
+    @property
+    def records(self) -> list[JobRecord]:
+        """The job log as ``JobRecord`` objects — a cached materializing
+        view over the columnar store, extended incrementally so mid-run
+        reads (adaptive policies) stay cheap."""
+        lst = self._records_view
+        log = self._jobs_log
+        if len(lst) < log.rows:
+            states = self._state_int.raw
+            syms = self._sym_int.raw
+            append = lst.append
+            for (jid, rid, g, sub, st, en, sc, prio, hw, sy,
+                 pb) in log.iter_rows(len(lst)):
+                append(JobRecord(jid, rid, g, sub, st, en, states[sc],
+                                 prio, hw, syms[sy],
+                                 None if pb == NO_JOB else pb))
+        return lst
+
+    @property
+    def fault_log(self) -> list[Fault]:
+        lst = self._faults_view
+        log = self._faults_log
+        if len(lst) < log.rows:
+            syms = self._fsym_int.raw
+            cos = self._cos_int.raw
+            append = lst.append
+            for (t, nid, sc, cc, tr, det, rep) in log.iter_rows(len(lst)):
+                append(Fault(t, nid, syms[sc], cos[cc], tr, det, rep))
+        return lst
+
+    # derived read-only views of the merged status array (policies and
+    # tests read these; all writes go through the engine/helpers)
+    @property
+    def node_ok(self) -> list[bool]:
+        return [s != N_DOWN for s in self._node_state]
+
+    @property
+    def node_draining(self) -> list[bool]:
+        return [s == N_DRAINING for s in self._node_state]
+
+    def _enable_trace_spill(self, spill_dir: str) -> None:
+        """Stream the job/fault logs' chunks to ``spill_dir`` (called by
+        ``TraceRecorder.bind`` before any rows exist), and switch arrival
+        generation to disk-backed blocks (``spill_arrival_blocks``) so
+        the replay's RSS stays flat in the horizon."""
+        self._jobs_log.spill_to(spill_dir)
+        self._faults_log.spill_to(spill_dir)
+        self._trace_spill_dir = spill_dir
 
     # ------------------------------------------------------------------
     def _push(self, t: float, kind: int, payload) -> int:
@@ -239,21 +378,27 @@ class ClusterSim:
     # -- node capacity management --------------------------------------
     def _reindex(self, i: int) -> None:
         f = self.free[i]
-        b = f if (f > 0 and self.node_ok[i]
-                  and not self.node_draining[i]) else -1
+        b = f if (f > 0 and self._node_state[i] == N_ACTIVE) else -1
         old = self._bucket_of[i]
         if b != old:
             if old >= 0:
-                self._buckets[old].discard(i)
+                s = self._buckets[old]
+                s.discard(i)
+                if not s:
+                    self._bucket_mask &= ~(1 << old)
             if b >= 0:
                 self._buckets[b].add(i)
+                self._bucket_mask |= 1 << b
+                self._free_epoch += 1   # capacity became reachable
+                if b == self._g:
+                    self._full_epoch += 1
             self._bucket_of[i] = b
 
     def _alloc_nodes(self, req_gpus: int) -> Optional[dict]:
         g = self._g
         buckets = self._buckets
-        full = buckets[g]
         if req_gpus >= g:
+            full = buckets[g]
             n_nodes = -(-req_gpus // g)
             if len(full) < n_nodes:
                 return None
@@ -265,32 +410,32 @@ class ClusterSim:
                 free[i] = 0
                 bucket_of[i] = -1
                 out[i] = g
+            if not full:
+                self._bucket_mask &= ~(1 << g)
             return out
         # small job: tightest fit — smallest free-GPU bucket that fits,
-        # falling back to a fully-free node.  A bucketed node is schedulable
-        # and not draining by construction, so the reindex is inlined.
-        for f in range(req_gpus, g):
-            b = buckets[f]
-            if b:
-                i = next(iter(b))
-                nf = f - req_gpus
-                self.free[i] = nf
-                b.discard(i)
-                if nf > 0:
-                    buckets[nf].add(i)
-                    self._bucket_of[i] = nf
-                else:
-                    self._bucket_of[i] = -1
-                return {i: req_gpus}
-        if full:
-            i = next(iter(full))
-            nf = g - req_gpus          # > 0: req_gpus < g here
-            self.free[i] = nf
-            full.discard(i)
+        # falling back to a fully-free node; the occupancy bitmask jumps
+        # straight to that bucket (or fails in O(1)).  A bucketed node is
+        # schedulable and not draining by construction, so the reindex is
+        # inlined.
+        mm = self._bucket_mask >> req_gpus
+        if mm == 0:
+            return None
+        f = req_gpus + ((mm & -mm).bit_length() - 1)
+        b = buckets[f]
+        i = next(iter(b))
+        nf = f - req_gpus              # f == g (full node) => nf > 0
+        self.free[i] = nf
+        b.discard(i)
+        if not b:
+            self._bucket_mask &= ~(1 << f)
+        if nf > 0:
             buckets[nf].add(i)
+            self._bucket_mask |= 1 << nf
             self._bucket_of[i] = nf
-            return {i: req_gpus}
-        return None
+        else:
+            self._bucket_of[i] = -1
+        return {i: req_gpus}
 
     # -- job lifecycle ---------------------------------------------------
     def _start_job(self, t: float, run: RunState, nodes: dict,
@@ -302,13 +447,17 @@ class ClusterSim:
         heapq.heappush(self.events, (t + dur, seq, K_FINISH, job_id))
         r = Running(run, job_id, t, submit_t, nodes, seq)
         self.running[job_id] = r
-        req = run.request
-        if req.n_gpus >= self._g:
-            self._running_by_prio.setdefault(req.priority, {})[job_id] = t
+        if run.n_gpus >= self._g:
+            prio = run.priority
+            d = self._running_by_prio.get(prio)
+            if d is None:
+                d = self._running_by_prio[prio] = {}
+                insort(self._prio_keys, prio)
+            d[job_id] = t
             heapq.heappush(self._guard_heap,
                            (t + PREEMPTION_GUARD_S, job_id))
         node_jobs = self.node_jobs
-        if req.n_gpus <= 8:   # single-node job (n_nodes == 1)
+        if run.n_gpus <= 8:   # single-node job (n_nodes == 1)
             histories = self.histories
             for i in nodes:
                 node_jobs[i].add(job_id)
@@ -319,12 +468,15 @@ class ClusterSim:
 
     def _record(self, r: Running, t: float, state: JobState,
                 hw: bool = False, symptoms=(), preempted_by=None) -> None:
-        self.records.append(JobRecord(
-            job_id=r.job_id, run_id=r.run.request.run_id,
-            n_gpus=r.run.request.n_gpus, submit_t=r.submit_t,
-            start_t=r.start_t, end_t=t, state=state,
-            priority=r.run.request.priority, hw_attributed=hw,
-            symptoms=tuple(symptoms), preempted_by=preempted_by))
+        """Append one job-attempt row to the columnar log (int-coded
+        state/symptoms; was a ``JobRecord`` object append in v2)."""
+        run = r.run
+        self._jobs_log.append((
+            r.job_id, run.run_id, run.n_gpus, r.submit_t, r.start_t, t,
+            _STATE_CODE[state], run.priority, hw,
+            self._sym_int.code(tuple(symptoms), "|".join(symptoms))
+            if symptoms else 0,
+            NO_JOB if preempted_by is None else preempted_by))
 
     def _end_job(self, r: Running, t: float) -> None:
         """Remove a finished/interrupted job and release its nodes (the
@@ -332,35 +484,68 @@ class ClusterSim:
         hottest per-job path after the scheduling pass itself)."""
         job_id = r.job_id
         del self.running[job_id]
-        req = r.run.request
-        if req.n_gpus >= self._g:
-            s = self._running_by_prio.get(req.priority)
+        self._free_epoch += 1          # this job's GPUs come back
+        run = r.run
+        g = self._g
+        free = self.free
+        state = self._node_state
+        node_jobs = self.node_jobs
+        if run.n_gpus >= g:
+            prio = run.priority
+            s = self._running_by_prio.get(prio)
             if s is not None:
                 s.pop(job_id, None)
                 if not s:
-                    del self._running_by_prio[req.priority]
-        free = self.free
-        node_ok = self.node_ok
-        draining = self.node_draining
-        buckets = self._buckets
-        bucket_of = self._bucket_of
-        node_jobs = self.node_jobs
-        for i, g_used in r.nodes.items():
-            node_jobs[i].discard(job_id)
-            f = free[i] + g_used
-            free[i] = f
-            b = f if (node_ok[i] and not draining[i]) else -1
-            old = bucket_of[i]
-            if b != old:
-                if old >= 0:
-                    buckets[old].discard(i)
-                if b >= 0:
-                    buckets[b].add(i)
-                bucket_of[i] = b
-            if draining[i] and not node_jobs[i]:
-                self._drain_now(i, None, reason="low_sev_after_job",
-                                now=self._now)
-        self._arm_sched(self._now)
+                    del self._running_by_prio[prio]
+                    self._prio_keys.remove(prio)
+            # whole-node fast path: every node was allocated in full
+            # (free == 0, bucket_of == -1, sole occupant), so the
+            # release is a direct re-add to the full bucket — no old
+            # bucket to leave and the drain check needs no set probe
+            full = self._buckets[g]
+            bucket_of = self._bucket_of
+            for i in r.nodes:
+                node_jobs[i].discard(job_id)
+                free[i] = g
+                si = state[i]
+                if si == N_ACTIVE:
+                    full.add(i)
+                    bucket_of[i] = g
+                    self._bucket_mask |= 1 << g
+                    self._full_epoch += 1
+                elif si == N_DRAINING:
+                    self._drain_now(i, None, reason="low_sev_after_job",
+                                    now=self._now)
+        else:
+            buckets = self._buckets
+            bucket_of = self._bucket_of
+            for i, g_used in r.nodes.items():
+                node_jobs[i].discard(job_id)
+                f = free[i] + g_used
+                free[i] = f
+                si = state[i]
+                b = f if si == N_ACTIVE else -1
+                old = bucket_of[i]
+                if b != old:
+                    if old >= 0:
+                        s = buckets[old]
+                        s.discard(i)
+                        if not s:
+                            self._bucket_mask &= ~(1 << old)
+                    if b >= 0:
+                        buckets[b].add(i)
+                        self._bucket_mask |= 1 << b
+                        if b == g:
+                            self._full_epoch += 1
+                    bucket_of[i] = b
+                if si == N_DRAINING and not node_jobs[i]:
+                    self._drain_now(i, None, reason="low_sev_after_job",
+                                    now=self._now)
+        # inline arm-dedupe fast path: a pass already armed at or before
+        # now covers this release (same skip _arm_sched would take)
+        armed = self._armed
+        if not (armed and armed[0] <= self._now):
+            self._arm_sched(self._now)
 
     def _interrupt(self, r: Running, t: float, state: JobState,
                    hw: bool, symptoms=(), preempted_by=None,
@@ -372,7 +557,7 @@ class ClusterSim:
         self._end_job(r, t)
         # lemon signals
         if state is _NODE_FAIL:
-            multi = r.run.request.n_nodes > 1
+            multi = r.run.n_nodes > 1
             rng_random = self.rng.random
             for i in r.nodes:
                 h = self.histories[i]
@@ -390,17 +575,18 @@ class ClusterSim:
 
     def _enqueue(self, t: float, run: RunState) -> None:
         heapq.heappush(self.queue,
-                       (-run.request.priority, t, next(self._seq), run))
-        self._arm_sched(t)
+                       (-run.priority, t, next(self._seq), run))
+        armed = self._armed
+        if not (armed and armed[0] <= t):
+            self._arm_sched(t)
 
     # -- node fault handling ----------------------------------------------
     def _drain_now(self, node_id: int, fault: Optional[Fault],
                    reason: str = "", now: Optional[float] = None,
                    repair_s: Optional[float] = None) -> None:
-        if not self.node_ok[node_id]:
+        if self._node_state[node_id] == N_DOWN:
             return
-        self.node_ok[node_id] = False
-        self.node_draining[node_id] = False
+        self._node_state[node_id] = N_DOWN
         self._reindex(node_id)
         self.histories[node_id].out_count += 1
         if repair_s is None:
@@ -415,7 +601,11 @@ class ClusterSim:
 
     def _handle_fault(self, t: float, fault: Fault) -> None:
         node_id = fault.node_id
-        self.fault_log.append(fault)
+        cos = fault.co_symptoms
+        self._faults_log.append((
+            fault.t, node_id, self._fsym_int.code(fault.symptom),
+            self._cos_int.code(cos, "|".join(cos)) if cos else 0,
+            fault.transient, fault.detectable_by_check, fault.repair_s))
         h = self.histories[node_id]
         if fault.symptom.startswith("gpu"):
             h.xid_cnt += 1
@@ -425,7 +615,7 @@ class ClusterSim:
         if node_id not in self.removed_lemons:
             heapq.heappush(self._fault_heap,
                            (self.faults.next_fault_time(node_id, t), node_id))
-        if not self.node_ok[node_id]:
+        if self._node_state[node_id] == N_DOWN:
             return
 
         sev = TAXONOMY[fault.symptom].severity
@@ -439,7 +629,7 @@ class ClusterSim:
         elif fault.detectable_by_check:
             # low severity: drain after running jobs complete
             if has_victims:
-                self.node_draining[node_id] = True
+                self._node_state[node_id] = N_DRAINING
                 self._reindex(node_id)
             else:
                 self._drain_now(node_id, fault, reason=f"check:{fault.symptom}")
@@ -453,7 +643,7 @@ class ClusterSim:
 
     def _handle_kill(self, t: float, payload: tuple) -> None:
         node_id, fault, state, hw, reason = payload
-        if not self.node_ok[node_id]:
+        if self._node_state[node_id] == N_DOWN:
             return
         for j in list(self.node_jobs[node_id]):
             r = self.running.get(j)
@@ -473,22 +663,24 @@ class ClusterSim:
         Victims are taken in ascending-priority order from the whole-node
         index (insertion = start order within a priority), skipping jobs
         still inside the 2 h guard, and the walk stops as soon as the node
-        deficit is covered — the v1 pass materialized every eligible victim
-        before interrupting any."""
-        need = run.request.n_nodes
+        deficit is covered.  The candidate priorities come from the
+        maintained sorted key list (snapshotted below ``p`` — interrupts
+        mutate the index while we walk it)."""
+        need = run.n_nodes
         deficit = need - len(self._buckets[self._g])
         if deficit <= 0:
             return True, 0
-        p = run.request.priority
+        p = run.priority
         guard_cutoff = t - PREEMPTION_GUARD_S
         by_prio = self._running_by_prio
         running = self.running
         # paper Fig. 8 accounting: a preemption is "second order" only when
         # the instigator is a requeued job recovering from a failure
-        instigator = run.request.run_id if run.attempts > 0 else None
+        instigator = run.run_id if run.attempts > 0 else None
         freed = 0
         n_victims = 0
-        for prio in sorted(k for k in by_prio if k < p):
+        prio_keys = self._prio_keys
+        for prio in prio_keys[:bisect_left(prio_keys, p)]:
             # guard-eligible prefix only: values are start_t in insertion
             # (= start) order, so the first too-young entry ends the scan;
             # snapshot before interrupting (interrupts pop from this dict)
@@ -533,10 +725,20 @@ class ClusterSim:
         order and leftover entries are >= every consumed one), and this
         pass's deferrals accumulate in a reused scratch list that becomes
         the next pass's deferred list — a job deferred N passes in a row
-        costs zero heap operations after its first pop."""
+        costs zero heap operations after its first pop.
+
+        Capacity-epoch fast path (v3): a deferred job re-defers without
+        an allocation attempt while ``_free_epoch`` still equals the
+        epoch its last attempt failed at — allocations only *consume*
+        capacity, so the retry provably fails identically and skipping
+        it cannot change the event sequence.  Preemption-eligible jobs
+        (priority >= 7, multi-node) always retry: the 2 h guard unlocks
+        new victims as time passes."""
         queue = self.queue
         deferred = self._deferred
+        def_eps = self._def_epochs
         new_def = self._def_scratch
+        new_eps = self._def_ep_scratch
         di = 0
         dn = len(deferred)
         scanned = 0
@@ -550,50 +752,77 @@ class ClusterSim:
         exhausted_below = -1
         g = self._g
         alloc = self._alloc_nodes
+        start_job = self._start_job
         heappop = heapq.heappop
+        epoch = self._free_epoch
+        full_ep = self._full_epoch
         while scanned < 200:
+            tag = None
             if queue:
                 if di < dn and deferred[di] <= queue[0]:
                     item = deferred[di]
+                    tag = def_eps[di]
                     di += 1
                 else:
                     item = heappop(queue)
             elif di < dn:
                 item = deferred[di]
+                tag = def_eps[di]
                 di += 1
             else:
                 break
             scanned += 1
             run = item[3]
-            req = run.request
-            n_gpus = req.n_gpus
+            n_gpus = run.n_gpus
+            if tag is not None and tag == (full_ep if n_gpus >= g
+                                           else epoch):
+                # capacity of this job's class unchanged since its last
+                # failed attempt: the retry provably fails identically
+                new_def.append(item)
+                new_eps.append(tag)
+                n_def += 1
+                if n_def > 50:
+                    break
+                continue
             nodes = alloc(n_gpus)
-            if nodes is None and req.priority >= 7 and n_gpus > g:
-                if req.priority <= exhausted_below:
+            preemptor = False
+            if nodes is None and run.priority >= 7 and n_gpus > g:
+                preemptor = True
+                if run.priority <= exhausted_below:
                     blocked_preemptor = True
                 else:
                     ok, n_victims = self._try_preempt(t, run)
                     n_preempted += n_victims
+                    # even a failed attempt may have freed victims —
+                    # stale-epoch tags/skips would change behavior
+                    epoch = self._free_epoch
+                    full_ep = self._full_epoch
                     if ok:
                         nodes = alloc(n_gpus)
                     else:
                         blocked_preemptor = True
-                        exhausted_below = req.priority
+                        exhausted_below = run.priority
             if nodes is None:
                 new_def.append(item)
+                new_eps.append(-1 if preemptor else
+                               (full_ep if n_gpus >= g else epoch))
                 n_def += 1
                 # gang scheduling: don't let smaller lower-priority jobs jump
                 # far ahead; allow limited backfill depth
                 if n_def > 50:
                     break
                 continue
-            self._start_job(t, run, nodes, item[1])
+            start_job(t, run, nodes, item[1])
             n_started += 1
         if di < dn:
             new_def.extend(deferred[di:])
+            new_eps.extend(def_eps[di:])
         self._deferred = new_def
+        self._def_epochs = new_eps
         deferred.clear()
+        def_eps.clear()
         self._def_scratch = deferred
+        self._def_ep_scratch = def_eps
         return n_started, n_preempted, blocked_preemptor
 
     # -- lemon scan ---------------------------------------------------------
@@ -622,13 +851,13 @@ class ClusterSim:
         self.removed_lemons.add(node_id)
         # replace with a healthy node: clear fault process lemon flag
         self.faults.lemons.discard(node_id)
-        if self.node_ok[node_id]:
+        if self._node_state[node_id] != N_DOWN:
             if self.node_jobs[node_id]:
                 # proactive removal: drain after running jobs finish
-                self.node_draining[node_id] = True
+                self._node_state[node_id] = N_DRAINING
                 self._reindex(node_id)
             else:
-                self.node_ok[node_id] = False
+                self._node_state[node_id] = N_DOWN
                 self._reindex(node_id)
                 self._push(t + replace_after_s, K_REPAIR, node_id)
         return True
@@ -637,10 +866,9 @@ class ClusterSim:
         """Take an idle, healthy node out of scheduling without logging a
         drain (warm-spare reservation).  The caller owns the node until it
         calls release_node."""
-        if not self.node_ok[node_id] or self.node_jobs[node_id]:
+        if self._node_state[node_id] == N_DOWN or self.node_jobs[node_id]:
             return False
-        self.node_ok[node_id] = False
-        self.node_draining[node_id] = False
+        self._node_state[node_id] = N_DOWN
         self._reindex(node_id)
         if self.recorder is not None:
             self.recorder.on_node_event(self._now, node_id, "hold")
@@ -652,12 +880,11 @@ class ClusterSim:
         held (``_handle_fault`` re-pushes the next fault regardless of
         service state), so a hold/release cycle leaves the fault process
         untouched instead of compounding per-node fault streams."""
-        if self.node_ok[node_id]:
+        if self._node_state[node_id] != N_DOWN:
             return False
         if node_id in self.removed_lemons:
             self.removed_lemons.discard(node_id)  # replaced node
-        self.node_ok[node_id] = True
-        self.node_draining[node_id] = False
+        self._node_state[node_id] = N_ACTIVE
         self._reindex(node_id)
         self._arm_sched(t)
         if self.recorder is not None:
@@ -673,7 +900,7 @@ class ClusterSim:
         remediation is left alone (interrupting its last job would fire the
         pending low-severity drain with its own repair time, silently
         discarding ``repair_s``/``reason``) — returns False."""
-        if not self.node_ok[node_id] or self.node_draining[node_id]:
+        if self._node_state[node_id] != N_ACTIVE:
             return False
         for j in list(self.node_jobs[node_id]):
             r = self.running.get(j)
@@ -690,8 +917,7 @@ class ClusterSim:
     def _return_to_service(self, t: float, node_id: int) -> None:
         if node_id in self.removed_lemons:
             self.removed_lemons.discard(node_id)  # replaced node
-        self.node_ok[node_id] = True
-        self.node_draining[node_id] = False
+        self._node_state[node_id] = N_ACTIVE
         self._reindex(node_id)
         self._arm_sched(t)
         heapq.heappush(self._fault_heap,
@@ -701,21 +927,74 @@ class ClusterSim:
 
     # -- main loop -----------------------------------------------------------
     def run(self) -> None:
-        arrivals = self.gen.generate_arrays(self.horizon_s / 86400.0)
-        # column arrays -> plain lists: fast scalar access in the loop
-        arr_t = arrivals.submit_t.tolist()
-        arr_gpus = arrivals.n_gpus.tolist()
-        arr_dur = arrivals.duration_s.tolist()
-        arr_prio = arrivals.priority.tolist()
-        arr_out = arrivals.outcome.tolist()
-        n_arr = len(arr_t)
-        start_job_id = arrivals.start_job_id
-        ai = 0
+        # the cyclic collector is pure overhead here: steady-state
+        # allocations (heap tuples, Running/RunState, log rows) are
+        # acyclic and refcount-freed, and the columnar logs keep the
+        # long-lived heap flat — pause it, restore on exit
+        gc_was_enabled = gc.isenabled()
+        if gc_was_enabled:
+            gc.disable()
+        try:
+            self._run()
+        finally:
+            if gc_was_enabled:
+                gc.enable()
 
+    def _arrival_windows(self):
+        """Yield arrival column *windows* — (submit_t, n_gpus,
+        duration_s, priority, outcome_code, first_job_id) as plain lists
+        (fast scalar access in the loop).  Windowing bounds the boxed-
+        scalar footprint: the v2 loop ``tolist()``-ed the whole horizon
+        up front, which alone put ~450 MB of Python floats/ints under an
+        11-month replay.  In spill mode the windows come straight off
+        the disk-backed arrival parts and each part is deleted once
+        consumed, so arrival data never exceeds ~one block in RAM."""
+        spill_dir = self._trace_spill_dir
+        if spill_dir is None:
+            arrivals = self.gen.generate_arrays(self.horizon_s / 86400.0)
+            n = len(arrivals)
+            w = 131072
+            for lo in range(0, n, w):
+                hi = lo + w if lo + w < n else n
+                yield (arrivals.submit_t[lo:hi].tolist(),
+                       arrivals.n_gpus[lo:hi].tolist(),
+                       arrivals.duration_s[lo:hi].tolist(),
+                       arrivals.priority[lo:hi].tolist(),
+                       arrivals.outcome_code[lo:hi].tolist(),
+                       arrivals.start_job_id + lo)
+            return
+        import os
+
+        parts = self.gen.spill_arrival_blocks(self.horizon_s / 86400.0,
+                                              spill_dir)
+        jid0 = 0
+        for tmpl, m in parts:
+            paths = [tmpl.format(col=c)
+                     for c in ("t", "gpus", "dur", "prio", "outcome")]
+            cols = [np.load(path).tolist() for path in paths]
+            yield (*cols, jid0)
+            jid0 += m
+            for path in paths:   # consumed: reclaim the disk space
+                os.remove(path)
+
+    def _run(self) -> None:
+        # hooks bind before arrival generation: spill mode must be
+        # configured first (neither bind consumes engine RNG or seq)
         if self.recorder is not None:
             self.recorder.bind(self)
         if self.policy is not None:
             self.policy.bind(self)
+        windows = self._arrival_windows()
+        win = next(windows, None)
+        if win is None:
+            arr_t = arr_gpus = arr_dur = arr_prio = arr_out = ()
+            jid0 = 0
+            n_arr = 0
+        else:
+            arr_t, arr_gpus, arr_dur, arr_prio, arr_out, jid0 = win
+            n_arr = len(arr_t)
+        ai = 0
+
         # batched fault delivery: the initial per-node chain is one
         # vectorized draw (same RNG stream as n scalar calls) heapified
         # into the dedicated fault stream
@@ -731,14 +1010,17 @@ class ClusterSim:
 
         self._now = 0.0
         events = self.events
+        armed = self._armed
         horizon = self.horizon_s
         running = self.running
         policy = self.policy
-        node_ok = self.node_ok
+        node_state = self._node_state
         removed = self.removed_lemons
         sample_fault = self.faults.sample_fault
         heappop = heapq.heappop
         state_of = _STATE_OF
+        outs = _OUT_STRS
+        enqueue = self._enqueue
         # hoisted bound hook: the sched branch is the hottest recorder site
         on_sched_pass = (None if self.recorder is None
                          else self.recorder.on_sched_pass)
@@ -747,99 +1029,134 @@ class ClusterSim:
             t_f = fheap[0][0] if fheap else _INF
             t_min = t_f if t_f < t_ev else t_ev
             if ai < n_arr and arr_t[ai] <= t_min:
-                # merge-iterate arrivals with the event/fault heaps:
-                # arrivals are already time-sorted, so they never touch them
-                t = arr_t[ai]
-                self._now = t
-                jid = start_job_id + ai
-                req = JobRequest(
-                    job_id=jid, run_id=jid, submit_t=t, n_gpus=arr_gpus[ai],
-                    duration_s=arr_dur[ai], priority=arr_prio[ai],
-                    outcome=arr_out[ai])
-                ai += 1
-                self._enqueue(t, RunState(req, req.duration_s))
+                # batch-drain consecutive arrivals: arrivals are already
+                # time-sorted so they never touch the heaps; the only way
+                # the next-event bound can move is an arrival arming an
+                # *earlier* sched tick, which the armed-heap head tracks
+                while True:
+                    t = arr_t[ai]
+                    self._now = t
+                    jid = jid0 + ai
+                    req = JobRequest(jid, jid, t, arr_gpus[ai], arr_dur[ai],
+                                     arr_prio[ai], outs[arr_out[ai]])
+                    req.remaining_s = req.duration_s
+                    ai += 1
+                    enqueue(t, req)
+                    if ai >= n_arr:
+                        win = next(windows, None)
+                        if win is None:
+                            n_arr = 0
+                            ai = 0
+                            break
+                        (arr_t, arr_gpus, arr_dur, arr_prio, arr_out,
+                         jid0) = win
+                        n_arr = len(arr_t)
+                        ai = 0
+                    if armed and armed[0] < t_min:
+                        t_min = armed[0]
+                    if arr_t[ai] > t_min:
+                        break
                 continue
             if t_min > horizon:   # also covers both-heaps-empty (inf)
                 break
             if t_f < t_ev:
                 t, node_id = heappop(fheap)
                 self._now = t
-                if node_ok[node_id] or node_id not in removed:
+                if node_state[node_id] != N_DOWN or node_id not in removed:
                     fault = sample_fault(node_id, t)
                     self._handle_fault(t, fault)
                     if policy is not None:
                         policy.on_fault(self, t, fault)
                 continue
-            t, seq, kind, payload = heappop(events)
-            self._now = t
-            if kind == K_FINISH:
-                r = running.get(payload)
-                if r is None or r.finish_seq != seq:
-                    continue   # cancelled/stale finish
-                run_ = r.run
-                ran = t - r.start_t
-                run_.productive_s += ran
-                rem = run_.remaining_s - ran
-                if rem < 0.0:
-                    rem = 0.0
-                run_.remaining_s = rem
-                state = state_of[run_.request.outcome] if rem <= 1.0 \
-                    else _TIMEOUT
-                self._record(r, t, state)
-                self._end_job(r, t)
-            elif kind == K_SCHED:
-                if self._armed and self._armed[0] <= t:
-                    heappop(self._armed)
-                if policy is not None:
-                    # interventions (evictions, spare releases) land before
-                    # the pass so this tick's placements see them
-                    policy.on_schedule_pass(self, t)
-                # _pass_t absorbs same-tick re-arms from in-pass preemption
-                # releases: the changed/blocked retry logic below covers them
-                self._pass_t = t
-                if on_sched_pass is None:
-                    n_started, n_preempted, blocked = self._schedule_pass(t)
-                else:
-                    n_queued = len(self.queue) + len(self._deferred)
-                    n_started, n_preempted, blocked = self._schedule_pass(t)
-                    on_sched_pass(t, n_queued, n_started, n_preempted,
-                                  blocked)
-                self._pass_t = -1.0
-                if self.queue or self._deferred:
-                    if n_started > 0 or n_preempted > 0:
-                        # progress was made but jobs remain: continue at the
-                        # next tick (backfill depth / capacity may now allow
-                        # more placements)
-                        self._arm_sched(t + SCHED_TICK_S)
-                    elif blocked:
-                        # blocked purely on the 2 h preemption guard: retry
-                        # when the earliest victim becomes eligible
-                        expiry = self._next_guard_expiry(t)
-                        if expiry < _INF:
-                            self._arm_sched(expiry)
-            elif kind == K_REPAIR:
-                node_id = payload
-                if policy is not None:
-                    act = policy.on_node_repair(self, t, node_id)
-                    if act == POLICY_HOLD:
-                        # policy keeps the node (warm spare pool); record
-                        # the hold so node-state sequences in the trace
-                        # stay reconstructable (drain -> hold -> release)
-                        if self.recorder is not None:
-                            self.recorder.on_node_event(t, node_id, "hold",
-                                                        "policy")
-                        continue
-                    if act:        # health gate: delay return-to-service
-                        self._push(t + float(act), K_REPAIR, node_id)
-                        continue
-                self._return_to_service(t, node_id)
-            elif kind == K_KILL:
-                self._handle_kill(t, payload)
-            elif kind == K_LEMON:
-                self._lemon_scan(t)
-            elif kind == K_POLICY:
-                if policy is not None:
-                    policy.on_timer(self, t, payload)
+            # batch-drain the event heap: keep popping while the event
+            # head stays ahead of the fault head (ties -> event) and the
+            # next arrival (ties -> arrival) and inside the horizon; only
+            # a K_REPAIR can push the fault head, so everything else
+            # drains without re-peeking the other streams
+            while True:
+                t, seq, kind, payload = heappop(events)
+                self._now = t
+                if kind == K_FINISH:
+                    r = running.get(payload)
+                    if r is None or r.finish_seq != seq:
+                        # cancelled/stale finish: fall through to re-check
+                        pass
+                    else:
+                        run_ = r.run
+                        ran = t - r.start_t
+                        run_.productive_s += ran
+                        rem = run_.remaining_s - ran
+                        if rem < 0.0:
+                            rem = 0.0
+                        run_.remaining_s = rem
+                        state = state_of[run_.outcome] if rem <= 1.0 \
+                            else _TIMEOUT
+                        self._record(r, t, state)
+                        self._end_job(r, t)
+                elif kind == K_SCHED:
+                    if armed and armed[0] <= t:
+                        heappop(armed)
+                    if policy is not None:
+                        # interventions (evictions, spare releases) land
+                        # before the pass so this tick's placements see them
+                        policy.on_schedule_pass(self, t)
+                    # _pass_t absorbs same-tick re-arms from in-pass
+                    # preemption releases: the changed/blocked retry logic
+                    # below covers them
+                    self._pass_t = t
+                    if on_sched_pass is None:
+                        n_started, n_preempted, blocked = \
+                            self._schedule_pass(t)
+                    else:
+                        n_queued = len(self.queue) + len(self._deferred)
+                        n_started, n_preempted, blocked = \
+                            self._schedule_pass(t)
+                        on_sched_pass(t, n_queued, n_started, n_preempted,
+                                      blocked)
+                    self._pass_t = -1.0
+                    if self.queue or self._deferred:
+                        if n_started > 0 or n_preempted > 0:
+                            # progress was made but jobs remain: continue at
+                            # the next tick (backfill depth / capacity may
+                            # now allow more placements)
+                            self._arm_sched(t + SCHED_TICK_S)
+                        elif blocked:
+                            # blocked purely on the 2 h preemption guard:
+                            # retry when the earliest victim is eligible
+                            expiry = self._next_guard_expiry(t)
+                            if expiry < _INF:
+                                self._arm_sched(expiry)
+                elif kind == K_REPAIR:
+                    node_id = payload
+                    if policy is not None:
+                        act = policy.on_node_repair(self, t, node_id)
+                        if act == POLICY_HOLD:
+                            # policy keeps the node (warm spare pool);
+                            # record the hold so node-state sequences in
+                            # the trace stay reconstructable
+                            if self.recorder is not None:
+                                self.recorder.on_node_event(
+                                    t, node_id, "hold", "policy")
+                            break   # fault head may be stale: re-peek
+                        if act:    # health gate: delay return-to-service
+                            self._push(t + float(act), K_REPAIR, node_id)
+                            break
+                    self._return_to_service(t, node_id)
+                    break   # pushed a fault chain: fault head changed
+                elif kind == K_KILL:
+                    self._handle_kill(t, payload)
+                elif kind == K_LEMON:
+                    self._lemon_scan(t)
+                elif kind == K_POLICY:
+                    if policy is not None:
+                        policy.on_timer(self, t, payload)
+                if not events:
+                    break
+                t_ev = events[0][0]
+                if t_ev > t_f or t_ev > horizon:
+                    break
+                if ai < n_arr and arr_t[ai] <= t_ev:
+                    break
 
         # close out still-running jobs as CANCELLED at horizon (censored)
         for r in list(self.running.values()):

@@ -24,10 +24,8 @@ import numpy as np
 
 from repro.cluster import analysis
 from repro.cluster.workload import ClusterSpec
-from repro.core import mttf_model
 from repro.core.ettr_model import ETTRParams, expected_ettr
-from repro.core.metrics import (goodput_loss, is_infra_failure, job_run_ettr,
-                                mttf)
+from repro.core.metrics import job_run_ettr, mttf
 
 # RSC-1 scaling: 7.2k jobs/day on 2000 nodes, 83% target utilization
 JOBS_PER_NODE_DAY = 3.6
@@ -64,13 +62,21 @@ def _measured_and_modeled(sim, trace, policy, *, min_gpus: int,
                           min_hours: float, r_f_nominal: float):
     """Per qualifying run (grouped from the cell's trace): measured ETTR
     (the policy's checkpoint cadence, hourly if no policy) and the two
-    analytic predictions (realized interruption rates / nominal r_f)."""
-    runs = analysis.group_runs(trace)
+    analytic predictions (realized interruption rates / nominal r_f).
+
+    Hot-path v3: qualifying rows are selected as one column mask and
+    only *those* rows materialize as ``JobRecord`` objects (requeued
+    attempts share their run's n_gpus, so a row-level size filter equals
+    the run-level one); the full jobs table never leaves its arrays.
+    The per-run ETTR math is unchanged — same floats as the v2 path."""
+    jobs_cols = trace.tables["jobs"]
+    qual_idx = np.nonzero(jobs_cols["n_gpus"] >= min_gpus)[0]
+    runs: dict[int, list] = {}
+    for rec in trace.job_records_at(qual_idx):
+        runs.setdefault(rec.run_id, []).append(rec)
     measured, modeled, modeled_nom = [], [], []
     for jobs in runs.values():
         g = jobs[0].n_gpus
-        if g < min_gpus:
-            continue
         scheduled_s = sum(j.run_time for j in jobs)
         if scheduled_s < min_hours * 3600.0:
             continue
@@ -115,12 +121,18 @@ def score_cell(sim, trace, *, policy=None, min_gpus: Optional[int] = None,
         sim, trace, policy, min_gpus=min_gpus, min_hours=min_hours,
         r_f_nominal=r_f_nominal)
 
-    records = trace.job_records()
-    large = [r for r in records if r.n_gpus >= min_gpus]
-    infra = [r for r in large if is_infra_failure(r)]
-    large_runtime_s = sum(r.run_time for r in large)
-    loss = goodput_loss(records)
-    scheduled_gpu_s = sum(r.run_time * r.n_gpus for r in records)
+    # whole-table aggregates as column array ops (hot-path v3): the
+    # worker scores a cell without materializing a JobRecord per row
+    jobs_cols = trace.tables["jobs"]
+    n_gpus_col = jobs_cols["n_gpus"]
+    run_time_col = analysis.jobs_run_time(jobs_cols)
+    large_mask = n_gpus_col >= min_gpus
+    n_records = len(n_gpus_col)
+    n_infra = int((analysis.infra_failure_mask(jobs_cols)
+                   & large_mask).sum())
+    large_runtime_s = float(run_time_col[large_mask].sum())
+    loss = analysis.goodput_loss_columns(jobs_cols)
+    scheduled_gpu_s = float((run_time_col * n_gpus_col).sum())
     capacity_gpu_s = spec.n_nodes * spec.gpus_per_node * sim.horizon_s
     goodput = (scheduled_gpu_s - loss.failure_loss_gpu_s
                - loss.preemption_loss_gpu_s) / max(capacity_gpu_s, 1e-9)
@@ -137,17 +149,18 @@ def score_cell(sim, trace, *, policy=None, min_gpus: Optional[int] = None,
 
     n_evicted = int(np.sum(trace.tables["node_events"]["event"] == "evict"))
     return {
-        "n_records": len(records),
+        "n_records": n_records,
         "n_faults": trace.n_rows("faults"),
-        "n_infra_failures": len(infra),
+        "n_infra_failures": n_infra,
         "n_runs_measured": len(measured),
         "ettr_sim": float(np.mean(measured)) if measured else float("nan"),
         "ettr_model": float(np.mean(modeled)) if modeled else float("nan"),
         "ettr_model_nominal": (float(np.mean(modeled_nom)) if modeled_nom
                                else float("nan")),
-        "mttf_large_h": mttf(large_runtime_s / 3600.0, len(infra)),
+        "mttf_large_h": mttf(large_runtime_s / 3600.0, n_infra),
         "goodput": goodput,
-        "fitted_r_f": mttf_model.fit_r_f(records, min_gpus=min_gpus // 2),
+        "fitted_r_f": analysis.fit_r_f_columns(jobs_cols,
+                                               min_gpus=min_gpus // 2),
         "attribution": attribution,
         "n_evicted": n_evicted,
     }

@@ -96,14 +96,20 @@ class CheckpointCadencePolicy(MitigationPolicy):
         pol = AdaptiveCheckpointPolicy(
             n_nodes=job_nodes, r_f_per_node_day=sim.spec.r_f,
             w_cp_s=self.w_cp_s)
-        # the scheduled-node-days scan is O(records); cache it per sim state
-        # (the sweep queries once per qualifying run against a finished sim)
-        if (self._node_days_cache is None
-                or self._node_days_cache[0] != len(sim.records)):
-            node_days = sum(r.run_time * r.n_nodes
-                            for r in sim.records) / 86400.0
-            self._node_days_cache = (len(sim.records), node_days)
-        pol.observe(self.n_requeues, max(self._node_days_cache[1], 1e-6))
+        # incremental scheduled-node-days accumulator: key on the cheap
+        # sim.n_records counter (never forces the columnar log to
+        # materialize when nothing changed) and fold in only the new
+        # records since the last query — the records view itself extends
+        # incrementally, so a mid-run query is O(new rows), not O(all)
+        if self._node_days_cache is None:
+            self._node_days_cache = (0, 0.0)
+        n_seen, node_days = self._node_days_cache
+        n_now = sim.n_records
+        if n_now != n_seen:
+            node_days += sum(r.run_time * r.n_nodes
+                             for r in sim.records[n_seen:]) / 86400.0
+            self._node_days_cache = (n_now, node_days)
+        pol.observe(self.n_requeues, max(node_days, 1e-6))
         return pol.interval_s()
 
 

@@ -2,9 +2,12 @@
 output, plus external-trace ingestion.
 
   * ``schema``   — columnar repro-trace/v1 tables + the ``Trace`` object
+  * ``store``    — chunked columnar append stores (the engine's logs)
+                   with streaming npz spill parts (constant-RSS mode)
   * ``recorder`` — ``TraceRecorder``, the scheduler's zero-overhead-when-off
                    trace hook; ``simulate_trace`` for record->analyze runs
-  * ``io``       — npz / jsonl round-trip persistence
+  * ``io``       — npz / jsonl round-trip persistence + lazy spill-
+                   directory loading (``trace_io.load(DIR)``)
   * ``ingest``   — Philly-style CSV job tables -> ``Trace``
   * ``report``   — ``python -m repro.trace.report TRACE``: the full
                    Fig. 3-9 metric table from any trace

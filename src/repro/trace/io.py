@@ -1,24 +1,39 @@
-"""Trace persistence: compressed npz (columnar) and jsonl (row-stream).
+"""Trace persistence: compressed npz (columnar), jsonl (row-stream), and
+chunked spill-part directories (streaming constant-RSS recording).
 
-Both formats round-trip bit-exactly (float64 values survive npz natively
-and jsonl via Python's shortest-repr float serialization); regression-
-tested in tests/test_trace.py.  npz is the compact archival format for
-paper-scale traces; jsonl is grep-able and diff-able for small ones.
+npz and jsonl round-trip bit-exactly (float64 values survive npz
+natively and jsonl via Python's shortest-repr float serialization);
+regression-tested in tests/test_trace.py.  npz is the compact archival
+format for paper-scale traces; jsonl is grep-able and diff-able for
+small ones.
 
   from repro.trace import io as trace_io
   trace_io.save(trace, "run.npz")       # dispatches on suffix
   trace = trace_io.load("run.npz")
+  trace = trace_io.load("spill_dir/")   # chunked spill parts, lazy
+
+A *spill directory* is what ``TraceRecorder(trace_spill_dir=...)``
+leaves behind: a ``manifest.json`` (trace meta + per-table part lists)
+and ``<table>-NNNN.npz`` part files, each holding one chunk's
+schema-dtype columns.  ``load`` returns a ``Trace`` whose tables are
+:class:`SpillTable` views — columns are concatenated from the parts
+only when first accessed, so opening a paper-scale spill trace is free
+and an analysis touches only the columns it needs.  See
+``docs/trace_schema.md`` ("Chunked columnar store & spill layout").
 """
 from __future__ import annotations
 
 import json
 import os
+from typing import Iterator, Mapping
 
 import numpy as np
 
 from repro.trace.schema import TABLES, Trace, table_from_columns
 
 _META_KEY = "__meta__"
+
+SPILL_MANIFEST = "manifest.json"
 
 
 def save(trace: Trace, path: str) -> str:
@@ -35,12 +50,90 @@ def save(trace: Trace, path: str) -> str:
 
 
 def load(path: str) -> Trace:
+    if os.path.isdir(path):
+        return load_spill(path)
     if path.endswith(".npz"):
         return load_npz(path)
     if path.endswith(".jsonl"):
         return load_jsonl(path)
     raise ValueError(f"unknown trace suffix on {path!r} "
-                     "(expected .npz or .jsonl)")
+                     "(expected .npz, .jsonl, or a spill directory)")
+
+
+# -- spill directories ---------------------------------------------------
+class SpillTable(Mapping):
+    """Lazy columnar view over one table's spill parts.
+
+    Quacks like the plain ``{column: ndarray}`` dict the rest of the
+    stack consumes (``trace.tables[name][col]``): a column is read and
+    concatenated from the part files on first access and cached; row
+    count comes from the manifest, so ``Trace.n_rows`` never touches
+    disk."""
+
+    def __init__(self, table: str, parts: list[str], rows: int):
+        self.table = table
+        self.parts = list(parts)
+        self.rows = int(rows)
+        self._columns = [c for c, _ in TABLES[table]]
+        self._cache: dict[str, np.ndarray] = {}
+
+    def __getitem__(self, col: str) -> np.ndarray:
+        arr = self._cache.get(col)
+        if arr is None:
+            if col not in self._columns:
+                raise KeyError(col)
+            if not self.parts:
+                arr = table_from_columns(self.table, {})[col]
+            else:
+                parts = []
+                for path in self.parts:
+                    with np.load(path, allow_pickle=False) as z:
+                        parts.append(z[col])
+                arr = parts[0] if len(parts) == 1 else np.concatenate(parts)
+            self._cache[col] = arr
+        return arr
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._columns)
+
+    def __len__(self) -> int:
+        return len(self._columns)
+
+    def __contains__(self, col) -> bool:
+        return col in self._columns
+
+
+def write_spill_manifest(spill_dir: str, meta: dict,
+                         tables: dict[str, tuple[list[str], int]]) -> str:
+    """``tables`` maps table name -> (part paths, row count); part paths
+    are stored relative to the directory so it can be moved/archived."""
+    manifest = {
+        "meta": meta,
+        "tables": {
+            name: {"parts": [os.path.basename(p) for p in parts],
+                   "rows": rows}
+            for name, (parts, rows) in tables.items()},
+    }
+    path = os.path.join(spill_dir, SPILL_MANIFEST)
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def load_spill(spill_dir: str) -> Trace:
+    """Open a spill directory as a lazily-loaded ``Trace``."""
+    mpath = os.path.join(spill_dir, SPILL_MANIFEST)
+    if not os.path.exists(mpath):
+        raise ValueError(f"{spill_dir!r} is not a trace spill directory "
+                         f"(no {SPILL_MANIFEST})")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    tables = {}
+    for name in TABLES:
+        info = manifest["tables"].get(name, {"parts": [], "rows": 0})
+        parts = [os.path.join(spill_dir, p) for p in info["parts"]]
+        tables[name] = SpillTable(name, parts, info["rows"])
+    return Trace(manifest["meta"], tables).validate()
 
 
 # -- npz ----------------------------------------------------------------

@@ -2,9 +2,18 @@
 
 ``ClusterSim(..., recorder=TraceRecorder())`` streams the events the
 engine does not already persist (scheduling passes, node state
-transitions, checkpoint events); ``finalize(sim)`` then column-izes
-those streams together with the engine's own logs (job records, fault
-log) into a ``schema.Trace``.
+transitions, checkpoint events) into chunked columnar stores
+(``repro.trace.store.ChunkedStore``); ``finalize(sim)`` assembles a
+``schema.Trace`` whose job/fault tables come straight from the engine's
+own columnar logs — a near-free per-column slice/concat + vocabulary
+decode, not the v2 row-tuple transpose of millions of records.
+
+Streaming spill mode: ``TraceRecorder(trace_spill_dir=...)`` redirects
+every completed chunk — the engine's job/fault logs included — to npz
+part files under that directory, so a full 330-day RSC-1 replay records
+in near-constant RSS.  ``finalize`` then writes the manifest and
+returns a lazily-loaded ``Trace`` over the parts (``trace_io.load``
+reopens the directory later).
 
 Contract (mirrors the mitigation-policy hook contract in
 ``cluster/scheduler.py``): the recorder is a pure observer — it never
@@ -15,27 +24,33 @@ tests/test_trace.py).
 """
 from __future__ import annotations
 
-from repro.trace.schema import (NO_JOB, SCHEMA, TABLES, Trace, join_multi,
-                                table_from_columns)
+from typing import Optional
 
-
-def _transpose(table: str, rows: list[tuple]) -> dict:
-    """Row tuples (in schema column order) -> columnar table."""
-    if not rows:
-        return table_from_columns(table, {})
-    names = [c for c, _ in TABLES[table]]
-    return table_from_columns(table, dict(zip(names, zip(*rows))))
+from repro.trace import io as trace_io
+from repro.trace.schema import NODE_EVENTS, SCHEMA, Trace
+from repro.trace.store import ChunkedStore, Interner
 
 
 class TraceRecorder:
     """Accumulates trace rows during a simulation run."""
 
-    def __init__(self):
+    def __init__(self, trace_spill_dir: Optional[str] = None):
         self.meta: dict = {"schema": SCHEMA, "source": "sim"}
-        self._node_events: list[tuple] = []    # (t, node_id, event, reason)
-        self._sched: list[tuple] = []  # (t, queued, started, preempted, blkd)
-        self._checkpoints: list[tuple] = []    # (t, job_id, dur_s, kind)
+        self.trace_spill_dir = trace_spill_dir
+        self._event_int = Interner()
+        self._event_int.seed(NODE_EVENTS)
+        self._event_code = {e: i for i, e in enumerate(NODE_EVENTS)}
+        self._reason_int = Interner()
+        self._reason_int.code("")                  # code 0 == no reason
+        self._kind_int = Interner()
+        self._kind_int.code("write")               # the common default
+        self._node_events = ChunkedStore("node_events", interners={
+            "event": self._event_int, "reason": self._reason_int})
+        self._sched = ChunkedStore("sched_passes")
+        self._checkpoints = ChunkedStore("checkpoints", interners={
+            "kind": self._kind_int})
         self._bound = False
+        self._sim = None
 
     # -- hooks called by ClusterSim -------------------------------------
     def bind(self, sim) -> None:
@@ -45,15 +60,26 @@ class TraceRecorder:
                 "streams would silently merge) — create a fresh recorder "
                 "per ClusterSim")
         self._bound = True
+        self._sim = sim
         spec = sim.spec
         self.meta.update(
             cluster=spec.name, n_nodes=spec.n_nodes,
             gpus_per_node=spec.gpus_per_node, horizon_s=sim.horizon_s,
             seed=sim.seed, r_f=spec.r_f)
+        if self.trace_spill_dir is not None:
+            # constant-RSS mode: chunks stream to part files as they
+            # fill, for the engine's job/fault logs too (bind runs
+            # before any rows exist)
+            for store in (self._node_events, self._sched,
+                          self._checkpoints):
+                store.spill_to(self.trace_spill_dir)
+            sim._enable_trace_spill(self.trace_spill_dir)
 
     def on_node_event(self, t: float, node_id: int, event: str,
                       reason: str = "") -> None:
-        self._node_events.append((t, node_id, event, reason))
+        self._node_events.append(
+            (t, node_id, self._event_code[event],
+             self._reason_int.code(reason)))
 
     def on_sched_pass(self, t: float, n_queued: int, n_started: int,
                       n_preempted: int, blocked: bool) -> None:
@@ -63,53 +89,47 @@ class TraceRecorder:
                       kind: str = "write") -> None:
         """For checkpoint-aware policies / runtime traces; the bare
         simulator emits none (analytic checkpoint accounting)."""
-        self._checkpoints.append((t, job_id, dur_s, kind))
+        self._checkpoints.append((t, job_id, dur_s,
+                                  self._kind_int.code(kind)))
 
     # -- finalize --------------------------------------------------------
+    def _stores(self, sim) -> dict[str, ChunkedStore]:
+        return {"jobs": sim._jobs_log, "faults": sim._faults_log,
+                "node_events": self._node_events,
+                "sched_passes": self._sched,
+                "checkpoints": self._checkpoints}
+
     def finalize(self, sim) -> Trace:
-        """Column-ize the run into a ``Trace`` (call after ``sim.run()``).
+        """Assemble the run's ``Trace`` (call after ``sim.run()``).
 
-        The returned trace's ``job_records()`` cache is pre-seeded with the
-        engine's own record list — they are definitionally the same rows, so
-        re-materializing them from the columns would only duplicate a
-        paper-scale run's millions of records in memory.  Traces loaded from
-        disk materialize from the columns; tests/test_trace.py proves the
-        two paths bit-equal."""
-        # single-pass row tuples + C-level zip transpose: finalize cost is
-        # what the trace_bench overhead budget mostly pays, keep it lean
-        # (sv memoizes the enum .value descriptor; the jobs loop inlines
-        # schema.join_multi, skipping the call for the common empty tuple)
-        from repro.core.metrics import JobState
-
-        sv = {s: s.value for s in JobState}
-        job_rows = [(r.job_id, r.run_id, r.n_gpus, r.submit_t, r.start_t,
-                     r.end_t, sv[r.state], r.priority, r.hw_attributed,
-                     "|".join(r.symptoms) if r.symptoms else "",
-                     NO_JOB if r.preempted_by is None else r.preempted_by)
-                    for r in sim.records]
-        fault_rows = [(f.t, f.node_id, f.symptom, join_multi(f.co_symptoms),
-                       f.transient, f.detectable_by_check, f.repair_s)
-                      for f in sim.fault_log]
-        jobs = _transpose("jobs", job_rows)
-        faults = _transpose("faults", fault_rows)
-        node_events = _transpose("node_events", self._node_events)
-        sched = _transpose("sched_passes", self._sched)
-        checkpoints = _transpose("checkpoints", self._checkpoints)
-        trace = Trace(dict(self.meta), {
-            "jobs": jobs, "faults": faults, "node_events": node_events,
-            "sched_passes": sched, "checkpoints": checkpoints,
-        }).validate()
-        trace._job_cache = list(sim.records)
-        return trace
+        In-memory mode this is a near-free per-column concat of the
+        columnar chunks (plus one vectorized vocabulary decode per str
+        column); nothing is transposed and no row objects exist.  In
+        spill mode the staging tails flush to final part files, the
+        manifest is written, and the returned trace loads its columns
+        lazily from the parts.  Idempotent either way."""
+        stores = self._stores(sim)
+        if self.trace_spill_dir is not None:
+            info = {}
+            for name, store in stores.items():
+                store._flush()
+                info[name] = (store.parts, store.rows)
+            trace_io.write_spill_manifest(self.trace_spill_dir,
+                                          dict(self.meta), info)
+            return trace_io.load_spill(self.trace_spill_dir)
+        tables = {name: store.finalize_columns()
+                  for name, store in stores.items()}
+        return Trace(dict(self.meta), tables).validate()
 
 
 def simulate_trace(spec, *, horizon_days: float = 8.0, seed: int = 0,
-                   **sim_kw):
+                   trace_spill_dir: Optional[str] = None, **sim_kw):
     """Convenience: run a ``ClusterSim`` with a recorder attached and
-    return ``(sim, trace)`` — the "record trace -> analyze trace" path."""
+    return ``(sim, trace)`` — the "record trace -> analyze trace" path.
+    ``trace_spill_dir`` enables constant-RSS streaming recording."""
     from repro.cluster.scheduler import ClusterSim
 
-    rec = TraceRecorder()
+    rec = TraceRecorder(trace_spill_dir=trace_spill_dir)
     sim = ClusterSim(spec, horizon_days=horizon_days, seed=seed,
                      recorder=rec, **sim_kw)
     sim.run()

@@ -156,6 +156,9 @@ class Trace:
 
     def n_rows(self, table: str) -> int:
         cols = self.tables[table]
+        rows = getattr(cols, "rows", None)   # spill views know their count
+        if rows is not None:
+            return rows
         first = TABLES[table][0][0]
         return len(cols[first])
 
@@ -189,6 +192,20 @@ class Trace:
                 for tt, nid, sym, cos, tr, det, rep in zip(*cols)]
         return self._fault_cache
 
+    def job_records_at(self, indices) -> list[JobRecord]:
+        """Materialize only the jobs-table rows at ``indices`` (a numpy
+        index array, in the caller's order) — the hot-path-v3 scoring
+        route: `ensemble.runner.score_cell` computes its aggregates as
+        column array ops and materializes ``JobRecord`` objects solely
+        for the few ETTR-qualifying rows, never the full table."""
+        t = self.tables["jobs"]
+        cols = [t[c][indices].tolist() for c, _ in TABLES["jobs"]]
+        return [
+            JobRecord(jid, rid, g, sub, st, en, JobState(state), prio, hw,
+                      split_multi(sym), None if pb == NO_JOB else pb)
+            for (jid, rid, g, sub, st, en, state, prio, hw, sym,
+                 pb) in zip(*cols)]
+
     # -- hygiene ---------------------------------------------------------
     def validate(self) -> "Trace":
         """Schema check: every table present with every column, consistent
@@ -198,11 +215,13 @@ class Trace:
             tbl = self.tables.get(name)
             if tbl is None:
                 raise ValueError(f"trace missing table {name!r}")
+            lazy = getattr(tbl, "rows", None) is not None
             lens = set()
             for col, _ in cols:
                 if col not in tbl:
                     raise ValueError(f"table {name!r} missing column {col!r}")
-                lens.add(len(tbl[col]))
+                if not lazy:   # spill views are uniform by construction
+                    lens.add(len(tbl[col]))
             if len(lens) > 1:
                 raise ValueError(f"table {name!r} has ragged columns: {lens}")
         events = self.tables["node_events"]["event"]

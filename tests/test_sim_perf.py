@@ -6,7 +6,19 @@ must reproduce the *aggregate* behavior of the seed implementation — the
 per-event RNG streams differ, so equality is statistical, against
 reference aggregates captured from the seed engine at the commit that
 introduced the rewrite.
+
+Bit-identity: from hot-path v2 onward, every optimization pass must
+preserve the engine's event/RNG sequence *exactly*.  ``ENGINE_DIGESTS``
+pins sha256 digests of the full record/fault/drain/lemon-removal
+sequences (plus a probe draw per RNG stream, which pins stream
+positions) captured on the v2 engine (commit 624ce61) across five
+configs — including lemon eviction and the RSC-1 2000-node scale — and
+the digest must also hold for a spill-enabled recorded run
+(tests below).  Any change to allocation order, RNG consumption, or
+event tie-breaking trips these.
 """
+import hashlib
+import json
 import os
 import subprocess
 import sys
@@ -16,7 +28,7 @@ import pytest
 
 from repro.cluster import analysis
 from repro.cluster.scheduler import SCHED_TICK_S, ClusterSim
-from repro.cluster.workload import ClusterSpec
+from repro.cluster.workload import RSC1, ClusterSpec
 from repro.core.ettr_model import ETTRParams, expected_ettr
 from repro.core.montecarlo import simulate_run_ettr
 
@@ -103,6 +115,115 @@ def test_vectorized_monte_carlo_queue_waits_lower_ettr():
     assert mq.ettr_mean < m0.ettr_mean
 
 
+# -- bit-identity gate (hot-path v3 vs the v2 engine) ----------------------
+def engine_digest(sim: ClusterSim) -> str:
+    """sha256 over the full record/fault/drain/lemon sequences plus one
+    probe draw per RNG stream (pinning stream positions).  Floats hash
+    via shortest-repr, so any last-bit drift trips the digest."""
+    h = hashlib.sha256()
+    up = h.update
+    for r in sim.records:
+        up(repr((r.job_id, r.run_id, r.n_gpus, r.submit_t, r.start_t,
+                 r.end_t, r.state.value, r.priority, r.hw_attributed,
+                 r.symptoms, r.preempted_by)).encode())
+    for f in sim.fault_log:
+        up(repr((f.t, f.node_id, f.symptom, f.co_symptoms, f.transient,
+                 f.detectable_by_check, f.repair_s)).encode())
+    for d in sim.drain_log:
+        up(repr(d).encode())
+    for led in sim.lemon_removal_log:
+        up(repr(led).encode())
+    up(repr(float(sim.rng.random())).encode())
+    up(repr(float(sim.faults.rng.random())).encode())
+    return h.hexdigest()
+
+
+DIGEST_CONFIGS = {
+    "busy_80n_6d": (ClusterSpec("RSC-1", n_nodes=80, jobs_per_day=320.0,
+                                target_utilization=0.83, r_f=0.08),
+                    dict(horizon_days=6.0, seed=0)),
+    "rsc2ish_250n_6d": (ClusterSpec("RSC-2", n_nodes=250, jobs_per_day=1100,
+                                    target_utilization=0.85, r_f=6.5e-3,
+                                    lemon_fraction=0.016),
+                        dict(horizon_days=6.0, seed=2)),
+    "lemon_150n_21d": (ClusterSpec("RSC-1", n_nodes=150, jobs_per_day=600.0,
+                                   target_utilization=0.83, r_f=0.05),
+                       dict(horizon_days=21.0, seed=1,
+                            enable_lemon_detection=True)),
+    "rsc1_2000n_2d": (RSC1, dict(horizon_days=2.0, seed=1)),
+    "hi_rf_120n_4d": (ClusterSpec("RSC-1", n_nodes=120, jobs_per_day=480.0,
+                                  target_utilization=0.83, r_f=0.15),
+                      dict(horizon_days=4.0, seed=3)),
+}
+
+# captured on the hot-path-v2 engine at commit 624ce61 (PR 4 head) —
+# regenerate ONLY for an intentional behavior change, never for a perf PR
+ENGINE_DIGESTS = {
+    "busy_80n_6d":
+        "50f8e7d2b5c7143016033bd08a0bced19bc508fd52259692d38fa230c548f41c",
+    "rsc2ish_250n_6d":
+        "5b2e6d791c079c411be595297cff43246a02790944f66f83f91c7aaaddc7a6a9",
+    "lemon_150n_21d":
+        "05825333385207744d9a6acd7e1b056bd4523fe62f8ea85b4e967243d3556157",
+    "rsc1_2000n_2d":
+        "735cd3d5c9f6d254f9ffa0468f3b0ab5a5bfa86c53eeb651b4c9bbcc2a3221af",
+    "hi_rf_120n_4d":
+        "99569866233d6c22042eba8527d02fe1348a07146403df4dfcab0608a42edebd",
+}
+
+
+@pytest.mark.parametrize("name", sorted(DIGEST_CONFIGS))
+def test_engine_bit_identical_to_v2(name):
+    spec, kw = DIGEST_CONFIGS[name]
+    sim = ClusterSim(spec, **kw)
+    sim.run()
+    assert engine_digest(sim) == ENGINE_DIGESTS[name], (
+        f"{name}: engine event/RNG sequence diverged from the v2 engine")
+
+
+def test_engine_bit_identical_to_v2_with_spill(tmp_path):
+    """The spill-enabled recorded run — disk-backed arrival blocks plus
+    chunk spilling — replays the exact v2 event/RNG sequence too."""
+    from repro.trace import TraceRecorder
+
+    spec, kw = DIGEST_CONFIGS["busy_80n_6d"]
+    rec = TraceRecorder(trace_spill_dir=str(tmp_path / "spill"))
+    sim = ClusterSim(spec, **kw, recorder=rec)
+    sim.run()
+    assert engine_digest(sim) == ENGINE_DIGESTS["busy_80n_6d"]
+    trace = rec.finalize(sim)
+    assert trace.n_rows("jobs") == sim.n_records
+
+
+def test_spill_arrival_blocks_bit_equal_to_bulk(tmp_path):
+    """The disk-backed arrival generator consumes the workload RNG
+    stream exactly like the one-shot ``generate_arrays`` (split-draw
+    equivalence + exact cumsum carry), so the concatenated part columns
+    equal the bulk columns bit-for-bit — including across part/top-up
+    boundaries (small block_rows forces many)."""
+    from repro.cluster.workload import WorkloadGenerator
+
+    spec = ClusterSpec("RSC-1", n_nodes=120, jobs_per_day=480.0,
+                       target_utilization=0.83, r_f=6.5e-3)
+    for seed, days in ((0, 3.0), (5, 1.25)):
+        bulk = WorkloadGenerator(spec, seed=seed).generate_arrays(days)
+        gen = WorkloadGenerator(spec, seed=seed)
+        parts = gen.spill_arrival_blocks(days, str(tmp_path / f"s{seed}"),
+                                         block_rows=257)
+        cols = {c: [] for c in ("t", "gpus", "dur", "prio", "outcome")}
+        for tmpl, m in parts:
+            for c in cols:
+                arr = np.load(tmpl.format(col=c))
+                assert len(arr) == m
+                cols[c].append(arr)
+        got = {c: np.concatenate(v) for c, v in cols.items()}
+        assert np.array_equal(got["t"], bulk.submit_t)
+        assert np.array_equal(got["gpus"], bulk.n_gpus)
+        assert np.array_equal(got["dur"], bulk.duration_s)
+        assert np.array_equal(got["prio"], bulk.priority)
+        assert np.array_equal(got["outcome"], bulk.outcome_code)
+
+
 def test_quick_scale_jobs_per_sec_floor():
     """Perf floor guard at the CI smoke scale (100 nodes / 2 days): the
     hot-path-v2 engine sustains ~40k jobs/sec here on the reference CPU;
@@ -135,6 +256,45 @@ def test_sim_bench_quick_smoke(repo_root):
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "sim_bench" in proc.stdout
     assert "jobs_per_sec" in proc.stdout
+
+
+def test_bench_compare_mode(repo_root, tmp_path):
+    """`benchmarks.run --compare BASELINE.json` prints per-metric deltas
+    and gates on >20% throughput drops: identical runs exit 0, a
+    baseline with inflated jobs/sec exits 2."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo_root, "src")
+    base = str(tmp_path / "base.json")
+
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "sim_bench",
+         "--quick", "--json", base],
+        cwd=repo_root, env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    # same code vs its own baseline: deltas print, no regression exit
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--quick",
+         "--compare", base],
+        cwd=repo_root, env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "regression diff vs" in proc.stdout
+    assert "0 throughput regressions" in proc.stdout
+
+    # a 100x-inflated baseline jobs/sec must trip the gate (exit 2)
+    data = json.loads(open(base).read())
+    for row in data["benchmarks"]["sim_bench"]["rows"]:
+        if row[0].endswith("jobs_per_sec"):
+            row[1] = str(float(row[1]) * 100.0)
+    tampered = str(tmp_path / "tampered.json")
+    with open(tampered, "w") as f:
+        json.dump(data, f)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "sim_bench",
+         "--quick", "--compare", tampered],
+        cwd=repo_root, env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 2, proc.stdout + proc.stderr
+    assert "REGRESSION" in proc.stdout
 
 
 def test_sim_bench_profile_smoke(repo_root):

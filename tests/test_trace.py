@@ -201,6 +201,55 @@ def test_simulate_trace_helper():
     assert trace.cluster == "RSC-1" and trace.n_nodes == SPEC.n_nodes
 
 
+# -- contract 2b: spill mode is invisible too ------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_spill_trace_equals_in_memory_trace(seed, tmp_path):
+    """Streaming spill mode (constant-RSS recording: disk-backed arrival
+    blocks + chunked store parts) must be *observationally identical* to
+    in-memory recording: same engine logs, bit-equal trace tables, and
+    exactly equal trace-derived metrics."""
+    spill_dir = str(tmp_path / f"spill{seed}")
+    rec_s = TraceRecorder(trace_spill_dir=spill_dir)
+    sim_s = _run(seed, rec_s)
+    spill = rec_s.finalize(sim_s)
+
+    rec_m = TraceRecorder()
+    sim_m = _run(seed, rec_m)
+    mem = rec_m.finalize(sim_m)
+
+    assert sim_s.records == sim_m.records
+    assert sim_s.fault_log == sim_m.fault_log
+    _assert_traces_equal(spill, mem)
+    assert spill == mem
+
+    # reopening the spill directory later is the same trace again
+    back = trace_io.load(spill_dir)
+    _assert_traces_equal(back, mem)
+
+    # metric equality through the lazy spill tables
+    assert analysis.status_breakdown(spill) == \
+        analysis.status_breakdown(sim_m.records)
+    assert analysis.hw_impact(spill) == analysis.hw_impact(sim_m.records)
+    assert analysis.preemption_cascades(spill) == \
+        analysis.preemption_cascades(sim_m.records)
+    assert analysis.job_size_mix(spill) == \
+        analysis.job_size_mix(sim_m.records)
+
+
+def test_spill_cell_scores_equal_in_memory_scores(tmp_path):
+    """`ensemble.runner.score_cell` (columnar) scores a spill-backed
+    trace identically to the in-memory trace of the same run."""
+    from repro.ensemble.runner import score_cell
+
+    rec_s = TraceRecorder(trace_spill_dir=str(tmp_path / "spill"))
+    sim_s = _run(1, rec_s)
+    rec_m = TraceRecorder()
+    sim_m = _run(1, rec_m)
+    a = score_cell(sim_s, rec_s.finalize(sim_s), min_gpus=16, min_hours=1.0)
+    b = score_cell(sim_m, rec_m.finalize(sim_m), min_gpus=16, min_hours=1.0)
+    assert a == b
+
+
 # -- contract 3: external-trace ingestion ----------------------------------
 def test_philly_csv_ingest_fixture():
     trace = ingest_philly_csv(PHILLY_CSV)
@@ -344,9 +393,10 @@ def test_report_cli_on_simulated_and_ingested_traces(repo_root, tmp_path):
 
 def test_trace_bench_quick_smoke(repo_root):
     """Tier-1 guard: `benchmarks.run --only trace_bench --quick` runs
-    end-to-end and the recording-overhead budget (<10%) holds."""
+    end-to-end and the recording-overhead budget (<5%, hot-path v3)
+    holds."""
     proc = _subproc(["-m", "benchmarks.run", "--only", "trace_bench",
                      "--quick"], repo_root)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "recording_overhead" in proc.stdout
-    assert "[PASS] recording overhead < 10%" in proc.stdout, proc.stdout
+    assert "[PASS] recording overhead < 5%" in proc.stdout, proc.stdout

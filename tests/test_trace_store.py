@@ -1,0 +1,150 @@
+"""Unit gates for the chunked columnar append stores (hot-path v3).
+
+The stores are the engine's job/fault logs *and* the trace tables, so
+their edge cases — exact chunk-boundary fills, empty finalize, vocab
+decode, spill part rollover, incremental row reads — are load-bearing
+for both the sha256 bit-identity contract and the constant-RSS claim.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.trace import io as trace_io
+from repro.trace.schema import TABLES, empty_table
+from repro.trace.store import ChunkedStore, Interner
+
+
+def _ne_store(chunk_rows):
+    it_e = Interner()
+    it_e.seed(("drain", "repair", "hold", "release", "evict"))
+    it_r = Interner()
+    it_r.code("")
+    st = ChunkedStore("node_events", chunk_rows=chunk_rows,
+                      interners={"event": it_e, "reason": it_r})
+    return st, it_e, it_r
+
+
+def _rows(n, it_r):
+    return [(30.0 * i, i % 7, i % 5, it_r.code(f"r{i % 3}"))
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("n,chunk", [
+    (0, 4),      # empty store
+    (3, 4),      # staged only, no chunk completed
+    (4, 4),      # exactly one chunk, empty tail
+    (8, 4),      # exactly two chunks
+    (9, 4),      # chunk boundary + 1
+    (11, 4),     # partial tail
+    (5, 100),    # single staged block larger than row count
+])
+def test_append_rollover_and_finalize(n, chunk):
+    st, _, it_r = _ne_store(chunk)
+    rows = _rows(n, it_r)
+    for r in rows:
+        st.append(r)
+    assert st.rows == n
+    cols = st.finalize_columns()
+    assert set(cols) == {c for c, _ in TABLES["node_events"]}
+    assert all(len(v) == n for v in cols.values())
+    if n:
+        assert cols["t"].tolist() == [r[0] for r in rows]
+        assert cols["node_id"].tolist() == [r[1] for r in rows]
+        # str columns decode through the vocabulary
+        events = ("drain", "repair", "hold", "release", "evict")
+        assert cols["event"].tolist() == [events[r[2]] for r in rows]
+        assert cols["reason"].tolist() == [f"r{i % 3}" for i in range(n)]
+    # finalize is idempotent (trace_bench times it repeatedly)
+    cols2 = st.finalize_columns()
+    for c in cols:
+        assert np.array_equal(cols[c], cols2[c])
+
+
+def test_empty_store_finalize_matches_empty_table():
+    st, _, _ = _ne_store(8)
+    cols = st.finalize_columns()
+    ref = empty_table("node_events")
+    for c in ref:
+        assert len(cols[c]) == 0
+        assert cols[c].dtype.kind == ref[c].dtype.kind
+
+
+def test_iter_rows_incremental_and_across_chunks():
+    st, _, it_r = _ne_store(4)
+    rows = _rows(10, it_r)
+    for r in rows[:6]:
+        st.append(r)
+    assert list(st.iter_rows()) == rows[:6]
+    assert list(st.iter_rows(3)) == rows[3:6]   # mid-chunk start
+    assert list(st.iter_rows(5)) == rows[5:6]   # staged-tail start
+    for r in rows[6:]:
+        st.append(r)
+    assert list(st.iter_rows(6)) == rows[6:]
+    assert list(st.iter_rows(10)) == []
+
+
+def test_spill_parts_roundtrip(tmp_path):
+    st, _, it_r = _ne_store(4)
+    st.spill_to(str(tmp_path))
+    rows = _rows(11, it_r)
+    for r in rows:
+        st.append(r)
+    # two full chunks already on disk, tail staged
+    assert len(st.parts) == 2
+    assert all(os.path.exists(p) for p in st.parts)
+    cols = st.finalize_columns()        # flushes the tail to a third part
+    assert len(st.parts) == 3
+    assert all(len(v) == 11 for v in cols.values())
+    assert cols["t"].tolist() == [r[0] for r in rows]
+    # spilled iter_rows re-interns the decoded strings back to codes
+    assert list(st.iter_rows()) == rows
+    # read_column matches finalize_columns
+    assert np.array_equal(st.read_column("event"), cols["event"])
+
+
+def test_spill_to_after_chunking_refuses(tmp_path):
+    st, _, it_r = _ne_store(2)
+    for r in _rows(4, it_r):
+        st.append(r)
+    with pytest.raises(ValueError, match="spill_to"):
+        st.spill_to(str(tmp_path))
+
+
+def test_spill_table_lazy_loading(tmp_path):
+    """io.SpillTable: lazy per-column loads, manifest row counts, and
+    dict-like behavior over a written spill directory."""
+    st, _, it_r = _ne_store(4)
+    st.spill_to(str(tmp_path))
+    rows = _rows(9, it_r)
+    for r in rows:
+        st.append(r)
+    st._flush()
+    meta = {"schema": "repro-trace/v1", "source": "sim"}
+    info = {name: ([], 0) for name in TABLES}
+    info["node_events"] = (st.parts, st.rows)
+    trace_io.write_spill_manifest(str(tmp_path), meta, info)
+
+    trace = trace_io.load(str(tmp_path))
+    assert trace.n_rows("node_events") == 9     # manifest count, no load
+    assert trace.n_rows("jobs") == 0
+    tbl = trace.tables["node_events"]
+    assert set(tbl) == {c for c, _ in TABLES["node_events"]}
+    assert "event" in tbl and "nope" not in tbl
+    assert tbl["t"].tolist() == [r[0] for r in rows]
+    with pytest.raises(KeyError):
+        tbl["nope"]
+    # empty-table access through a partless spill table
+    assert len(trace.tables["jobs"]["job_id"]) == 0
+
+
+def test_interner_code_stability():
+    it = Interner()
+    it.seed(["a", "b"])
+    assert it.code("a") == 0 and it.code("b") == 1
+    assert it.code("c") == 2
+    assert it.code(("x", "y"), "x|y") == 3
+    assert it.strings == ["a", "b", "c", "x|y"]
+    assert it.raw[3] == ("x", "y")
+    assert it.decode_array(np.array([2, 0])).tolist() == ["c", "a"]
+    assert it.decode_array(np.empty(0, dtype=np.int32)).dtype.kind == "U"
