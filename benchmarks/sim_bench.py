@@ -70,23 +70,42 @@ def _run_scale(rep, label, spec, days, seed=0):
 
 
 # run in a fresh subprocess so each horizon's peak RSS is its own
-# high-water mark (ru_maxrss never decreases within a process)
+# high-water mark.  The child samples /proc/self/statm on a background
+# thread instead of ru_maxrss: on Linux ru_maxrss lives in the
+# signal_struct and *survives execve*, so a child spawned from this
+# (fat, post-replay) benchmark process would just report the parent's
+# peak; sandbox kernels may also omit VmHWM from /proc/self/status
 _SPILL_SNIPPET = """\
-import json, resource, sys, tempfile, time
+import json, os, sys, tempfile, threading, time
 from repro.cluster.scheduler import ClusterSim
 from repro.cluster.workload import RSC1
 from repro.trace import TraceRecorder
 days = float(sys.argv[1])
+page = os.sysconf("SC_PAGE_SIZE")
+peak = [0]
+done = threading.Event()
+def _sample():
+    while True:
+        with open("/proc/self/statm") as f:
+            rss = int(f.read().split()[1]) * page
+        if rss > peak[0]:
+            peak[0] = rss
+        if done.is_set():
+            return
+        time.sleep(0.02)
+thr = threading.Thread(target=_sample, daemon=True)
+thr.start()
 with tempfile.TemporaryDirectory() as td:
     t0 = time.perf_counter()
     rec = TraceRecorder(trace_spill_dir=td)
     sim = ClusterSim(RSC1, horizon_days=days, seed=0, recorder=rec)
     sim.run()
     rec.finalize(sim)
-    print(json.dumps({"wall_s": time.perf_counter() - t0,
-                      "jobs": sim.n_records,
-                      "peak_rss_mb": resource.getrusage(
-                          resource.RUSAGE_SELF).ru_maxrss / 1024.0}))
+    wall = time.perf_counter() - t0
+    done.set()
+    thr.join()
+    print(json.dumps({"wall_s": wall, "jobs": sim.n_records,
+                      "peak_rss_mb": peak[0] / 1048576.0}))
 """
 
 
