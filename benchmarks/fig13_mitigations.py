@@ -19,10 +19,21 @@ import math
 from benchmarks import common
 from benchmarks.common import benchmark
 
-# calibrated on seeds 0-4 at 512/2048/8192 GPUs: measured - model lands in
-# [-0.027, -0.009]; the regression band leaves generous statistical margin
+# re-calibrated post chain-leak fix on seeds 0-1 at 512/2048/8192 GPUs:
+# measured - model lands in [-0.027, -0.009]; the regression band leaves
+# generous statistical margin
 MODEL_BAND_LO = -0.10
 MODEL_BAND_HI = +0.05
+
+# fault-model v2 scenario packs (baseline policy @ 2048 GPUs, seeds 0-1;
+# sweep cells are bit-deterministic per seed).  Calibrated diffs:
+# independent -0.009, rack-correlated -0.009, slow-detection -0.026 (the
+# model never sees the detection lag, so measured falls further below it)
+SCENARIO_BANDS = {
+    "rack-correlated": (-0.10, +0.05),
+    "slow-detection": (-0.12, +0.03),
+}
+SCENARIO_GPUS = 2048
 
 
 def _report_cells(rep, res):
@@ -51,6 +62,14 @@ def run(rep):
         rep.check("every quick cell measured ETTR",
                   all(not math.isnan(c.ettr_sim) for c in res.cells),
                   str([c.n_runs_measured for c in res.cells]))
+        # scenario-pack smoke (tier-1): the v2 packs thread through the
+        # sweep harness end-to-end at toy scale
+        res_s = sweep(policies=["baseline"], gpus_list=[256], seeds=(0,),
+                      horizon_days=3.0, min_hours=2.0, procs=0,
+                      scenario="slow-detection")
+        rep.check("scenario pack threads through the sweep harness",
+                  len(res_s.cells) == 1 and res_s.cells[0].n_faults > 0,
+                  f"{res_s.cells[0].n_faults} faults")
         return
 
     policies = ["baseline", "lemon_eviction", "checkpoint_optimal"]
@@ -83,3 +102,38 @@ def run(rep):
                   if c.policy == "lemon_eviction")
     rep.check("lemon eviction actually evicts", evicted > 0,
               f"{evicted} evictions across cells")
+
+    # fault-model v2 scenario packs: baseline + tuned cadence per pack,
+    # measured-vs-model diff gated against the per-scenario bands above
+    indep = rows[("baseline", SCENARIO_GPUS)]
+    scen_stats = {}
+    for scen in sorted(SCENARIO_BANDS):
+        res_s = sweep(policies=["baseline", "checkpoint_optimal"],
+                      gpus_list=[SCENARIO_GPUS], seeds=(0, 1),
+                      horizon_days=8.0, procs=4, scenario=scen)
+        rows_s = {(r["policy"], r["n_gpus"]): r for r in res_s.aggregate()}
+        base_s = rows_s[("baseline", SCENARIO_GPUS)]
+        diff_s = base_s["ettr_sim"] - base_s["ettr_model"]
+        scen_stats[scen] = (diff_s, base_s["goodput"])
+        rep.add(f"{scen}.baseline.ettr", round(base_s["ettr_sim"], 3),
+                f"model {base_s['ettr_model']:.3f}, diff {diff_s:+.3f}")
+        lo, hi = SCENARIO_BANDS[scen]
+        rep.check(f"{scen}: baseline ETTR within its calibrated band "
+                  f"@ {SCENARIO_GPUS} GPUs",
+                  lo <= diff_s <= hi,
+                  f"diff {diff_s:+.3f} vs [{lo:+.2f}, {hi:+.2f}]")
+        up_s = rows_s[("checkpoint_optimal", SCENARIO_GPUS)]["d_ettr"]
+        rep.check(f"{scen}: rate-tuned cadence still lifts ETTR",
+                  up_s > 0, f"{up_s:+.3f}")
+    indep_diff = indep["ettr_sim"] - indep["ettr_model"]
+    rep.check("slow-detection widens the measured-below-model gap vs "
+              "independent (same seeds — the model cannot see the "
+              "detection lag)",
+              scen_stats["slow-detection"][0] < indep_diff,
+              f"{scen_stats['slow-detection'][0]:+.3f} vs "
+              f"{indep_diff:+.3f}")
+    rep.check("rack-correlated blasts do not improve goodput",
+              scen_stats["rack-correlated"][1]
+              <= indep["goodput"] + 0.005,
+              f"{scen_stats['rack-correlated'][1]:.4f} vs independent "
+              f"{indep['goodput']:.4f}")

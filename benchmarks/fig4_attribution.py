@@ -21,6 +21,16 @@ def run(rep):
                         "gpu_memory_errors", "pcie_errors",
                         "gpu_unavailable"}) >= 2,
             ",".join(top4))
+    # fault-model v2 columns: summary degrades to {} on v1 traces (no
+    # domain/detected_t columns) instead of raising, so this section is
+    # schema-version-proof
+    v2 = analysis.domain_detection_summary(get_trace("RSC-1"))
+    for k, v in v2.items():
+        rep.add(f"RSC-1.v2.{k}", str(v))
+    rep.check("v2 summary degrades gracefully (dict, never KeyError)",
+              isinstance(v2, dict),
+              "empty on v1/legacy traces" if not v2 else f"{len(v2)} keys")
+
     t1 = get_trace("RSC-1")
     t2 = get_trace("RSC-2")
     r1 = t1.n_rows("faults") / (t1.n_nodes * t1.horizon_days)

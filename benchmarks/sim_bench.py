@@ -43,15 +43,38 @@ SEED_JOBS_PER_SEC_500N_5D = 1766.0
 # same reference CPU
 PR1_JOBS_PER_SEC_2000N_5D = 26065.0
 
-# committed PR-4 (hot-path v2) baseline at 2000 nodes / 5 days and the
-# PR-4 full RSC-1 330-day wall — the hot-path-v3 targets (see
-# BENCH_sim.json history)
+# historical PR-4 (hot-path v2) numbers at 2000 nodes / 5 days and the
+# PR-4 full RSC-1 330-day wall — kept informational; the regression gate
+# compares against the *committed* BENCH_sim.json baseline instead
+# (same semantics as `benchmarks.run --compare`: fail on a >20% drop)
 PR4_JOBS_PER_SEC_2000N_5D = 54829.0
 PR4_RSC1_330D_WALL_S = 76.4
 V3_RSC1_330D_BUDGET_S = 55.0
+BASELINE_MAX_DROP = 0.20
 
 # spill-mode constant-memory gate: 330-day recording RSS vs 30-day
 SPILL_RSS_RATIO_MAX = 1.5
+
+
+def committed_baseline_jps(key: str = "2000n_5d.jobs_per_sec"):
+    """The committed BENCH_sim.json throughput baseline for ``key``
+    (None when the file or row is absent — e.g. a fresh checkout before
+    the first baseline regeneration)."""
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_sim.json")
+    try:
+        with open(path) as f:
+            base = json.load(f)
+        rows = base["benchmarks"]["sim_bench"]["rows"]
+    except (OSError, KeyError, json.JSONDecodeError):
+        return None
+    for k, v, _ in rows:
+        if k == key:
+            try:
+                return float(v)
+            except (TypeError, ValueError):
+                return None
+    return None
 
 
 def _run_scale(rep, label, spec, days, seed=0):
@@ -208,13 +231,17 @@ def run(rep):
             f"PR-1 engine: {PR1_JOBS_PER_SEC_2000N_5D:.0f} jobs/s")
     rep.add("2000n_5d.speedup_vs_pr4",
             round(best_jps / PR4_JOBS_PER_SEC_2000N_5D, 2),
-            f"PR-4 committed baseline: {PR4_JOBS_PER_SEC_2000N_5D:.0f} "
-            "jobs/s")
-    rep.check("2000n/5d >=1.5x jobs/sec over committed PR-4 baseline "
-              "(hot-path v3)",
-              best_jps >= 1.5 * PR4_JOBS_PER_SEC_2000N_5D,
-              f"{best_jps:.0f} vs target "
-              f"{1.5 * PR4_JOBS_PER_SEC_2000N_5D:.0f} jobs/s")
+            f"PR-4 historical: {PR4_JOBS_PER_SEC_2000N_5D:.0f} jobs/s")
+    base_jps = committed_baseline_jps()
+    if base_jps:
+        rep.check(f"2000n/5d within {BASELINE_MAX_DROP:.0%} of committed "
+                  "BENCH_sim.json baseline",
+                  best_jps >= (1.0 - BASELINE_MAX_DROP) * base_jps,
+                  f"{best_jps:.0f} vs baseline {base_jps:.0f} jobs/s "
+                  f"(floor {(1.0 - BASELINE_MAX_DROP) * base_jps:.0f})")
+    else:
+        rep.add("2000n_5d.baseline", "absent",
+                "no committed BENCH_sim.json row; regression gate skipped")
 
     # the headline scale: full 11-month RSC-1 replay (~2.6M job attempts)
     wall1, jps1 = _run_scale(rep, "rsc1_330d_full", RSC1, 330.0)

@@ -222,6 +222,53 @@ def failure_rate_timeline(fault_log, n_nodes=None, horizon_days=None,
     return days, rates
 
 
+def domain_detection_summary(trace) -> dict:
+    """Fault-model v2 summary: correlated-domain blast radii and staged
+    detection lag, from a trace's optional ``domain`` / ``fault_id`` /
+    ``detected_t`` fault columns.
+
+    Returns ``{}`` for v1 traces (columns absent) and for v2 traces that
+    recorded neither a domain event nor a positive detection lag, so
+    callers can gate a report section on truthiness instead of schema
+    version.  Blast size groups nodes by shared ``fault_id`` within
+    domain-labeled rows; detection lag is ``detected_t - t`` over rows
+    with a resolved detection time (sentinel ``-1.0`` rows are ignored)."""
+    has_col = getattr(trace, "has_column", None)
+    if has_col is None or not has_col("faults", "domain"):
+        return {}
+    t = np.asarray(trace.column("faults", "t"), dtype=float)
+    if not len(t):
+        return {}
+    domain = np.asarray(trace.column("faults", "domain"))
+    fault_id = np.asarray(trace.column("faults", "fault_id"))
+    detected_t = np.asarray(trace.column("faults", "detected_t"),
+                            dtype=float)
+
+    out: dict = {}
+    dom_mask = domain != ""
+    if dom_mask.any():
+        kinds = defaultdict(int)
+        for d in domain[dom_mask].tolist():
+            kinds[str(d).split(":", 1)[0]] += 1
+        _, blast = np.unique(fault_id[dom_mask], return_counts=True)
+        out["domain_events"] = int(len(blast))
+        out["domain_fault_fraction"] = round(
+            float(dom_mask.sum()) / len(t), 4)
+        out["blast_size_mean"] = round(float(blast.mean()), 2)
+        out["blast_size_max"] = int(blast.max())
+        out["events_by_kind"] = dict(sorted(kinds.items()))
+    lag = detected_t - t
+    lag = lag[(detected_t >= 0) & (lag > 0)]
+    if len(lag):
+        out["detection_lag_s"] = {
+            "n": int(len(lag)),
+            "mean": round(float(lag.mean()), 1),
+            "p50": round(float(np.percentile(lag, 50)), 1),
+            "p90": round(float(np.percentile(lag, 90)), 1),
+        }
+    return out
+
+
 def job_size_mix(records) -> dict[int, dict[str, float]]:
     """Figure 6 / Observation 7: share of job attempts and of GPU-time per
     job size.

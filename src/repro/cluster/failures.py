@@ -6,11 +6,28 @@ unattributed NODE_FAIL share.  Figure 5: failure modes ebb and flow —
 modeled as per-symptom rate-multiplier *episodes* and health-check
 introduction dates (before a check exists, its faults surface as
 unattributed NODE_FAILs: 'new health checks expose new failure modes').
+
+Fault-model v2 (see docs/failure_model.md): on top of the independent
+per-node exponential chains above, this module defines
+
+  * :class:`FailureDomainMap` — nodes grouped into rack / fabric / power
+    domains (the §III blast radii: a ToR switch, a fabric segment, or a
+    power bus takes out many nodes in one event);
+  * :class:`DomainFaultSpec` / :class:`DomainFaultProcess` — domain-level
+    fault modes that drain a sampled blast radius of a sampled group in
+    one event, attributed to one shared fault id;
+  * :class:`StageDelays` — per-symptom detection→diagnosis delay
+    distributions (Lablup-style staged recovery) replacing the v1
+    instant fault→drain transition;
+  * :class:`Scenario` — one named bundle of the above.  ``None`` /
+    ``independent-v1`` is the exact-legacy default: no domain modes, no
+    stage model, and bit-for-bit the v1 engine streams (the named packs
+    live in ``repro.configs.scenarios``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Mapping, Optional
 
 import numpy as np
 
@@ -74,7 +91,16 @@ CHECK_INTRODUCED_DAY = {
 class Fault:
     """One hardware fault event (``slots=True``: a paper-scale replay logs
     thousands of these and the kill/drain paths shuffle them through event
-    payloads)."""
+    payloads).
+
+    Fault-model v2 fields (defaults = the v1 sentinels, so v1 traces
+    round-trip unchanged): ``domain`` is ``""`` for an independent
+    per-node fault or ``"<kind>:<group>"`` (e.g. ``"rack:7"``) for a
+    correlated domain event; ``fault_id`` groups the rows of one domain
+    blast (every independent fault gets its own id); ``detected_t`` is
+    when the detection pipeline surfaced the fault (−1.0 = not recorded,
+    the v1-trace sentinel — NaN would break value-equality round-trips).
+    """
 
     t: float
     node_id: int
@@ -83,6 +109,9 @@ class Fault:
     transient: bool
     detectable_by_check: bool
     repair_s: float
+    domain: str = ""
+    fault_id: int = -1
+    detected_t: float = -1.0
 
 
 class FaultProcess:
@@ -214,3 +243,169 @@ class FaultProcess:
         rates_per_s = rates / 86400.0
         draws = self._take_std_exponentials(self.n_nodes)
         return t + draws / np.maximum(rates_per_s, 1e-12)
+
+
+# -- fault-model v2: correlated domains + staged detection ---------------
+class FailureDomainMap:
+    """Static node→domain assignment: contiguous racks, racks grouped
+    into fabric segments and power buses (the §III blast radii).
+
+    Groups are keyed ``(kind, group_id)``; a node belongs to exactly one
+    group per kind.  The map is deterministic in the node count and the
+    group sizes — no RNG — so every seed of a scenario shares the same
+    topology and only the *event* sampling differs."""
+
+    KINDS = ("rack", "fabric", "power")
+
+    def __init__(self, n_nodes: int, *, rack_size: int = 16,
+                 racks_per_fabric: int = 4, racks_per_power: int = 8):
+        if rack_size < 1:
+            raise ValueError("rack_size must be >= 1")
+        self.n_nodes = n_nodes
+        self.rack_size = rack_size
+        self.racks_per_fabric = max(1, racks_per_fabric)
+        self.racks_per_power = max(1, racks_per_power)
+        self._group_of = {}       # kind -> ndarray[node_id] = group id
+        self._members = {}        # (kind, gid) -> ndarray of node ids
+        nodes = np.arange(n_nodes, dtype=np.int64)
+        racks = nodes // rack_size
+        per_kind = {
+            "rack": racks,
+            "fabric": racks // self.racks_per_fabric,
+            "power": racks // self.racks_per_power,
+        }
+        for kind, gids in per_kind.items():
+            self._group_of[kind] = gids
+            for gid in np.unique(gids).tolist():
+                self._members[(kind, gid)] = nodes[gids == gid]
+
+    def group_of(self, kind: str, node_id: int) -> int:
+        return int(self._group_of[kind][node_id])
+
+    def members(self, kind: str, gid: int) -> np.ndarray:
+        return self._members[(kind, gid)]
+
+    def n_groups(self, kind: str) -> int:
+        return int(self._group_of[kind].max()) + 1 if self.n_nodes else 0
+
+    def label(self, kind: str, gid: int) -> str:
+        return f"{kind}:{gid}"
+
+
+@dataclass(frozen=True)
+class DomainFaultSpec:
+    """One correlated domain-level fault mode.
+
+    ``rate_per_day`` is the cluster-wide Poisson rate of events of this
+    mode (not per-group); each event picks a uniform group of ``kind``
+    and drains a binomially-sampled ``blast_fraction`` of its members
+    (at least 2 — a 1-node blast is just an independent fault) with one
+    shared fault id and repair time."""
+
+    kind: str                  # "rack" | "fabric" | "power"
+    symptom: str               # Table I taxonomy label for the blast rows
+    rate_per_day: float        # cluster-wide events/day
+    blast_fraction: float      # expected fraction of group members hit
+    repair_mean_s: float       # mean of the exponential shared repair time
+    transient_p: float = 0.5   # P(event clears without hardware swap)
+
+
+@dataclass(frozen=True)
+class StageDelays:
+    """Detection→diagnosis delay distributions (Lablup-style staging).
+
+    v1 semantics (``stages=None`` in the engine) are instant: a
+    high-severity detectable fault is caught by the next health-check
+    pass, a low-severity one drains immediately, and only the NODE_FAIL
+    heartbeat path has a delay.  With a ``StageDelays``, every fault
+    instead waits ``sample_detect`` seconds to be *detected* (surfaced
+    to policies via ``on_fault_detected``) and folds a further
+    ``sample_diagnose`` draw into its repair time (triage before the
+    vendor clock starts).  All draws come from the engine's ``sim.rng``
+    stream, so a scenario with ``stages=None`` consumes zero extra RNG.
+    """
+
+    detect_mean_s: float = 120.0
+    detect_mean_by_symptom: Mapping[str, float] = field(default_factory=dict)
+    diagnose_mean_s: float = 0.0
+    heartbeat_mean_s: float = 600.0   # undetected-path heartbeat gap
+
+    def detect_mean(self, symptom: str) -> float:
+        return float(self.detect_mean_by_symptom.get(
+            symptom, self.detect_mean_s))
+
+    def sample_detect(self, rng, symptom: str) -> float:
+        mean = self.detect_mean(symptom)
+        return float(rng.exponential(mean)) if mean > 0.0 else 0.0
+
+    def sample_diagnose(self, rng) -> float:
+        return (float(rng.exponential(self.diagnose_mean_s))
+                if self.diagnose_mean_s > 0.0 else 0.0)
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One named fault-model configuration (see
+    ``repro.configs.scenarios`` for the shipped packs).
+
+    ``domain_faults=()`` and ``stage_delays=None`` is exact-legacy v1:
+    the engine takes the same code paths and consumes the same RNG
+    draws bit-for-bit."""
+
+    name: str
+    description: str = ""
+    domain_faults: tuple[DomainFaultSpec, ...] = ()
+    stage_delays: Optional[StageDelays] = None
+    rack_size: int = 16
+    racks_per_fabric: int = 4
+    racks_per_power: int = 8
+
+    @property
+    def is_legacy(self) -> bool:
+        return not self.domain_faults and self.stage_delays is None
+
+    def domain_map(self, n_nodes: int) -> FailureDomainMap:
+        return FailureDomainMap(
+            n_nodes, rack_size=self.rack_size,
+            racks_per_fabric=self.racks_per_fabric,
+            racks_per_power=self.racks_per_power)
+
+
+class DomainFaultProcess:
+    """Samples correlated domain-level fault events.
+
+    Owns its own RNG stream (``seed+3`` by convention in the engine) so
+    that scenarios *without* domain modes never construct one and the
+    engine's per-node streams stay bit-identical to v1."""
+
+    def __init__(self, specs: tuple[DomainFaultSpec, ...],
+                 domains: FailureDomainMap, *, seed: int = 0):
+        self.specs = tuple(specs)
+        self.domains = domains
+        self.rng = np.random.default_rng(seed)
+        for s in self.specs:
+            if s.kind not in FailureDomainMap.KINDS:
+                raise ValueError(f"unknown domain kind {s.kind!r} "
+                                 f"(expected one of {FailureDomainMap.KINDS})")
+
+    def next_event_time(self, spec_idx: int, t: float) -> float:
+        """Next event of mode ``spec_idx`` after ``t`` (cluster-wide
+        Poisson)."""
+        rate_per_s = self.specs[spec_idx].rate_per_day / 86400.0
+        return t + float(self.rng.exponential(1.0)) / max(rate_per_s, 1e-12)
+
+    def sample_event(self, spec_idx: int):
+        """Sample one event of mode ``spec_idx``: returns
+        ``(group_id, blast_node_ids, transient, repair_s)``.  The blast
+        is at least 2 nodes (a 1-node event is indistinguishable from an
+        independent fault and would pollute the correlation tests)."""
+        spec = self.specs[spec_idx]
+        gid = int(self.rng.integers(self.domains.n_groups(spec.kind)))
+        members = self.domains.members(spec.kind, gid)
+        k = int(self.rng.binomial(len(members), spec.blast_fraction))
+        k = min(len(members), max(2, k))
+        blast = self.rng.choice(members, size=k, replace=False)
+        blast.sort()
+        transient = bool(self.rng.random() < spec.transient_p)
+        repair_s = float(self.rng.exponential(spec.repair_mean_s))
+        return gid, blast, transient, repair_s

@@ -83,9 +83,29 @@ record/fault/drain/lemon sequences plus RNG stream positions are pinned
 across five configs (incl. lemon eviction, RSC-1 scale, and a
 spill-enabled run) in tests/test_sim_perf.py.
 
+Fault-model v2 (see docs/failure_model.md): per-node fault chains carry a
+*generation* — the heap entry is ``(t, node_id, gen)`` and only the
+current generation is live.  A chain firing on a DOWN node retires the
+chain (no fault sampled, no row logged); repair/release bump the
+generation and arm a fresh chain.  This fixes the v1 repair-path chain
+leak, where every drain/repair cycle stacked a new chain on top of the
+still-live old one and per-node fault streams compounded over long
+horizons.  On top of the chains, an optional ``scenario``
+(``repro.configs.scenarios``) adds correlated domain-level fault events
+(``K_DOMFAULT``: one rack/fabric/power blast radius drains simultaneously
+under one shared fault id) and a staged detection→diagnosis→repair
+pipeline (per-symptom detect delays; ``K_DETECT`` defers the
+low-severity drain decision to detection time).  ``scenario=None`` (==
+the ``independent-v1`` pack) takes the exact-legacy code paths and
+consumes the engine RNG streams bit-for-bit.
+
 Mitigation hook points (repro.mitigations): an optional ``policy`` observes
-the simulation at fixed points — ``bind`` / ``on_fault`` / ``on_node_drain``
-/ ``on_node_repair`` / ``on_schedule_pass`` / ``on_job_requeue`` /
+the simulation at fixed points — ``bind`` / ``on_fault`` /
+``on_fault_detected`` (fires when the detection pipeline surfaces a
+fault: instantly for legacy low-severity, at the health-check/heartbeat
+kill for high-severity/undetected, at the sampled detect delay under a
+staged scenario) / ``on_node_drain`` / ``on_node_repair`` /
+``on_schedule_pass`` / ``on_job_requeue`` /
 ``on_timer`` — and intervenes only through the public helpers
 (``hold_node`` / ``release_node`` / ``evict_node`` / ``restart_node`` /
 ``push_policy_timer``).  With no policy (or a no-op policy) the engine is
@@ -117,7 +137,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.cluster.failures import SYMPTOMS, Fault, FaultProcess
+from repro.cluster.failures import (SYMPTOMS, DomainFaultProcess, Fault,
+                                    FaultProcess)
 from repro.cluster.workload import (OUTCOME_STRS, ClusterSpec, JobRequest,
                                     WorkloadGenerator)
 from repro.core.lemon import LemonDetector, NodeHistory
@@ -139,13 +160,15 @@ POLICY_HOLD = "hold"
 _INF = float("inf")
 
 # int-coded event kinds (heap tuples: (t, seq, kind, payload)); node fault
-# chains do NOT appear here — they live in their own (t, node_id) heap
+# chains do NOT appear here — they live in their own (t, node_id, gen) heap
 K_FINISH = 0
 K_SCHED = 1
 K_KILL = 2
 K_REPAIR = 3
 K_LEMON = 4
 K_POLICY = 5
+K_DETECT = 6     # staged low-severity detection landed (fault-model v2)
+K_DOMFAULT = 7   # correlated domain-level fault event (fault-model v2)
 
 # SoA node status codes (one merged array instead of node_ok/node_draining)
 N_ACTIVE = 0     # schedulable (node_ok and not draining)
@@ -193,8 +216,25 @@ class ClusterSim:
                  lemon_scan_period_days: float = 7.0,
                  lemon_detector: Optional[LemonDetector] = None,
                  episodes=(), check_introduced=None, policy=None,
-                 recorder=None):
+                 recorder=None, scenario=None):
         self.spec = spec
+        # fault-model v2 scenario: a failures.Scenario, a pack name (str,
+        # resolved through repro.configs.scenarios), or None == exact-
+        # legacy independent-v1 (no domain modes, no stage model — the
+        # engine takes the v1 code paths and consumes the same RNG draws)
+        if isinstance(scenario, str):
+            from repro.configs.scenarios import get_scenario
+            scenario = get_scenario(scenario)
+        self.scenario = scenario
+        self._stages = None if scenario is None else scenario.stage_delays
+        if scenario is not None and scenario.domain_faults:
+            # own RNG stream (seed+3): legacy scenarios never construct
+            # one, keeping the engine's streams bit-identical to v1
+            self._domain_proc = DomainFaultProcess(
+                scenario.domain_faults, scenario.domain_map(spec.n_nodes),
+                seed=seed + 3)
+        else:
+            self._domain_proc = None
         # optional repro.mitigations.MitigationPolicy (duck-typed; the
         # scheduler never imports the mitigations package)
         self.policy = policy
@@ -268,7 +308,16 @@ class ClusterSim:
         # (start_t + guard, job_id) for whole-node jobs: next guard expiry
         self._guard_heap: list[tuple] = []
         self.events: list[tuple] = []  # (t, seq, kind, payload)
-        self._fault_heap: list[tuple] = []  # (t, node_id) per-node chains
+        # per-node fault chains: (t, node_id, gen).  _chain_gen[i] is the
+        # node's current chain generation; a popped entry whose gen is
+        # stale (the chain was re-armed at repair/release) is discarded,
+        # and an entry firing on a DOWN node retires the chain (the
+        # repair path arms a fresh generation).  Invariant: exactly one
+        # live (current-gen) entry per in-service node, at most one for
+        # a DOWN node — see _live_chain_counts().
+        self._fault_heap: list[tuple] = []
+        self._chain_gen = [0] * n
+        self._fault_ids = itertools.count(1)
         self._seq = itertools.count()
         # columnar logs (hot-path v3): rows append as int-coded tuples;
         # .records / .fault_log materialize lazily for API compatibility
@@ -279,10 +328,13 @@ class ClusterSim:
         self._fsym_int.seed(SYMPTOMS)              # stable symptom codes
         self._cos_int = Interner()
         self._cos_int.code((), "")
+        self._dom_int = Interner()
+        self._dom_int.code("")                     # code 0 == independent
         self._jobs_log = ChunkedStore("jobs", interners={
             "state": self._state_int, "symptoms": self._sym_int})
         self._faults_log = ChunkedStore("faults", interners={
-            "symptom": self._fsym_int, "co_symptoms": self._cos_int})
+            "symptom": self._fsym_int, "co_symptoms": self._cos_int,
+            "domain": self._dom_int})
         self._records_view: list[JobRecord] = []
         self._faults_view: list[Fault] = []
         self.drain_log: list[tuple] = []
@@ -326,9 +378,12 @@ class ClusterSim:
         if len(lst) < log.rows:
             syms = self._fsym_int.raw
             cos = self._cos_int.raw
+            doms = self._dom_int.raw
             append = lst.append
-            for (t, nid, sc, cc, tr, det, rep) in log.iter_rows(len(lst)):
-                append(Fault(t, nid, syms[sc], cos[cc], tr, det, rep))
+            for (t, nid, sc, cc, tr, det, rep, dm, fid,
+                 dt) in log.iter_rows(len(lst)):
+                append(Fault(t, nid, syms[sc], cos[cc], tr, det, rep,
+                             doms[dm], fid, dt))
         return lst
 
     # derived read-only views of the merged status array (policies and
@@ -599,52 +654,102 @@ class ClusterSim:
         if self.policy is not None:
             self.policy.on_node_drain(self, t0, node_id, reason)
 
-    def _handle_fault(self, t: float, fault: Fault) -> None:
-        node_id = fault.node_id
+    def _log_fault(self, fault: Fault) -> None:
         cos = fault.co_symptoms
         self._faults_log.append((
-            fault.t, node_id, self._fsym_int.code(fault.symptom),
+            fault.t, fault.node_id, self._fsym_int.code(fault.symptom),
             self._cos_int.code(cos, "|".join(cos)) if cos else 0,
-            fault.transient, fault.detectable_by_check, fault.repair_s))
+            fault.transient, fault.detectable_by_check, fault.repair_s,
+            self._dom_int.code(fault.domain) if fault.domain else 0,
+            fault.fault_id, fault.detected_t))
+
+    def _fault_detected(self, t: float, fault: Fault) -> None:
+        """The detection pipeline surfaced ``fault`` at ``t`` — the point
+        where a real operator (and a reactive policy) first *sees* it."""
+        if self.policy is not None:
+            self.policy.on_fault_detected(self, t, fault)
+
+    def _handle_fault(self, t: float, fault: Fault) -> None:
+        """Handle one independent per-node fault.  Only called for
+        in-service nodes (the main loop retires chain firings on DOWN
+        nodes); the detection stage is resolved *before* logging so the
+        fault row carries its ``detected_t``.
+
+        Legacy (``stages is None``) detection semantics: a high-severity
+        detectable fault is caught by the next health-check pass
+        (uniform within the 5-min cadence), a low-severity one is
+        detected instantly and drains after running jobs complete, an
+        undetected fault surfaces through the NODE_FAIL heartbeat
+        (exponential gap).  With a ``StageDelays``, per-symptom detect
+        delays replace the check cadence and a diagnose delay folds into
+        the repair time."""
+        node_id = fault.node_id
+        fault.fault_id = next(self._fault_ids)
+        stages = self._stages
+        sev = TAXONOMY[fault.symptom].severity
+        low_sev_now = False
+        kill = None
+        if fault.detectable_by_check and sev == "high":
+            # health check catches it; the kill + drain happen at
+            # detection time (deferred event for causality)
+            if stages is None:
+                delay = float(self.rng.uniform(0, CHECK_PERIOD_S))
+            else:
+                delay = stages.sample_detect(self.rng, fault.symptom)
+            fault.detected_t = t + delay
+            kill = (node_id, fault, _NODE_FAIL, True,
+                    f"check:{fault.symptom}")
+        elif fault.detectable_by_check:
+            # low severity: drain after running jobs complete, starting
+            # when the detection pipeline surfaces the fault
+            if stages is None:
+                fault.detected_t = t
+                low_sev_now = True
+            else:
+                fault.detected_t = t + stages.sample_detect(
+                    self.rng, fault.symptom)
+                low_sev_now = fault.detected_t <= t
+        else:
+            # undetected: the job crashes; NODE_FAIL heartbeat catch-all
+            mean = 600.0 if stages is None else stages.heartbeat_mean_s
+            delay = float(self.rng.exponential(mean))
+            hw_attr = self.rng.random() < 0.5  # a check fires in the window
+            fault.detected_t = t + delay
+            kill = (node_id, fault, _FAILED if hw_attr else _NODE_FAIL,
+                    hw_attr, "node_fail_heartbeat")
+        if stages is not None:
+            fault.repair_s += stages.sample_diagnose(self.rng)
+        self._log_fault(fault)
         h = self.histories[node_id]
         if fault.symptom.startswith("gpu"):
             h.xid_cnt += 1
         if not fault.transient:
             h.tickets += 1
-        # next fault on this node (dedicated chain heap, not the event heap)
-        if node_id not in self.removed_lemons:
-            heapq.heappush(self._fault_heap,
-                           (self.faults.next_fault_time(node_id, t), node_id))
-        if self._node_state[node_id] == N_DOWN:
-            return
-
-        sev = TAXONOMY[fault.symptom].severity
-        has_victims = bool(self.node_jobs[node_id])
-        if fault.detectable_by_check and sev == "high":
-            # health check catches it within the 5-min cadence; the kill +
-            # drain happen at detection time (deferred event for causality)
-            delay = float(self.rng.uniform(0, CHECK_PERIOD_S))
-            self._push(t + delay, K_KILL, (
-                node_id, fault, _NODE_FAIL, True, f"check:{fault.symptom}"))
-        elif fault.detectable_by_check:
-            # low severity: drain after running jobs complete
-            if has_victims:
+        # next fault on this node: same chain generation, dedicated heap
+        # (exactly one live entry per in-service node — the chain retires
+        # at drain and a fresh generation arms at repair/release)
+        heapq.heappush(self._fault_heap,
+                       (self.faults.next_fault_time(node_id, t), node_id,
+                        self._chain_gen[node_id]))
+        if kill is not None:
+            self._push(fault.detected_t, K_KILL, kill)
+        elif low_sev_now:
+            self._fault_detected(fault.detected_t, fault)
+            if self.node_jobs[node_id]:
                 self._node_state[node_id] = N_DRAINING
                 self._reindex(node_id)
             else:
-                self._drain_now(node_id, fault, reason=f"check:{fault.symptom}")
+                self._drain_now(node_id, fault,
+                                reason=f"check:{fault.symptom}")
         else:
-            # undetected: the job crashes; NODE_FAIL heartbeat catch-all
-            delay = float(self.rng.exponential(600.0))
-            hw_attr = self.rng.random() < 0.5  # a check fires in the window
-            self._push(t + delay, K_KILL, (
-                node_id, fault, _FAILED if hw_attr else _NODE_FAIL,
-                hw_attr, "node_fail_heartbeat"))
+            # staged low severity: the drain decision waits for detection
+            self._push(fault.detected_t, K_DETECT, fault)
 
     def _handle_kill(self, t: float, payload: tuple) -> None:
         node_id, fault, state, hw, reason = payload
         if self._node_state[node_id] == N_DOWN:
             return
+        self._fault_detected(t, fault)
         for j in list(self.node_jobs[node_id]):
             r = self.running.get(j)
             if r is not None:
@@ -652,8 +757,81 @@ class ClusterSim:
                                 symptoms=(fault.symptom, *fault.co_symptoms))
         fault2 = Fault(t, node_id, fault.symptom, fault.co_symptoms,
                        fault.transient, fault.detectable_by_check,
-                       fault.repair_s)
+                       fault.repair_s, fault.domain, fault.fault_id,
+                       fault.detected_t)
         self._drain_now(node_id, fault2, reason=reason)
+
+    def _handle_detect(self, t: float, fault: Fault) -> None:
+        """Staged low-severity detection landed: surface the fault to
+        policies and start the drain (the node may have gone DOWN to a
+        harder failure while the detection was pending — then the stale
+        detection is moot)."""
+        node_id = fault.node_id
+        if self._node_state[node_id] == N_DOWN:
+            return
+        self._fault_detected(t, fault)
+        if self.node_jobs[node_id]:
+            self._node_state[node_id] = N_DRAINING
+            self._reindex(node_id)
+        else:
+            # re-stamp at detection time: the repair clock must start at
+            # t, not at the (past) injection time
+            fault2 = Fault(t, node_id, fault.symptom, fault.co_symptoms,
+                           fault.transient, fault.detectable_by_check,
+                           fault.repair_s, fault.domain, fault.fault_id,
+                           fault.detected_t)
+            self._drain_now(node_id, fault2, reason=f"check:{fault.symptom}")
+
+    def _handle_domain_fault(self, t: float, spec_idx: int) -> None:
+        """One correlated domain-level event: a sampled blast radius of
+        one rack/fabric/power group drains *simultaneously* under one
+        shared fault id and repair time (domain outages are self-evident
+        — ``detected_t == t``).  Already-DOWN members are skipped (their
+        capacity is already out)."""
+        proc = self._domain_proc
+        spec = proc.specs[spec_idx]
+        gid, blast, transient, repair_s = proc.sample_event(spec_idx)
+        fid = next(self._fault_ids)
+        label = proc.domains.label(spec.kind, gid)
+        reason = f"domain:{label}"
+        policy = self.policy
+        histories = self.histories
+        running = self.running
+        for node_id in blast.tolist():
+            if self._node_state[node_id] == N_DOWN:
+                continue
+            fault = Fault(t, node_id, spec.symptom, (), transient, True,
+                          repair_s, label, fid, t)
+            self._log_fault(fault)
+            h = histories[node_id]
+            if spec.symptom.startswith("gpu"):
+                h.xid_cnt += 1
+            if not transient:
+                h.tickets += 1
+            if policy is not None:
+                policy.on_fault(self, t, fault)
+            self._fault_detected(t, fault)
+            for j in list(self.node_jobs[node_id]):
+                r = running.get(j)
+                if r is not None:
+                    self._interrupt(r, t, _NODE_FAIL, hw=True,
+                                    symptoms=(spec.symptom,))
+            self._drain_now(node_id, fault, reason=reason)
+        # re-arm this mode's cluster-wide Poisson clock
+        self._push(proc.next_event_time(spec_idx, t), K_DOMFAULT, spec_idx)
+
+    def _live_chain_counts(self) -> list[int]:
+        """Live (current-generation) fault-chain heap entries per node —
+        the conservation invariant behind the repair-path chain-leak
+        fix: exactly one for every in-service node, at most one for a
+        DOWN node (a pending entry retires lazily on pop).  Debug/test
+        helper; O(heap)."""
+        counts = [0] * self.spec.n_nodes
+        gens = self._chain_gen
+        for _, node_id, gen in self._fault_heap:
+            if gen == gens[node_id]:
+                counts[node_id] += 1
+        return counts
 
     # -- scheduling pass ---------------------------------------------------
     def _try_preempt(self, t: float, run: RunState) -> tuple[bool, int]:
@@ -875,11 +1053,13 @@ class ClusterSim:
         return True
 
     def release_node(self, t: float, node_id: int) -> bool:
-        """Return a held node to scheduling.  Unlike the repair path this
-        pushes no new fault event: the node's fault chain stays live while
-        held (``_handle_fault`` re-pushes the next fault regardless of
-        service state), so a hold/release cycle leaves the fault process
-        untouched instead of compounding per-node fault streams."""
+        """Return a held node to scheduling.  The hold may have retired
+        the node's fault chain (an entry firing while the node is DOWN
+        is discarded), so release bumps the chain generation and arms a
+        fresh chain — inter-fault times are memoryless exponentials, so
+        re-arming at release is statistically identical to the chain
+        having stayed live, while preserving the exactly-one-live-chain
+        invariant (no compounding across hold/release cycles)."""
         if self._node_state[node_id] != N_DOWN:
             return False
         if node_id in self.removed_lemons:
@@ -887,6 +1067,10 @@ class ClusterSim:
         self._node_state[node_id] = N_ACTIVE
         self._reindex(node_id)
         self._arm_sched(t)
+        self._chain_gen[node_id] += 1
+        heapq.heappush(self._fault_heap,
+                       (self.faults.next_fault_time(node_id, t), node_id,
+                        self._chain_gen[node_id]))
         if self.recorder is not None:
             self.recorder.on_node_event(t, node_id, "release")
         return True
@@ -920,8 +1104,15 @@ class ClusterSim:
         self._node_state[node_id] = N_ACTIVE
         self._reindex(node_id)
         self._arm_sched(t)
+        # retire whatever chain entry the downtime left behind (the old
+        # generation goes stale) and arm a fresh chain — the repair-path
+        # chain-leak fix: repairs previously stacked a new chain on top
+        # of the still-live old one, compounding the node's fault rate
+        # with every drain/repair cycle
+        self._chain_gen[node_id] += 1
         heapq.heappush(self._fault_heap,
-                       (self.faults.next_fault_time(node_id, t), node_id))
+                       (self.faults.next_fault_time(node_id, t), node_id,
+                        self._chain_gen[node_id]))
         if self.recorder is not None:
             self.recorder.on_node_event(t, node_id, "repair")
 
@@ -997,11 +1188,15 @@ class ClusterSim:
 
         # batched fault delivery: the initial per-node chain is one
         # vectorized draw (same RNG stream as n scalar calls) heapified
-        # into the dedicated fault stream
+        # into the dedicated fault stream (generation 0)
         first = self.faults.next_fault_times(0.0).tolist()
-        fheap = [(first[i], i) for i in range(self.spec.n_nodes)]
+        fheap = [(first[i], i, 0) for i in range(self.spec.n_nodes)]
         heapq.heapify(fheap)
         self._fault_heap = fheap
+        if self._domain_proc is not None:
+            for k in range(len(self._domain_proc.specs)):
+                self._push(self._domain_proc.next_event_time(k, 0.0),
+                           K_DOMFAULT, k)
         if self.enable_lemon:
             t = self.lemon_scan_period_s
             while t < self.horizon_s:
@@ -1015,7 +1210,7 @@ class ClusterSim:
         running = self.running
         policy = self.policy
         node_state = self._node_state
-        removed = self.removed_lemons
+        chain_gen = self._chain_gen
         sample_fault = self.faults.sample_fault
         heappop = heapq.heappop
         state_of = _STATE_OF
@@ -1060,13 +1255,20 @@ class ClusterSim:
             if t_min > horizon:   # also covers both-heaps-empty (inf)
                 break
             if t_f < t_ev:
-                t, node_id = heappop(fheap)
+                t, node_id, gen = heappop(fheap)
+                if gen != chain_gen[node_id]:
+                    continue   # stale entry: chain re-armed at repair
                 self._now = t
-                if node_state[node_id] != N_DOWN or node_id not in removed:
-                    fault = sample_fault(node_id, t)
-                    self._handle_fault(t, fault)
-                    if policy is not None:
-                        policy.on_fault(self, t, fault)
+                if node_state[node_id] == N_DOWN:
+                    # retire the chain: the node is out of service; the
+                    # repair path arms a fresh generation (the v1 engine
+                    # kept sampling faults here AND armed a fresh chain
+                    # on repair — the compounding chain leak)
+                    continue
+                fault = sample_fault(node_id, t)
+                self._handle_fault(t, fault)
+                if policy is not None:
+                    policy.on_fault(self, t, fault)
                 continue
             # batch-drain the event heap: keep popping while the event
             # head stays ahead of the fault head (ties -> event) and the
@@ -1145,6 +1347,10 @@ class ClusterSim:
                     break   # pushed a fault chain: fault head changed
                 elif kind == K_KILL:
                     self._handle_kill(t, payload)
+                elif kind == K_DETECT:
+                    self._handle_detect(t, payload)
+                elif kind == K_DOMFAULT:
+                    self._handle_domain_fault(t, payload)
                 elif kind == K_LEMON:
                     self._lemon_scan(t)
                 elif kind == K_POLICY:

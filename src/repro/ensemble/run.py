@@ -51,10 +51,11 @@ MODEL_PAD_HI = 0.10
 
 def run_ensemble(gpus_list, seeds, *, horizon_days: float = 8.0,
                  r_f: float = 6.5e-3, min_hours: float = 12.0,
-                 procs: int = 0, on_result=None) -> EnsembleAggregator:
+                 procs: int = 0, on_result=None,
+                 scenario: str = None) -> EnsembleAggregator:
     """Run the grid and fold the streaming results into an aggregator."""
     cells = grid(gpus_list, seeds, horizon_days=horizon_days, r_f=r_f,
-                 min_hours=min_hours)
+                 min_hours=min_hours, scenario=scenario)
     agg = EnsembleAggregator()
 
     def _fold(i, stats):
@@ -78,10 +79,20 @@ def main(argv=None) -> int:
     ap.add_argument("--min-hours", type=float, default=12.0,
                     help="min total runtime for an ETTR-qualifying run")
     ap.add_argument("--procs", type=int, default=default_procs())
+    ap.add_argument("--scenario", default=None,
+                    help="fault-model v2 scenario pack (see "
+                         "repro.configs.scenarios; default: exact-legacy "
+                         "independent-v1)")
     ap.add_argument("--json", default=None)
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-cell streaming progress lines")
     args = ap.parse_args(argv)
+    if args.scenario is not None:
+        from repro.configs.scenarios import get_scenario
+        try:
+            get_scenario(args.scenario)   # fail fast on a bad name
+        except KeyError as e:
+            ap.error(e.args[0])
 
     gpus_list = [int(g) for g in args.gpus.split(",")]
     if len(set(gpus_list)) != len(gpus_list):
@@ -98,7 +109,8 @@ def main(argv=None) -> int:
     t0 = time.time()
     agg = run_ensemble(gpus_list, seeds, horizon_days=args.days,
                        r_f=args.r_f, min_hours=args.min_hours,
-                       procs=args.procs, on_result=progress)
+                       procs=args.procs, on_result=progress,
+                       scenario=args.scenario)
     wall = time.time() - t0
 
     print()

@@ -179,6 +179,7 @@ class ReplayCell:
     r_f: float = 6.5e-3
     min_hours: float = 12.0
     min_gpus: Optional[int] = None   # None -> default_min_gpus(n_gpus)
+    scenario: Optional[str] = None   # fault-model v2 pack name
 
 
 @dataclass
@@ -217,7 +218,7 @@ def run_replay_cell(cell: ReplayCell) -> CellStats:
     recorder = TraceRecorder()
     t0 = time.time()
     sim = ClusterSim(spec, horizon_days=cell.horizon_days, seed=cell.seed,
-                     recorder=recorder)
+                     recorder=recorder, scenario=cell.scenario)
     sim.run()
     trace = recorder.finalize(sim)
     stats = score_cell(sim, trace, policy=None, min_gpus=cell.min_gpus,
@@ -229,10 +230,11 @@ def run_replay_cell(cell: ReplayCell) -> CellStats:
 
 def grid(gpus_list: Sequence[int], seeds: Sequence[int], *,
          horizon_days: float = 8.0, r_f: float = 6.5e-3,
-         min_hours: float = 12.0) -> list[ReplayCell]:
+         min_hours: float = 12.0,
+         scenario: Optional[str] = None) -> list[ReplayCell]:
     """The seed x scale grid, scale-major (matches aggregation order)."""
     return [ReplayCell(n_gpus=g, seed=s, horizon_days=horizon_days,
-                       r_f=r_f, min_hours=min_hours)
+                       r_f=r_f, min_hours=min_hours, scenario=scenario)
             for g in gpus_list for s in seeds]
 
 

@@ -193,7 +193,10 @@ class HealthGatedReturnPolicy(MitigationPolicy):
         self._consecutive: dict[int, int] = {}
         self.gate_log: list[tuple] = []           # (t, node_id, symptom)
 
-    def on_fault(self, sim, t, fault) -> None:
+    def on_fault_detected(self, sim, t, fault) -> None:
+        # react to *detected* faults (fault-model v2): the gate sees what
+        # an operator sees — under a slow-detection scenario the window
+        # fills later than the oracle fault stream would fill it
         d = self._recent.setdefault(fault.node_id, deque())
         d.append((t, fault.symptom))
         while d and d[0][0] < t - self.window_s:
@@ -291,7 +294,9 @@ class PreemptiveRestartPolicy(MitigationPolicy):
         self._duration: dict[int, float] = {}
         self.restarts: list[tuple] = []   # (t, node_id, repair_s)
 
-    def on_fault(self, sim, t, fault) -> None:
+    def on_fault_detected(self, sim, t, fault) -> None:
+        # degraded-node signals accrue at detection time (fault-model
+        # v2): a restart decision can only use faults already surfaced
         node_id = fault.node_id
         d = self._recent.setdefault(node_id, deque())
         d.append(t)

@@ -15,6 +15,17 @@ Hook contract (all optional; the scheduler calls them at fixed points):
   ``on_fault(sim, t, fault)``
       after every hardware fault has been processed by the engine (the
       fault is in ``sim.fault_log``; kills/drains it caused are underway).
+      This is the *oracle* view — the fault exists the instant the
+      hardware breaks.  Policies modeling a real operator's information
+      set should use ``on_fault_detected`` instead.
+  ``on_fault_detected(sim, t, fault)``
+      when the detection pipeline *surfaces* the fault (fault-model v2):
+      ``t == fault.detected_t`` — instantly for legacy low-severity
+      faults, at the health-check / heartbeat kill for high-severity and
+      undetected ones, after the sampled per-symptom detect delay under
+      a staged scenario, and at the event time for correlated domain
+      blasts.  A fault superseded by a harder failure on the same node
+      (already DOWN at detection) never surfaces.
   ``on_node_drain(sim, t, node_id, reason)``
       after a node leaves service (drain logged, repair scheduled).
   ``on_node_repair(sim, t, node_id)``
@@ -67,6 +78,9 @@ class MitigationPolicy:
         pass
 
     def on_fault(self, sim, t: float, fault) -> None:
+        pass
+
+    def on_fault_detected(self, sim, t: float, fault) -> None:
         pass
 
     def on_node_drain(self, sim, t: float, node_id: int,

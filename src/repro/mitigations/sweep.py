@@ -74,7 +74,8 @@ class CellResult:
 def run_cell(policy_name: str, n_gpus: int, seed: int, *,
              horizon_days: float = 8.0, min_gpus: Optional[int] = None,
              min_hours: float = 12.0, policy_kwargs: Optional[dict] = None,
-             trace_dir: Optional[str] = None) -> CellResult:
+             trace_dir: Optional[str] = None,
+             scenario: Optional[str] = None) -> CellResult:
     """One grid cell: replay with the policy attached, record the trace,
     and score every metric from it through the shared ensemble scorer
     (optionally archiving the trace as npz under ``trace_dir``)."""
@@ -84,7 +85,7 @@ def run_cell(policy_name: str, n_gpus: int, seed: int, *,
     recorder = TraceRecorder()
     t0 = time.time()
     sim = ClusterSim(spec, horizon_days=horizon_days, seed=seed,
-                     policy=policy, recorder=recorder)
+                     policy=policy, recorder=recorder, scenario=scenario)
     sim.run()
     trace = recorder.finalize(sim)
     wall = time.time() - t0
@@ -209,12 +210,14 @@ def sweep(policies: Sequence[str] = DEFAULT_POLICIES,
           min_gpus: Optional[int] = None, min_hours: float = 12.0,
           procs: int = 0,
           policy_kwargs: Optional[dict[str, dict]] = None,
-          trace_dir: Optional[str] = None) -> SweepResult:
+          trace_dir: Optional[str] = None,
+          scenario: Optional[str] = None) -> SweepResult:
     """Run the policy x scale x seed grid on the shared ensemble executor
     (``procs`` > 1 fans cells out over its spawn pool; 0/1 runs serially
-    in-process).  ``trace_dir`` archives each cell's trace as npz."""
+    in-process).  ``trace_dir`` archives each cell's trace as npz;
+    ``scenario`` names a fault-model v2 pack applied to every cell."""
     kw = dict(horizon_days=horizon_days, min_gpus=min_gpus,
-              min_hours=min_hours, trace_dir=trace_dir)
+              min_hours=min_hours, trace_dir=trace_dir, scenario=scenario)
     tasks = [(p, g, s, {**kw, "policy_kwargs":
                         (policy_kwargs or {}).get(p)})
              for p in policies for g in gpus_list for s in seeds]
@@ -237,17 +240,27 @@ def main() -> None:
     ap.add_argument("--min-hours", type=float, default=12.0,
                     help="min total runtime for an ETTR-qualifying run")
     ap.add_argument("--procs", type=int, default=min(os.cpu_count() or 1, 6))
+    ap.add_argument("--scenario", default=None,
+                    help="fault-model v2 scenario pack (see "
+                         "repro.configs.scenarios; default: exact-legacy "
+                         "independent-v1)")
     ap.add_argument("--json", default=None)
     ap.add_argument("--save-traces", default=None, metavar="DIR",
                     help="archive each cell's trace as npz under DIR "
                          "(re-analyzable with python -m repro.trace.report)")
     args = ap.parse_args()
+    if args.scenario is not None:
+        from repro.configs.scenarios import get_scenario
+        try:
+            get_scenario(args.scenario)   # fail fast on a bad name
+        except KeyError as e:
+            ap.error(e.args[0])
 
     res = sweep(policies=args.policies.split(","),
                 gpus_list=[int(g) for g in args.gpus.split(",")],
                 seeds=range(args.seeds), horizon_days=args.days,
                 min_hours=args.min_hours, procs=args.procs,
-                trace_dir=args.save_traces)
+                trace_dir=args.save_traces, scenario=args.scenario)
     print(res.table())
     if args.save_traces:
         print(f"per-cell traces saved under {args.save_traces}/")

@@ -29,7 +29,8 @@ from typing import Iterator, Mapping
 
 import numpy as np
 
-from repro.trace.schema import TABLES, Trace, table_from_columns
+from repro.trace.schema import (OPTIONAL_COLUMNS, TABLES, Trace,
+                                default_column, table_from_columns)
 
 _META_KEY = "__meta__"
 
@@ -88,7 +89,16 @@ class SpillTable(Mapping):
                 parts = []
                 for path in self.parts:
                     with np.load(path, allow_pickle=False) as z:
-                        parts.append(z[col])
+                        if col in z.files:
+                            parts.append(z[col])
+                        elif (self.table, col) in OPTIONAL_COLUMNS:
+                            # v1 spill part: synthesize the default fill,
+                            # sized off the table's lead column
+                            n = len(z[self._columns[0]])
+                            parts.append(default_column(self.table, col, n))
+                        else:
+                            raise KeyError(
+                                f"spill part {path!r} missing column {col!r}")
                 arr = parts[0] if len(parts) == 1 else np.concatenate(parts)
             self._cache[col] = arr
         return arr
@@ -142,15 +152,24 @@ def save_npz(trace: Trace, path: str) -> None:
     for name, cols in TABLES.items():
         tbl = trace.tables[name]
         for col, _ in cols:
-            payload[f"{name}.{col}"] = tbl[col]
+            if col in tbl:   # optional v2 columns may be absent (v1 trace)
+                payload[f"{name}.{col}"] = tbl[col]
     np.savez_compressed(path, **payload)
 
 
 def load_npz(path: str) -> Trace:
     with np.load(path, allow_pickle=False) as z:
         meta = json.loads(str(z[_META_KEY][()]))
-        tables = {name: {col: z[f"{name}.{col}"] for col, _ in cols}
-                  for name, cols in TABLES.items()}
+        tables = {}
+        for name, cols in TABLES.items():
+            tbl = {}
+            for col, _ in cols:
+                key = f"{name}.{col}"
+                if key in z.files:
+                    tbl[col] = z[key]
+                elif (name, col) not in OPTIONAL_COLUMNS:
+                    raise KeyError(f"{path!r} missing column {key!r}")
+            tables[name] = tbl
     return Trace(meta, tables).validate()
 
 
@@ -163,8 +182,9 @@ def save_jsonl(trace: Trace, path: str) -> None:
         f.write(json.dumps({"meta": trace.meta}) + "\n")
         for name, cols in TABLES.items():
             tbl = trace.tables[name]
-            casts = [(col, _PY_CAST[kind]) for col, kind in cols]
-            lists = [tbl[col].tolist() for col, _ in cols]
+            present = [(col, kind) for col, kind in cols if col in tbl]
+            casts = [(col, _PY_CAST[kind]) for col, kind in present]
+            lists = [tbl[col].tolist() for col, _ in present]
             for row in zip(*lists):
                 obj = {"table": name}
                 for (col, cast), v in zip(casts, row):
@@ -185,9 +205,17 @@ def load_jsonl(path: str) -> Trace:
             if meta is None:
                 meta = obj["meta"]
                 continue
-            tbl = columns[obj["table"]]
+            name = obj["table"]
+            tbl = columns[name]
             for col in tbl:
-                tbl[col].append(obj[col])
+                if col in obj:
+                    tbl[col].append(obj[col])
+                elif (name, col) in OPTIONAL_COLUMNS:
+                    # v1 row: fill the default so columns stay rectangular
+                    tbl[col].append(OPTIONAL_COLUMNS[(name, col)])
+                else:
+                    raise KeyError(
+                        f"{path!r}: row missing column {col!r} in {name!r}")
     if meta is None:
         raise ValueError(f"{path!r}: empty jsonl trace (no meta line)")
     tables = {name: table_from_columns(name, cols)

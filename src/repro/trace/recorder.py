@@ -62,10 +62,13 @@ class TraceRecorder:
         self._bound = True
         self._sim = sim
         spec = sim.spec
+        scenario = getattr(sim, "scenario", None)
         self.meta.update(
             cluster=spec.name, n_nodes=spec.n_nodes,
             gpus_per_node=spec.gpus_per_node, horizon_s=sim.horizon_s,
-            seed=sim.seed, r_f=spec.r_f)
+            seed=sim.seed, r_f=spec.r_f,
+            scenario=("independent-v1" if scenario is None
+                      else scenario.name))
         if self.trace_spill_dir is not None:
             # constant-RSS mode: chunks stream to part files as they
             # fill, for the engine's job/fault logs too (bind runs

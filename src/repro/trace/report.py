@@ -75,6 +75,13 @@ def compute_report(trace: Trace, *, min_gpus: int = 64,
             for s, r in sorted(rates.items(),
                                key=lambda kv: -kv[1].mean())}
 
+    # Fault-model v2: correlated domains + staged detection (skipped on
+    # v1 traces — the optional fault columns degrade to {} rather than
+    # KeyError)
+    v2 = analysis.domain_detection_summary(trace)
+    if v2:
+        out["fault_model_v2"] = v2
+
     # Figure 6
     mix = analysis.job_size_mix(trace)
     out["fig6_job_size_mix"] = {
@@ -155,6 +162,7 @@ _SECTION_TITLES = {
     "fig4_attribution_per_gpu_h": "Figure 4: attributed failures /GPU-h",
     "fig5_failure_rate_per_1000_node_days":
         "Figure 5: failure-rate timeline (/1000 node-days)",
+    "fault_model_v2": "Fault-model v2: domains + staged detection",
     "fig6_job_size_mix": "Figure 6: job-size mix",
     "fig7_mttf_by_size": "Figure 7: MTTF by job size",
     "fig7_fitted_r_f_per_1000_node_days": "Figure 7: fitted r_f",
@@ -190,6 +198,10 @@ def main(argv=None) -> None:
                     help="--simulate cluster size (nodes)")
     ap.add_argument("--days", type=float, default=6.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", default=None,
+                    help="--simulate fault-model v2 scenario pack (see "
+                         "repro.configs.scenarios; default: exact-legacy "
+                         "independent-v1)")
     ap.add_argument("--min-gpus", type=int, default=64,
                     help="ETTR/MTTF qualifying-run GPU floor")
     ap.add_argument("--min-hours", type=float, default=12.0,
@@ -205,6 +217,8 @@ def main(argv=None) -> None:
 
     if args.simulate and args.trace:
         ap.error("pass a trace path OR --simulate, not both")
+    if args.scenario and not args.simulate:
+        ap.error("--scenario only applies to --simulate")
     if args.save and not args.save.endswith((".npz", ".jsonl")):
         ap.error(f"--save {args.save!r}: use a .npz or .jsonl suffix "
                  "(checked up front so a long run is not wasted)")
@@ -212,11 +226,17 @@ def main(argv=None) -> None:
         from repro.cluster.workload import ClusterSpec
         from repro.trace.recorder import simulate_trace
 
+        if args.scenario is not None:
+            from repro.configs.scenarios import get_scenario
+            try:
+                get_scenario(args.scenario)   # fail fast on a bad name
+            except KeyError as e:
+                ap.error(e.args[0])
         spec = ClusterSpec("RSC-1", n_nodes=args.nodes,
                            jobs_per_day=args.nodes * 3.6,
                            target_utilization=0.83, r_f=6.5e-3)
         _, trace = simulate_trace(spec, horizon_days=args.days,
-                                  seed=args.seed)
+                                  seed=args.seed, scenario=args.scenario)
     elif args.trace:
         trace = load_any(args.trace, args.format)
     else:

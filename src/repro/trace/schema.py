@@ -26,7 +26,9 @@ import numpy as np
 from repro.cluster.failures import Fault
 from repro.core.metrics import JobRecord, JobState
 
-SCHEMA = "repro-trace/v1"
+SCHEMA = "repro-trace/v2"
+SCHEMA_V1 = "repro-trace/v1"
+KNOWN_SCHEMAS = (SCHEMA, SCHEMA_V1)
 
 # jobs.preempted_by sentinel: not a second-order preemption (no instigator)
 NO_JOB = -1
@@ -43,11 +45,15 @@ TABLES: dict[str, tuple[tuple[str, str], ...]] = {
         ("state", "str"), ("priority", "i8"), ("hw_attributed", "bool"),
         ("symptoms", "str"), ("preempted_by", "i8"),
     ),
-    # one row per hardware fault event (Table I taxonomy labels)
+    # one row per hardware fault event (Table I taxonomy labels); the
+    # trailing three columns are fault-model v2 additions (correlated
+    # domain label, blast-grouping fault id, detection timestamp) —
+    # optional on v1 traces, see OPTIONAL_COLUMNS
     "faults": (
         ("t", "f8"), ("node_id", "i8"), ("symptom", "str"),
         ("co_symptoms", "str"), ("transient", "bool"),
         ("detectable", "bool"), ("repair_s", "f8"),
+        ("domain", "str"), ("fault_id", "i8"), ("detected_t", "f8"),
     ),
     # node state transitions: drain / repair / hold / release / evict
     "node_events": (
@@ -67,7 +73,29 @@ TABLES: dict[str, tuple[tuple[str, str], ...]] = {
 
 NODE_EVENTS = ("drain", "repair", "hold", "release", "evict")
 
+# Columns added by schema v2 and therefore absent from v1 traces, with
+# the default cell value analyses assume when the column is missing.
+# Loaders, validate() and the materializers treat these as optional so a
+# v1 npz/jsonl/spill trace keeps loading (schema-version check, not
+# KeyError).
+OPTIONAL_COLUMNS: dict[tuple[str, str], object] = {
+    ("faults", "domain"): "",
+    ("faults", "fault_id"): -1,
+    ("faults", "detected_t"): -1.0,
+}
+
 _NP_DTYPE = {"f8": np.float64, "i8": np.int64, "bool": np.bool_}
+
+
+def default_column(table: str, col: str, n: int) -> np.ndarray:
+    """Default-filled array for an optional column missing from a v1
+    trace (``n`` rows)."""
+    kind = dict(TABLES[table])[col]
+    value = OPTIONAL_COLUMNS[(table, col)]
+    if kind == "str":
+        return (np.full(n, value, dtype=np.str_) if n
+                else np.empty(0, dtype="<U1"))
+    return np.full(n, value, dtype=_NP_DTYPE[kind])
 
 
 def _column(kind: str, values) -> np.ndarray:
@@ -118,14 +146,32 @@ class Trace:
 
     def __eq__(self, other) -> bool:
         """Value equality over meta + every table column (the generated
-        dataclass __eq__ would raise on numpy-array truthiness)."""
+        dataclass __eq__ would raise on numpy-array truthiness).
+        Optional v2 columns missing on either side compare as their
+        default fill, so a v1 trace equals its default-extended self."""
         if not isinstance(other, Trace):
             return NotImplemented
         if self.meta != other.meta:
             return False
         return all(
-            np.array_equal(self.tables[name][col], other.tables[name][col])
+            np.array_equal(self.column(name, col), other.column(name, col))
             for name, cols in TABLES.items() for col, _ in cols)
+
+    def has_column(self, table: str, col: str) -> bool:
+        """True when the column is actually present (v1 traces lack the
+        v2 fault columns — analyses gate their domain/stage sections on
+        this instead of KeyError-ing)."""
+        return col in self.tables[table]
+
+    def column(self, table: str, col: str) -> np.ndarray:
+        """The column array, default-filled when an optional v2 column
+        is absent (v1 trace)."""
+        tbl = self.tables[table]
+        if col in tbl:
+            return tbl[col]
+        if (table, col) in OPTIONAL_COLUMNS:
+            return default_column(table, col, self.n_rows(table))
+        raise KeyError(f"table {table!r} has no column {col!r}")
 
     # -- meta accessors -------------------------------------------------
     @property
@@ -185,11 +231,13 @@ class Trace:
         """Materialize the faults table as ``cluster.failures.Fault``
         (cached, like ``job_records``)."""
         if self._fault_cache is None:
-            t = self.tables["faults"]
-            cols = [t[c].tolist() for c, _ in TABLES["faults"]]
+            cols = [self.column("faults", c).tolist()
+                    for c, _ in TABLES["faults"]]
             self._fault_cache = [
-                Fault(tt, nid, sym, split_multi(cos), tr, det, rep)
-                for tt, nid, sym, cos, tr, det, rep in zip(*cols)]
+                Fault(tt, nid, sym, split_multi(cos), tr, det, rep,
+                      dom, fid, dt)
+                for tt, nid, sym, cos, tr, det, rep, dom, fid, dt
+                in zip(*cols)]
         return self._fault_cache
 
     def job_records_at(self, indices) -> list[JobRecord]:
@@ -208,9 +256,10 @@ class Trace:
 
     # -- hygiene ---------------------------------------------------------
     def validate(self) -> "Trace":
-        """Schema check: every table present with every column, consistent
-        row counts per table, and a known schema version.  (Row order is
-        not constrained — ingested tables may be non-chronological.)"""
+        """Schema check: every table present with every required column,
+        consistent row counts per table, and a known schema version
+        (v1 traces may omit the OPTIONAL_COLUMNS).  (Row order is not
+        constrained — ingested tables may be non-chronological.)"""
         for name, cols in TABLES.items():
             tbl = self.tables.get(name)
             if tbl is None:
@@ -219,6 +268,8 @@ class Trace:
             lens = set()
             for col, _ in cols:
                 if col not in tbl:
+                    if (name, col) in OPTIONAL_COLUMNS:
+                        continue
                     raise ValueError(f"table {name!r} missing column {col!r}")
                 if not lazy:   # spill views are uniform by construction
                     lens.add(len(tbl[col]))
@@ -231,9 +282,9 @@ class Trace:
                 raise ValueError(
                     f"unknown node_events.event values: {sorted(bad)} "
                     f"(vocabulary: {NODE_EVENTS})")
-        if self.meta.get("schema") != SCHEMA:
+        if self.meta.get("schema") not in KNOWN_SCHEMAS:
             raise ValueError(f"unknown trace schema {self.meta.get('schema')!r}"
-                             f" (expected {SCHEMA!r})")
+                             f" (expected one of {KNOWN_SCHEMAS})")
         return self
 
     def summary(self) -> dict:

@@ -1,0 +1,95 @@
+"""Regenerate the bit-identity ``ENGINE_DIGESTS`` block in
+``tests/test_sim_perf.py``.
+
+  PYTHONPATH=src python -m tests.capture_digests [--check]
+
+Runs every config in ``DIGEST_CONFIGS`` through the current engine,
+computes each ``engine_digest``, and rewrites the ``ENGINE_DIGESTS``
+literal in place (``--check`` only reports drift and exits non-zero
+instead of writing — the form a release checklist runs).
+
+Recapturing is the *sanctioned* workflow for an intentional
+behavior change to the engine's event/RNG sequence (e.g. the
+fault-model-v2 repair-path chain-leak fix); it is never the fix for an
+unintentional digest trip — that is a regression the digests exist to
+catch.  The diff this tool produces is reviewable evidence that a
+behavior change was deliberate: five hex constants change and nothing
+else.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+TARGET = os.path.join(HERE, "test_sim_perf.py")
+
+_BLOCK_RE = re.compile(
+    r"ENGINE_DIGESTS = \{\n(?:.*?\n)*?\}\n", re.MULTILINE)
+
+
+def compute_digests() -> dict[str, str]:
+    from tests.test_sim_perf import DIGEST_CONFIGS, engine_digest
+    from repro.cluster.scheduler import ClusterSim
+
+    out = {}
+    for name in sorted(DIGEST_CONFIGS):
+        spec, kw = DIGEST_CONFIGS[name]
+        sim = ClusterSim(spec, **kw)
+        sim.run()
+        out[name] = engine_digest(sim)
+        print(f"  {name:20s} {out[name]}")
+    return out
+
+
+def render_block(digests: dict[str, str]) -> str:
+    lines = ["ENGINE_DIGESTS = {"]
+    for name, hexd in digests.items():
+        lines.append(f'    "{name}":')
+        lines.append(f'        "{hexd}",')
+    lines.append("}")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="recompute and rewrite ENGINE_DIGESTS in "
+                    "tests/test_sim_perf.py")
+    ap.add_argument("--check", action="store_true",
+                    help="report drift without rewriting; exit 1 if the "
+                         "committed digests do not match the engine")
+    args = ap.parse_args(argv)
+
+    print("computing engine digests on the current engine...")
+    digests = compute_digests()
+
+    from tests.test_sim_perf import ENGINE_DIGESTS
+    if digests == dict(ENGINE_DIGESTS):
+        print("ENGINE_DIGESTS already match the current engine; "
+              "nothing to do")
+        return 0
+    if args.check:
+        for name, hexd in digests.items():
+            old = ENGINE_DIGESTS.get(name)
+            if old != hexd:
+                print(f"DRIFT {name}: committed {old} != engine {hexd}")
+        return 1
+
+    with open(TARGET) as f:
+        src = f.read()
+    block = render_block(digests)
+    new_src, n = _BLOCK_RE.subn(block, src, count=1)
+    if n != 1:
+        print(f"could not locate the ENGINE_DIGESTS block in {TARGET}",
+              file=sys.stderr)
+        return 2
+    with open(TARGET, "w") as f:
+        f.write(new_src)
+    print(f"rewrote ENGINE_DIGESTS in {TARGET}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,328 @@
+"""Fault-model v2 gates: the repair-path chain-leak fix, correlated
+failure domains, staged detection, and v1-trace back-compat.
+
+The chain leak: the pre-v2 engine pushed a *fresh* fault chain on every
+node repair while the node's old chain entry stayed live in the heap, so
+each drain/repair cycle compounded the effective per-node fault rate —
+negligible at the paper's r_f (~6.5e-3/node-day over days-long
+horizons), but a ~6x rate inflation at stress-test rates.  The fix
+retires a DOWN node's chain (generation counter) and re-arms exactly one
+fresh chain at return-to-service; these tests pin the conservation
+invariant (exactly one live chain per in-service node) both mid-run and
+post-run, and the realized fault rate at extreme r_f.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster.scheduler import N_DOWN, ClusterSim
+from repro.cluster.workload import ClusterSpec
+from repro.configs.scenarios import get_scenario
+from repro.mitigations.policy import MitigationPolicy
+from tests.test_sim_perf import engine_digest
+
+
+def _spec(n_nodes=64, r_f=6.5e-3, jobs_per_day=None, **kw):
+    return ClusterSpec("RSC-1", n_nodes=n_nodes,
+                       jobs_per_day=jobs_per_day or n_nodes * 4.0,
+                       target_utilization=0.83, r_f=r_f, **kw)
+
+
+# -- repair-path chain leak -------------------------------------------------
+def test_no_chain_compounding_at_extreme_rf():
+    """At r_f = 0.5/node-day over 30 days every node cycles through
+    drain/repair dozens of times; with the leak each cycle stacked one
+    more live chain, inflating the realized rate ~6x.  Post-fix the
+    realized rate stays at-or-below the injected rate (nodes fault only
+    while in service, so repair downtime can only *reduce* it)."""
+    r_f = 0.5
+    days = 30.0
+    sim = ClusterSim(_spec(n_nodes=40, r_f=r_f), horizon_days=days, seed=0)
+    sim.run()
+    realized = len(sim.fault_log) / (sim.spec.n_nodes * days)
+    assert realized <= 1.2 * r_f, (
+        f"fault streams compound across drain/repair cycles: realized "
+        f"{realized:.3f}/node-day vs injected {r_f}")
+    # and the engine still faults at all (the fix must not starve chains)
+    assert realized >= 0.3 * r_f, realized
+
+
+class _InvariantProbe(MitigationPolicy):
+    """Checks the one-live-chain conservation invariant at every fault
+    and repair hook firing (mid-run, while the heap is churning)."""
+
+    name = "invariant_probe"
+
+    def __init__(self):
+        self.checks = 0
+        self.violations = []
+
+    def _check(self, sim, where):
+        counts = sim._live_chain_counts()
+        for node_id, c in enumerate(counts):
+            down = sim._node_state[node_id] == N_DOWN
+            ok = (c <= 1) if down else (c == 1)
+            if not ok:
+                self.violations.append((where, node_id, c, down))
+        self.checks += 1
+
+    def on_fault(self, sim, t, fault):
+        self._check(sim, "fault")
+
+    def on_node_repair(self, sim, t, node_id):
+        self._check(sim, "repair")
+
+
+def test_chain_conservation_invariant():
+    """Exactly one live chain per in-service node, at most one per DOWN
+    node — checked mid-run at every fault/repair and again post-run."""
+    probe = _InvariantProbe()
+    sim = ClusterSim(_spec(n_nodes=48, r_f=0.2), horizon_days=12.0, seed=1,
+                     policy=probe)
+    sim.run()
+    assert probe.checks > 100
+    assert not probe.violations, probe.violations[:5]
+    counts = sim._live_chain_counts()
+    for node_id, c in enumerate(counts):
+        if sim._node_state[node_id] == N_DOWN:
+            assert c <= 1, (node_id, c)
+        else:
+            assert c == 1, (node_id, c)
+
+
+def test_lemon_eviction_chain_conservation():
+    """The eviction path (release/hold, lemon removals) bumps chain
+    generations too — the invariant holds under lemon detection."""
+    spec = _spec(n_nodes=64, r_f=0.05, lemon_fraction=0.05)
+    sim = ClusterSim(spec, horizon_days=21.0, seed=2,
+                     enable_lemon_detection=True)
+    sim.run()
+    assert sim.lemon_removal_log, "config must actually evict lemons"
+    counts = sim._live_chain_counts()
+    for node_id, c in enumerate(counts):
+        if sim._node_state[node_id] == N_DOWN:
+            assert c <= 1, (node_id, c)
+        else:
+            assert c == 1, (node_id, c)
+
+
+# -- scenario packs ---------------------------------------------------------
+def test_independent_v1_is_bit_identical_to_none():
+    """The exact-legacy pack: scenario='independent-v1' replays the same
+    event/RNG sequence as scenario=None, digest-for-digest."""
+    spec = _spec(n_nodes=80, r_f=0.08, jobs_per_day=320.0)
+    a = ClusterSim(spec, horizon_days=6.0, seed=0)
+    a.run()
+    b = ClusterSim(spec, horizon_days=6.0, seed=0,
+                   scenario="independent-v1")
+    b.run()
+    assert engine_digest(a) == engine_digest(b)
+
+
+def test_rack_correlated_simultaneous_drains():
+    """A domain event drains a multi-node blast radius in one shot: the
+    member rows share one fault_id, one timestamp, one domain label, and
+    the drain log shows simultaneous domain-reason drains."""
+    sim = ClusterSim(_spec(n_nodes=128, r_f=6.5e-3), horizon_days=16.0,
+                     seed=3, scenario="rack-correlated")
+    sim.run()
+    dom_faults = [f for f in sim.fault_log if f.domain]
+    assert dom_faults, "16 days at 0.25 rack events/day must fire"
+    by_id = {}
+    for f in dom_faults:
+        by_id.setdefault(f.fault_id, []).append(f)
+    multi = {fid: fs for fid, fs in by_id.items() if len(fs) >= 2}
+    assert multi, "blast radius is always >= 2 nodes"
+    for fid, fs in multi.items():
+        assert len({f.t for f in fs}) == 1, "one event, one timestamp"
+        assert len({f.domain for f in fs}) == 1
+        assert len({f.node_id for f in fs}) == len(fs), "distinct nodes"
+        for f in fs:
+            assert f.detected_t == f.t, "domain outages are self-evident"
+    # the drains land together under the domain reason
+    dom_drains = [(t, n, r) for (t, n, r) in sim.drain_log
+                  if r.startswith("domain:")]
+    assert len(dom_drains) >= 2
+    ts = [t for t, _, _ in dom_drains]
+    assert len(set(ts)) < len(ts), "simultaneous multi-node drains"
+    # ordinary chain faults keep flowing alongside the domain process
+    assert any(not f.domain for f in sim.fault_log)
+
+
+def test_rack_blast_stays_within_one_group():
+    """Every blast radius is a subset of one failure-domain group."""
+    scenario = get_scenario("rack-correlated")
+    sim = ClusterSim(_spec(n_nodes=128, r_f=6.5e-3), horizon_days=16.0,
+                     seed=3, scenario=scenario)
+    sim.run()
+    domains = scenario.domain_map(128)
+    by_id = {}
+    for f in sim.fault_log:
+        if f.domain:
+            by_id.setdefault(f.fault_id, []).append(f)
+    assert by_id
+    for fid, fs in by_id.items():
+        kind, gid = fs[0].domain.split(":")
+        members = set(domains.members(kind, int(gid)).tolist())
+        assert {f.node_id for f in fs} <= members, (fid, fs[0].domain)
+
+
+def test_slow_detection_lags_injection():
+    """Staged detection: every fault's detected_t strictly lags its
+    injection time, with means in the configured tens-of-minutes."""
+    sim = ClusterSim(_spec(n_nodes=64, r_f=0.05), horizon_days=10.0,
+                     seed=4, scenario="slow-detection")
+    sim.run()
+    assert len(sim.fault_log) > 20   # ~r_f * nodes * days = 32 expected
+    lags = np.array([f.detected_t - f.t for f in sim.fault_log])
+    assert (lags > 0).all(), "staged detection can never be instant"
+    assert 120.0 < lags.mean() < 7200.0, lags.mean()
+
+
+def test_slow_detection_diagnose_extends_repair():
+    """The diagnose stage folds into repair time: mean repair under
+    slow-detection exceeds the legacy mean for the same seed/spec."""
+    spec = _spec(n_nodes=64, r_f=0.05)
+    legacy = ClusterSim(spec, horizon_days=10.0, seed=4)
+    legacy.run()
+    staged = ClusterSim(spec, horizon_days=10.0, seed=4,
+                        scenario="slow-detection")
+    staged.run()
+    mean_legacy = np.mean([f.repair_s for f in legacy.fault_log])
+    mean_staged = np.mean([f.repair_s for f in staged.fault_log])
+    assert mean_staged > mean_legacy + 600.0, (mean_legacy, mean_staged)
+
+
+def test_scenario_catalog_and_unknown_name():
+    from repro.configs.scenarios import available_scenarios
+
+    names = available_scenarios()
+    assert {"independent-v1", "rack-correlated", "slow-detection",
+            "lablup-504"} <= set(names)
+    for n in names:
+        s = get_scenario(n)
+        assert s.name == n
+    with pytest.raises(KeyError, match="rack-correlated"):
+        get_scenario("no-such-pack")
+
+
+def test_scenario_lands_in_trace_meta():
+    from repro.trace import TraceRecorder
+
+    rec = TraceRecorder()
+    sim = ClusterSim(_spec(n_nodes=32), horizon_days=2.0, seed=0,
+                     recorder=rec, scenario="rack-correlated")
+    sim.run()
+    trace = rec.finalize(sim)
+    assert trace.meta["scenario"] == "rack-correlated"
+    rec2 = TraceRecorder()
+    sim2 = ClusterSim(_spec(n_nodes=32), horizon_days=2.0, seed=0,
+                      recorder=rec2)
+    sim2.run()
+    assert rec2.finalize(sim2).meta["scenario"] == "independent-v1"
+
+
+# -- on_fault_detected hook -------------------------------------------------
+class _DetectionOrderProbe(MitigationPolicy):
+    name = "detection_order_probe"
+
+    def __init__(self):
+        self.injected = []
+        self.detected = []
+
+    def on_fault(self, sim, t, fault):
+        self.injected.append((fault.fault_id, t))
+
+    def on_fault_detected(self, sim, t, fault):
+        self.detected.append((fault.fault_id, t, fault.detected_t))
+
+
+def test_on_fault_detected_fires_at_detection_time():
+    """The reactive hook fires at detected_t (never before injection),
+    and only for faults that actually surface (a node that went DOWN to
+    a harder fault first swallows the stale detection)."""
+    probe = _DetectionOrderProbe()
+    sim = ClusterSim(_spec(n_nodes=64, r_f=0.05), horizon_days=10.0,
+                     seed=5, scenario="slow-detection", policy=probe)
+    sim.run()
+    assert probe.detected
+    inj_t = dict(probe.injected)
+    for fid, t, detected_t in probe.detected:
+        assert t == detected_t
+        assert t >= inj_t[fid]
+    # detections are a subset of injections (stale ones swallowed)
+    assert {fid for fid, _, _ in probe.detected} <= set(inj_t)
+
+
+# -- v1-trace back-compat ---------------------------------------------------
+def _strip_to_v1(trace):
+    """A copy of ``trace`` as a v1 producer would have written it: no
+    optional fault columns, v1 schema tag."""
+    from repro.trace.schema import SCHEMA_V1, Trace
+
+    tables = {name: dict(cols) for name, cols in trace.tables.items()}
+    for col in ("domain", "fault_id", "detected_t"):
+        tables["faults"].pop(col, None)
+    meta = dict(trace.meta)
+    meta["schema"] = SCHEMA_V1
+    return Trace(meta=meta, tables=tables)
+
+
+@pytest.fixture(scope="module")
+def v2_trace():
+    from repro.trace import TraceRecorder
+
+    rec = TraceRecorder()
+    sim = ClusterSim(_spec(n_nodes=48, r_f=0.05), horizon_days=4.0, seed=6,
+                     recorder=rec)
+    sim.run()
+    return rec.finalize(sim)
+
+
+def test_v1_trace_loads_and_materializes(v2_trace, tmp_path):
+    """A v1 trace (no optional columns) validates, materializes fault
+    records with default-filled v2 fields, and round-trips through
+    npz/jsonl with the defaults re-applied on load."""
+    from repro.trace import io as trace_io
+
+    v1 = _strip_to_v1(v2_trace).validate()
+    assert not v1.has_column("faults", "domain")
+    faults = v1.fault_records()
+    assert len(faults) == v2_trace.n_rows("faults")
+    assert all(f.domain == "" and f.fault_id == -1
+               and f.detected_t == -1.0 for f in faults)
+    for suffix in ("npz", "jsonl"):
+        p = str(tmp_path / f"v1.{suffix}")
+        trace_io.save(v1, p)
+        back = trace_io.load(p)
+        assert back.validate() == v1
+        assert back.column("faults", "fault_id").tolist() == \
+            [-1] * v1.n_rows("faults")
+
+
+def test_v1_trace_report_no_keyerror(v2_trace):
+    """The full §III report and the v2 domain summary degrade gracefully
+    on a v1 trace — schema-version check, not KeyError."""
+    from repro.cluster.analysis import domain_detection_summary
+    from repro.trace.report import compute_report
+
+    v1 = _strip_to_v1(v2_trace)
+    assert domain_detection_summary(v1) == {}
+    report = compute_report(v1, min_gpus=32, min_hours=2.0)
+    assert "fault_model_v2" not in report
+    assert report["summary"]["n_faults"] == v2_trace.n_rows("faults")
+    # the same report on the v2 original never regresses either
+    compute_report(v2_trace, min_gpus=32, min_hours=2.0)
+
+
+def test_v2_trace_domain_summary_populated():
+    from repro.cluster.analysis import domain_detection_summary
+    from repro.trace import TraceRecorder
+
+    rec = TraceRecorder()
+    sim = ClusterSim(_spec(n_nodes=128, r_f=6.5e-3), horizon_days=16.0,
+                     seed=3, recorder=rec, scenario="rack-correlated")
+    sim.run()
+    out = domain_detection_summary(rec.finalize(sim))
+    assert out["domain_events"] >= 1
+    assert out["blast_size_mean"] >= 2.0
+    assert "rack" in out["events_by_kind"] or "power" in out["events_by_kind"]

@@ -11,11 +11,13 @@ Bit-identity: from hot-path v2 onward, every optimization pass must
 preserve the engine's event/RNG sequence *exactly*.  ``ENGINE_DIGESTS``
 pins sha256 digests of the full record/fault/drain/lemon-removal
 sequences (plus a probe draw per RNG stream, which pins stream
-positions) captured on the v2 engine (commit 624ce61) across five
-configs — including lemon eviction and the RSC-1 2000-node scale — and
-the digest must also hold for a spill-enabled recorded run
-(tests below).  Any change to allocation order, RNG consumption, or
-event tie-breaking trips these.
+positions) across five configs — including lemon eviction and the RSC-1
+2000-node scale — and the digest must also hold for a spill-enabled
+recorded run (tests below).  Any change to allocation order, RNG
+consumption, or event tie-breaking trips these.  The committed digests
+were re-captured on the fault-model-v2 engine (repair-path chain-leak
+fix) with ``python -m tests.capture_digests``; an *intentional*
+behavior change regenerates them the same way.
 """
 import hashlib
 import json
@@ -128,7 +130,8 @@ def engine_digest(sim: ClusterSim) -> str:
                  r.symptoms, r.preempted_by)).encode())
     for f in sim.fault_log:
         up(repr((f.t, f.node_id, f.symptom, f.co_symptoms, f.transient,
-                 f.detectable_by_check, f.repair_s)).encode())
+                 f.detectable_by_check, f.repair_s, f.domain, f.fault_id,
+                 f.detected_t)).encode())
     for d in sim.drain_log:
         up(repr(d).encode())
     for led in sim.lemon_removal_log:
@@ -156,19 +159,22 @@ DIGEST_CONFIGS = {
                       dict(horizon_days=4.0, seed=3)),
 }
 
-# captured on the hot-path-v2 engine at commit 624ce61 (PR 4 head) —
-# regenerate ONLY for an intentional behavior change, never for a perf PR
+# captured on the fault-model-v2 engine (repair-path chain-leak fix:
+# a DOWN node's fault chain is retired instead of stacking a fresh one on
+# repair, and fault rows carry domain/fault_id/detected_t) — regenerate
+# ONLY for an intentional behavior change, never for a perf PR, via
+#   PYTHONPATH=src python -m tests.capture_digests
 ENGINE_DIGESTS = {
     "busy_80n_6d":
-        "50f8e7d2b5c7143016033bd08a0bced19bc508fd52259692d38fa230c548f41c",
-    "rsc2ish_250n_6d":
-        "5b2e6d791c079c411be595297cff43246a02790944f66f83f91c7aaaddc7a6a9",
-    "lemon_150n_21d":
-        "05825333385207744d9a6acd7e1b056bd4523fe62f8ea85b4e967243d3556157",
-    "rsc1_2000n_2d":
-        "735cd3d5c9f6d254f9ffa0468f3b0ab5a5bfa86c53eeb651b4c9bbcc2a3221af",
+        "5001fed5f51ea7a0b7db7af978c2c73de1b98b5b23c3a9b7ab1cb596c101da58",
     "hi_rf_120n_4d":
-        "99569866233d6c22042eba8527d02fe1348a07146403df4dfcab0608a42edebd",
+        "09ae7f0c435ce86e97c1e5800858c61e0bdbff761993984a3985ecca198c6c4a",
+    "lemon_150n_21d":
+        "545988f853c9cca954681da75d75f35ddc16072c7745a3e8cc817231b424851b",
+    "rsc1_2000n_2d":
+        "4c61131dd59e6aae0fc5bd6be27622ea17356ef1ea68a2c067543382dce5758e",
+    "rsc2ish_250n_6d":
+        "13a00c73f4047e84ef8c4de6dbab8636023d23b1bcaff9d81754006b4368c28f",
 }
 
 
