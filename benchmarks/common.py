@@ -48,9 +48,11 @@ _REGISTRY: dict[str, callable] = {}
 # regressions without paying full-scale wall time)
 QUICK = False
 
-# set by `benchmarks.run --profile`: benchmarks that support it (sim_bench)
-# run one representative workload under cProfile and print the top
-# cumulative hotspots instead of the full timing grid
+# set by `benchmarks.run --profile`: natively profile-aware benchmarks
+# (registered with native_profile=True, e.g. sim_bench) run one
+# representative workload under cProfile and print the top cumulative
+# hotspots instead of the full timing grid; every other benchmark is
+# wrapped in a generic cProfile pass by benchmarks.run
 PROFILE = False
 
 
@@ -82,7 +84,11 @@ def git_sha() -> str:
         return "?"
 
 
-def benchmark(name: str):
+def benchmark(name: str, *, native_profile: bool = False):
+    """Register a benchmark.  ``native_profile=True`` marks it as
+    handling ``--profile`` itself (reading ``common.PROFILE`` and running
+    its own cProfile pass, like sim_bench); the rest get a generic
+    cProfile wrap from ``benchmarks.run`` when profiled."""
     def deco(fn):
         @functools.wraps(fn)
         def wrapper(*a, **kw):
@@ -91,9 +97,32 @@ def benchmark(name: str):
             fn(rep, *a, **kw)
             rep.wall_s = time.time() - t0
             return rep
+        wrapper.native_profile = native_profile
         _REGISTRY[name] = wrapper
         return wrapper
     return deco
+
+
+def profile_call(name: str, fn):
+    """Generic ``--profile`` path for benchmarks that are not natively
+    profile-aware: run the whole benchmark under cProfile, print the
+    top-20 cumulative hotspots, and stamp the report."""
+    import cProfile
+    import io
+    import pstats
+
+    prof = cProfile.Profile()
+    prof.enable()
+    try:
+        rep = fn()
+    finally:
+        prof.disable()
+    buf = io.StringIO()
+    pstats.Stats(prof, stream=buf).sort_stats("cumulative").print_stats(20)
+    print(buf.getvalue())
+    rep.check("profile mode completed", True,
+              f"top-20 cumulative for {name} (generic cProfile wrap)")
+    return rep
 
 
 def all_benchmarks() -> dict:

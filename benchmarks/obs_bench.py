@@ -1,0 +1,184 @@
+"""Live-telemetry (repro.obs) overhead benchmark.
+
+The MetricsRegistry contract is zero-overhead-when-off and cheap-when-on:
+this benchmark measures an obs-instrumented ``ClusterSim`` run against a
+bare one at the paper's 2000-node scale (quick mode: 200 nodes / 4
+days, the tier-1 CI grid) and checks instrumentation overhead stays
+under 5%.
+
+Measurement (same methodology as trace_bench): overhead is summed from
+its directly-timed components — per-hook cost (microbenchmarked per
+call, times the engine's event counts: job ends, sched passes, faults),
+the engine-side ``perf_counter`` pair that times each sched pass only
+when an obs is attached, the per-snapshot poll cost, and finalize.  On
+a shared CI box, differencing two sub-second end-to-end walls swings
+±15% run-to-run; timing the small components directly is stable at the
+percent level.  The raw instrumented-vs-bare sim delta is still
+reported (informational) alongside the component sum.
+
+  PYTHONPATH=src python -m benchmarks.run --only obs_bench [--quick]
+"""
+import gc
+import time
+
+from benchmarks import common
+from benchmarks.common import benchmark
+
+MAX_OVERHEAD_FRAC = 0.05
+SIM_REPS = 6       # interleaved bare/instrumented sim pairs
+PART_REPS = 5      # snapshot / finalize timing repetitions
+
+
+def _spec(quick: bool):
+    from repro.cluster.workload import ClusterSpec
+
+    if quick:
+        # the tier-1 CI grid: busy enough that hook costs dominate
+        # timing noise, small enough to stay in the pytest budget
+        return ClusterSpec("RSC-1", n_nodes=200, jobs_per_day=800.0,
+                           target_utilization=0.83, r_f=6.5e-3), 4.0
+    # the acceptance scale: RSC-1-sized cluster, saturating workload
+    return ClusterSpec("RSC-1", n_nodes=2000, jobs_per_day=8000.0,
+                       target_utilization=0.83, r_f=6.5e-3), 4.0
+
+
+def _run_sim(spec, days, instrumented: bool):
+    from repro.cluster.scheduler import ClusterSim
+    from repro.obs import MetricsRegistry
+
+    obs = MetricsRegistry() if instrumented else None
+    kw = {"horizon_days": days, "seed": 0}
+    if obs is not None:
+        kw["obs"] = obs
+    t0 = time.perf_counter()
+    sim = ClusterSim(spec, **kw)
+    sim.run()
+    return time.perf_counter() - t0, sim, obs
+
+
+def _timed(fn, reps: int):
+    best = float("inf")
+    out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn()
+        w = time.perf_counter() - t0
+        if w < best:
+            best, out = w, r
+    return best, out
+
+
+def _hook_costs_s() -> tuple:
+    """Marginal per-event cost of the two hot obs hooks plus the
+    engine-side ``perf_counter`` pair.  The pass hook has two paths
+    (engine-sampled wall timing vs not), so its cost is the
+    stride-weighted average of both, and the timer pair amortizes over
+    the stride too."""
+    from repro.cluster.scheduler import OBS_PASS_SAMPLE, JobState
+    from repro.obs import MetricsRegistry
+
+    n = 20000
+    best_job = best_timed = best_untimed = best_timer = float("inf")
+    state = JobState.COMPLETED
+    for _ in range(3):
+        reg = MetricsRegistry()
+        # park both boundaries so the microbench never snapshots
+        reg._next_snap = reg._next_edge = float("inf")
+        hook = reg.on_job_end
+        t0 = time.perf_counter()
+        for i in range(n):
+            hook(30.0 * i, state, 16, 10.0 * i, False)
+        best_job = min(best_job, time.perf_counter() - t0)
+        hook = reg.on_sched_pass
+        t0 = time.perf_counter()
+        for i in range(n):
+            hook(30.0 * i, 5, 1, 0, False, 2e-5)
+        best_timed = min(best_timed, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for i in range(n):
+            hook(30.0 * i, 5, 1, 0, False, -1.0)
+        best_untimed = min(best_untimed, time.perf_counter() - t0)
+        pc = time.perf_counter
+        t0 = pc()
+        for i in range(n):
+            w0 = pc()
+            _ = pc() - w0
+        best_timer = min(best_timer, pc() - t0)
+    stride = OBS_PASS_SAMPLE
+    c_pass = (best_timed + (stride - 1) * best_untimed) / stride / n
+    c_timer = best_timer / stride / n
+    return best_job / n, c_pass, c_timer
+
+
+@benchmark("obs_bench")
+def run(rep):
+    spec, days = _spec(common.QUICK)
+    label = f"{spec.n_nodes}n_{days:g}d"
+
+    _run_sim(spec, days, False)   # warmup: first run pays import costs
+    bare = instrumented = float("inf")
+    sim = reg = None
+    gc.disable()
+    try:
+        for i in range(SIM_REPS):
+            order = (False, True) if i % 2 == 0 else (True, False)
+            for inst in order:
+                w, s, r = _run_sim(spec, days, inst)
+                if inst and w < instrumented:
+                    instrumented, sim, reg = w, s, r
+                elif not inst:
+                    bare = min(bare, w)
+            gc.collect()
+
+        c_job, c_pass, c_timer = _hook_costs_s()
+        # per-snapshot poll cost on the *final* (fullest) sim state
+        n_live_snaps = len(reg.snapshots)
+        t_final = max(sim._now, sim.horizon_s)
+
+        def snap_once():
+            reg.snapshots.clear()
+            return reg._snapshot(t_final)
+
+        c_snap, _ = _timed(snap_once, PART_REPS)
+        fin_s, _ = _timed(lambda: reg.finalize(sim), PART_REPS)
+    finally:
+        gc.enable()
+
+    n_jobs = reg.jobs_total
+    n_passes = reg.sched_passes_total
+    n_faults = reg.faults_total
+    # faults are rare; their hook is conservatively costed like a job's
+    hook_s = (n_jobs * c_job + n_passes * (c_pass + c_timer)
+              + n_faults * c_job)
+    snap_s = n_live_snaps * c_snap
+    overhead = (hook_s + snap_s + fin_s) / bare
+
+    rep.add(f"{label}.bare_run_s", round(bare, 3))
+    rep.add(f"{label}.instrumented_minus_bare_s",
+            round(instrumented - bare, 4),
+            "raw end-to-end delta (noisy on shared CPUs)")
+    rep.add(f"{label}.job_hook_ns", round(c_job * 1e9),
+            f"x {n_jobs} job-attempt ends")
+    rep.add(f"{label}.pass_hook_ns", round((c_pass + c_timer) * 1e9),
+            f"x {n_passes} sched passes (stride-averaged; incl. the "
+            f"amortized engine-side timer pair)")
+    rep.add(f"{label}.snapshot_us", round(c_snap * 1e6, 1),
+            f"x {n_live_snaps} snapshots (O(cluster) polls live here)")
+    rep.add(f"{label}.hook_cost_s", round(hook_s, 5))
+    rep.add(f"{label}.finalize_s", round(fin_s, 5))
+    rep.add(f"{label}.obs_overhead", f"{overhead:+.1%}",
+            "(hooks + snapshots + finalize) / bare run")
+    rep.add(f"{label}.job_attempts", n_jobs)
+    rep.add(f"{label}.sched_passes", n_passes)
+    rep.add(f"{label}.faults", n_faults)
+    rep.add(f"{label}.snapshots", n_live_snaps)
+    rep.check(f"obs overhead < {MAX_OVERHEAD_FRAC:.0%} "
+              f"(hooks + snapshots + finalize vs bare run)",
+              overhead < MAX_OVERHEAD_FRAC, f"{overhead:+.1%}")
+    rep.check("registry job count matches the engine's record count",
+              n_jobs == sim.n_records, f"{n_jobs} vs {sim.n_records}")
+    rep.check("snapshot cadence covered the horizon",
+              n_live_snaps >= int(days * 86400.0
+                                  / reg.snapshot_interval_s),
+              f"{n_live_snaps} snapshots over {days:g} days at "
+              f"{reg.snapshot_interval_s / 3600.0:g}h intervals")

@@ -7,8 +7,11 @@
 ``--json`` writes a machine-readable trajectory point: per-benchmark rows,
 checks, wall-clock, and scale labels plus the git SHA and timestamp of the
 run (see BENCH_sim.json for the committed sim_bench + ensemble_bench
-baseline).  ``--profile`` runs profile-aware benchmarks (sim_bench) under
-cProfile and prints the top cumulative hotspots instead of timings.
+baseline).  ``--profile`` runs the ``--only`` selection under cProfile
+and prints the top cumulative hotspots: natively profile-aware
+benchmarks (sim_bench) swap to a representative single workload, the
+rest get a generic whole-benchmark cProfile wrap.  ``--profile``
+without ``--only`` is an error (it lists the registered benchmarks).
 
 ``--compare BASELINE.json`` is the perf-regression gate: after the run it
 diffs every numeric metric shared with the baseline file (printing
@@ -31,8 +34,9 @@ from benchmarks import (ensemble_bench, fig3_job_status, fig4_attribution,  # no
                         fig5_timeline, fig6_job_mix, fig7_mttf,
                         fig8_goodput_loss, fig9_ettr, fig10_contours,
                         fig11_scale_projection, fig12_adaptive_routing,
-                        fig13_mitigations, kernel_bench, roofline_table,
-                        runtime_ettr, sim_bench, table2_lemon, trace_bench)
+                        fig13_mitigations, kernel_bench, obs_bench,
+                        roofline_table, runtime_ettr, sim_bench,
+                        table2_lemon, trace_bench)
 from benchmarks import common
 from benchmarks.common import all_benchmarks
 
@@ -95,8 +99,9 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="small-scale defaults (CI smoke mode)")
     ap.add_argument("--profile", action="store_true",
-                    help="cProfile mode for profile-aware benchmarks "
-                         "(sim_bench): top-20 cumulative hotspots")
+                    help="cProfile the --only selection: top-20 "
+                         "cumulative hotspots per benchmark (requires "
+                         "--only; any registered benchmark works)")
     ap.add_argument("--compare", default=None, metavar="BASELINE_JSON",
                     help="regression-diff mode: print per-metric deltas "
                          "vs a benchmarks.run --json file and exit "
@@ -105,6 +110,10 @@ def main() -> None:
     common.QUICK = args.quick
     common.PROFILE = args.profile
     only = set(args.only.split(",")) if args.only else None
+    if args.profile and only is None:
+        names = "\n  ".join(sorted(all_benchmarks()))
+        ap.error("--profile needs --only to pick what to profile; "
+                 f"registered benchmarks:\n  {names}")
     if args.compare and only is None:
         # default the run to the baseline's benchmark set
         with open(args.compare) as f:
@@ -124,7 +133,10 @@ def main() -> None:
         if only and name not in only:
             continue
         try:
-            rep = fn()
+            if args.profile and not getattr(fn, "native_profile", False):
+                rep = common.profile_call(name, fn)
+            else:
+                rep = fn()
             rep.print()
             results[name] = {
                 "rows": [[k, str(v), n] for k, v, n in rep.rows],

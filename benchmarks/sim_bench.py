@@ -163,7 +163,7 @@ def _profile(rep, spec, days):
     rep.check("profile mode completed", True, "top-20 cumulative printed")
 
 
-@benchmark("sim_bench")
+@benchmark("sim_bench", native_profile=True)
 def run(rep):
     from repro.cluster.workload import RSC1, RSC2, ClusterSpec
 

@@ -124,6 +124,16 @@ consumes RNG and never pushes events, so a recorded run is bit-for-bit
 identical to an unrecorded one, and ``recorder=None`` costs one ``is not
 None`` check per hook site (zero-overhead-when-off; regression-tested in
 tests/test_trace.py, overhead-benchmarked in benchmarks/trace_bench.py).
+
+Observability hook points (repro.obs): an optional ``obs`` (a
+``MetricsRegistry``) rides the same pure-observer contract — ``bind`` /
+``on_job_end`` (every job-attempt row) / ``on_fault`` (every fault row,
+independent or domain) / ``on_sched_pass`` (with the pass's measured
+wall time — timed only when an obs is attached) / ``on_node_down`` /
+``on_node_up``.  It never consumes RNG and never pushes events, so an
+instrumented run reproduces the committed engine digests bit-for-bit
+(tests/test_obs.py) and ``obs=None`` costs one ``is not None`` check
+per hook site (overhead-benchmarked in benchmarks/obs_bench.py).
 """
 from __future__ import annotations
 
@@ -133,6 +143,7 @@ import itertools
 import math
 from bisect import bisect_left, insort
 from dataclasses import dataclass
+from time import perf_counter
 from typing import Optional
 
 import numpy as np
@@ -158,6 +169,12 @@ MAX_REQUEUES = 50
 POLICY_HOLD = "hold"
 
 _INF = float("inf")
+
+# obs pass-timing sample stride: when an obs registry is attached, only
+# every Nth scheduling pass is bracketed with perf_counter (the registry
+# scales its wall estimates back up; see repro.obs.metrics) — timing
+# every pass would cost more than the passes it measures at small scales
+OBS_PASS_SAMPLE = 4
 
 # int-coded event kinds (heap tuples: (t, seq, kind, payload)); node fault
 # chains do NOT appear here — they live in their own (t, node_id, gen) heap
@@ -216,7 +233,7 @@ class ClusterSim:
                  lemon_scan_period_days: float = 7.0,
                  lemon_detector: Optional[LemonDetector] = None,
                  episodes=(), check_introduced=None, policy=None,
-                 recorder=None, scenario=None):
+                 recorder=None, scenario=None, obs=None):
         self.spec = spec
         # fault-model v2 scenario: a failures.Scenario, a pack name (str,
         # resolved through repro.configs.scenarios), or None == exact-
@@ -240,6 +257,8 @@ class ClusterSim:
         self.policy = policy
         # optional repro.trace.TraceRecorder (duck-typed, same reasoning)
         self.recorder = recorder
+        # optional repro.obs.MetricsRegistry (duck-typed, same reasoning)
+        self.obs = obs
         self.seed = seed
         self.horizon_s = horizon_days * 86400.0
         self.rng = np.random.default_rng(seed + 1)
@@ -532,6 +551,8 @@ class ClusterSim:
             self._sym_int.code(tuple(symptoms), "|".join(symptoms))
             if symptoms else 0,
             NO_JOB if preempted_by is None else preempted_by))
+        if self.obs is not None:
+            self.obs.on_job_end(t, state, run.n_gpus, r.start_t, hw)
 
     def _end_job(self, r: Running, t: float) -> None:
         """Remove a finished/interrupted job and release its nodes (the
@@ -651,6 +672,8 @@ class ClusterSim:
         self._push(t0 + repair_s, K_REPAIR, node_id)
         if self.recorder is not None:
             self.recorder.on_node_event(t0, node_id, "drain", reason)
+        if self.obs is not None:
+            self.obs.on_node_down(t0, node_id, reason)
         if self.policy is not None:
             self.policy.on_node_drain(self, t0, node_id, reason)
 
@@ -662,6 +685,8 @@ class ClusterSim:
             fault.transient, fault.detectable_by_check, fault.repair_s,
             self._dom_int.code(fault.domain) if fault.domain else 0,
             fault.fault_id, fault.detected_t))
+        if self.obs is not None:
+            self.obs.on_fault(fault)
 
     def _fault_detected(self, t: float, fault: Fault) -> None:
         """The detection pipeline surfaced ``fault`` at ``t`` — the point
@@ -1115,6 +1140,8 @@ class ClusterSim:
                         self._chain_gen[node_id]))
         if self.recorder is not None:
             self.recorder.on_node_event(t, node_id, "repair")
+        if self.obs is not None:
+            self.obs.on_node_up(t, node_id)
 
     # -- main loop -----------------------------------------------------------
     def run(self) -> None:
@@ -1175,6 +1202,8 @@ class ClusterSim:
             self.recorder.bind(self)
         if self.policy is not None:
             self.policy.bind(self)
+        if self.obs is not None:
+            self.obs.bind(self)
         windows = self._arrival_windows()
         win = next(windows, None)
         if win is None:
@@ -1219,6 +1248,13 @@ class ClusterSim:
         # hoisted bound hook: the sched branch is the hottest recorder site
         on_sched_pass = (None if self.recorder is None
                          else self.recorder.on_sched_pass)
+        # hoisted obs hook (same reasoning); the pass wall-clock is only
+        # measured when an obs is attached, and only on every
+        # OBS_PASS_SAMPLE-th pass (wall_s=-1.0 marks unsampled passes) —
+        # sampling keeps the perf_counter pair off most passes
+        obs_sched_pass = (None if self.obs is None
+                          else self.obs.on_sched_pass)
+        obs_pass_i = 0
         while True:
             t_ev = events[0][0] if events else _INF
             t_f = fheap[0][0] if fheap else _INF
@@ -1306,15 +1342,33 @@ class ClusterSim:
                     # preemption releases: the changed/blocked retry logic
                     # below covers them
                     self._pass_t = t
-                    if on_sched_pass is None:
+                    if on_sched_pass is None and obs_sched_pass is None:
                         n_started, n_preempted, blocked = \
                             self._schedule_pass(t)
-                    else:
+                    elif obs_sched_pass is None:
                         n_queued = len(self.queue) + len(self._deferred)
                         n_started, n_preempted, blocked = \
                             self._schedule_pass(t)
                         on_sched_pass(t, n_queued, n_started, n_preempted,
                                       blocked)
+                    else:
+                        n_queued = len(self.queue) + len(self._deferred)
+                        obs_pass_i += 1
+                        if obs_pass_i >= OBS_PASS_SAMPLE:
+                            obs_pass_i = 0
+                            w0 = perf_counter()
+                            n_started, n_preempted, blocked = \
+                                self._schedule_pass(t)
+                            pass_wall = perf_counter() - w0
+                        else:
+                            n_started, n_preempted, blocked = \
+                                self._schedule_pass(t)
+                            pass_wall = -1.0
+                        if on_sched_pass is not None:
+                            on_sched_pass(t, n_queued, n_started,
+                                          n_preempted, blocked)
+                        obs_sched_pass(t, n_queued, n_started, n_preempted,
+                                       blocked, pass_wall)
                     self._pass_t = -1.0
                     if self.queue or self._deferred:
                         if n_started > 0 or n_preempted > 0:

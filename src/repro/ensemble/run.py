@@ -84,8 +84,12 @@ def main(argv=None) -> int:
                          "repro.configs.scenarios; default: exact-legacy "
                          "independent-v1)")
     ap.add_argument("--json", default=None)
-    ap.add_argument("--quiet", action="store_true",
-                    help="suppress per-cell streaming progress lines")
+    ap.add_argument("--progress", action="store_true",
+                    help="stream per-cell heartbeat lines (completion, "
+                         "ETA, pool efficiency) while the grid runs")
+    ap.add_argument("--heartbeat", default=None, metavar="PATH",
+                    help="also stream heartbeats as jsonl to PATH (view "
+                         "with python -m repro.obs.report)")
     args = ap.parse_args(argv)
     if args.scenario is not None:
         from repro.configs.scenarios import get_scenario
@@ -100,18 +104,31 @@ def main(argv=None) -> int:
                  f"(each (scale, seed) cell must be unique)")
     seeds = range(args.seeds)
 
-    def progress(i, stats, done, total):
-        if not args.quiet:
-            print(f"  [{done:3d}/{total}] {stats.n_gpus:6d} GPUs seed "
-                  f"{stats.seed:<3d} {stats.wall_s:6.2f}s "
-                  f"{stats.n_records:7d} jobs", flush=True)
+    on_result = None
+    hb = None
+    if args.progress or args.heartbeat:
+        from repro.obs import Heartbeat
+
+        hb = Heartbeat(
+            total=len(gpus_list) * args.seeds, procs=args.procs,
+            print_fn=(lambda line: print(f"  {line}", flush=True))
+            if args.progress else None,
+            jsonl_path=args.heartbeat)
+
+        def on_result(i, stats, done, total):
+            hb.on_cell(f"{stats.n_gpus}gpu/seed{stats.seed}",
+                       stats.wall_s)
 
     t0 = time.time()
     agg = run_ensemble(gpus_list, seeds, horizon_days=args.days,
                        r_f=args.r_f, min_hours=args.min_hours,
-                       procs=args.procs, on_result=progress,
+                       procs=args.procs, on_result=on_result,
                        scenario=args.scenario)
     wall = time.time() - t0
+    if hb is not None:
+        hb.close()
+        if args.heartbeat:
+            print(f"heartbeats streamed to {args.heartbeat}")
 
     print()
     print(agg.band_table())

@@ -211,18 +211,22 @@ def sweep(policies: Sequence[str] = DEFAULT_POLICIES,
           procs: int = 0,
           policy_kwargs: Optional[dict[str, dict]] = None,
           trace_dir: Optional[str] = None,
-          scenario: Optional[str] = None) -> SweepResult:
+          scenario: Optional[str] = None,
+          on_result=None) -> SweepResult:
     """Run the policy x scale x seed grid on the shared ensemble executor
     (``procs`` > 1 fans cells out over its spawn pool; 0/1 runs serially
     in-process).  ``trace_dir`` archives each cell's trace as npz;
-    ``scenario`` names a fault-model v2 pack applied to every cell."""
+    ``scenario`` names a fault-model v2 pack applied to every cell;
+    ``on_result(i, cell)`` streams each ``CellResult`` as it lands (in
+    completion order — the heartbeat/progress channel)."""
     kw = dict(horizon_days=horizon_days, min_gpus=min_gpus,
               min_hours=min_hours, trace_dir=trace_dir, scenario=scenario)
     tasks = [(p, g, s, {**kw, "policy_kwargs":
                         (policy_kwargs or {}).get(p)})
              for p in policies for g in gpus_list for s in seeds]
     t0 = time.time()
-    cells = run_cells(_cell_worker, tasks, procs=procs)
+    cells = run_cells(_cell_worker, tasks, procs=procs,
+                      on_result=on_result)
     cells.sort(key=lambda c: (c.n_gpus, c.policy, c.seed))
     return SweepResult(cells, horizon_days, wall_s=time.time() - t0)
 
@@ -248,6 +252,12 @@ def main() -> None:
     ap.add_argument("--save-traces", default=None, metavar="DIR",
                     help="archive each cell's trace as npz under DIR "
                          "(re-analyzable with python -m repro.trace.report)")
+    ap.add_argument("--progress", action="store_true",
+                    help="stream per-cell heartbeat lines (completion, "
+                         "ETA, pool efficiency) while the grid runs")
+    ap.add_argument("--heartbeat", default=None, metavar="PATH",
+                    help="also stream heartbeats as jsonl to PATH (view "
+                         "with python -m repro.obs.report)")
     args = ap.parse_args()
     if args.scenario is not None:
         from repro.configs.scenarios import get_scenario
@@ -256,11 +266,33 @@ def main() -> None:
         except KeyError as e:
             ap.error(e.args[0])
 
-    res = sweep(policies=args.policies.split(","),
-                gpus_list=[int(g) for g in args.gpus.split(",")],
+    policies = args.policies.split(",")
+    gpus_list = [int(g) for g in args.gpus.split(",")]
+    on_result = None
+    hb = None
+    if args.progress or args.heartbeat:
+        from repro.obs import Heartbeat
+
+        hb = Heartbeat(
+            total=len(policies) * len(gpus_list) * args.seeds,
+            procs=args.procs,
+            print_fn=(lambda line: print(f"  {line}", flush=True))
+            if args.progress else None,
+            jsonl_path=args.heartbeat)
+
+        def on_result(i, cell):
+            hb.on_cell(f"{cell.policy}/{cell.n_gpus}gpu/s{cell.seed}",
+                       cell.wall_s)
+
+    res = sweep(policies=policies, gpus_list=gpus_list,
                 seeds=range(args.seeds), horizon_days=args.days,
                 min_hours=args.min_hours, procs=args.procs,
-                trace_dir=args.save_traces, scenario=args.scenario)
+                trace_dir=args.save_traces, scenario=args.scenario,
+                on_result=on_result)
+    if hb is not None:
+        hb.close()
+        if args.heartbeat:
+            print(f"heartbeats streamed to {args.heartbeat}")
     print(res.table())
     if args.save_traces:
         print(f"per-cell traces saved under {args.save_traces}/")

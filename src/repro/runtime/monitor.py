@@ -9,6 +9,11 @@ entered/exited each collective; on a timeout, the first collective with a
 non-full entry set identifies the culprit ranks — the paper's NCCL-timeout
 root-causing method, reimplemented for the single-controller runtime's
 simulated multi-host mode.
+
+Both monitors expose ``as_metric_source()`` — a zero-argument poll
+returning a flat dict — so a live dashboard can fold them into
+``repro.obs.MetricsRegistry`` snapshots via ``add_source`` (they appear
+under ``sources.<name>`` in every emitted snapshot).
 """
 from __future__ import annotations
 
@@ -43,6 +48,20 @@ class StragglerMonitor:
                 self._strikes[node] = 0
         return newly
 
+    def as_metric_source(self):
+        """Zero-arg poll for ``MetricsRegistry.add_source``: flagged
+        count, nodes currently on >=1 strike, and steps observed."""
+        def poll() -> dict:
+            return {
+                "n_flagged": len(self.flagged),
+                "flagged": sorted(self.flagged),
+                "n_striking": sum(1 for s in self._strikes.values()
+                                  if s > 0),
+                "n_steps": max((len(h) for h in self.history.values()),
+                               default=0),
+            }
+        return poll
+
 
 @dataclass
 class CollectiveTracer:
@@ -74,3 +93,16 @@ class CollectiveTracer:
                 return {"collective": cid, "kind": "stuck_inside",
                         "culprit_ranks": sorted(stuck)}
         return None
+
+    def as_metric_source(self):
+        """Zero-arg poll for ``MetricsRegistry.add_source``: collective
+        counts plus the current diagnosis (flattened; None fields when
+        healthy)."""
+        def poll() -> dict:
+            d = self.diagnose()
+            return {
+                "n_collectives": len(self.order),
+                "diagnosis_kind": None if d is None else d["kind"],
+                "culprit_ranks": [] if d is None else d["culprit_ranks"],
+            }
+        return poll

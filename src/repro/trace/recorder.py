@@ -126,14 +126,20 @@ class TraceRecorder:
 
 
 def simulate_trace(spec, *, horizon_days: float = 8.0, seed: int = 0,
-                   trace_spill_dir: Optional[str] = None, **sim_kw):
+                   trace_spill_dir: Optional[str] = None, setup=None,
+                   **sim_kw):
     """Convenience: run a ``ClusterSim`` with a recorder attached and
     return ``(sim, trace)`` — the "record trace -> analyze trace" path.
-    ``trace_spill_dir`` enables constant-RSS streaming recording."""
+    ``trace_spill_dir`` enables constant-RSS streaming recording;
+    ``setup(sim)`` (if given) runs between construction and ``run()``
+    (e.g. to attach an ``obs.EngineProfiler``); other keywords — incl.
+    ``obs=MetricsRegistry()`` — pass straight through to ``ClusterSim``."""
     from repro.cluster.scheduler import ClusterSim
 
     rec = TraceRecorder(trace_spill_dir=trace_spill_dir)
     sim = ClusterSim(spec, horizon_days=horizon_days, seed=seed,
                      recorder=rec, **sim_kw)
+    if setup is not None:
+        setup(sim)
     sim.run()
     return sim, rec.finalize(sim)

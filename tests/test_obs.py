@@ -1,0 +1,299 @@
+"""Live telemetry layer (repro.obs): bit-identity, snapshot streams,
+Prometheus rendering, heartbeats, the engine self-profiler, and the
+obs_bench overhead gate."""
+import json
+import os
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import pytest
+
+from repro.cluster.scheduler import ClusterSim, JobState
+from repro.cluster.workload import ClusterSpec
+from repro.obs import (EngineProfiler, Heartbeat, JsonlWriter,
+                       MetricsRegistry, read_jsonl, to_prometheus)
+from repro.obs.metrics import (INFRA_LOSS_STATES, WindowedHistogram,
+                               _hist_stats)
+
+sys.path.insert(0, os.path.dirname(__file__))
+from test_sim_perf import DIGEST_CONFIGS, ENGINE_DIGESTS, engine_digest  # noqa: E402
+
+
+def _small_spec():
+    return ClusterSpec("RSC-1", n_nodes=80, jobs_per_day=320.0,
+                       target_utilization=0.83, r_f=6.5e-3)
+
+
+def _run_instrumented(horizon_days=6.0, **reg_kw):
+    reg = MetricsRegistry(**reg_kw)
+    sim = ClusterSim(_small_spec(), horizon_days=horizon_days, seed=3,
+                     obs=reg)
+    sim.run()
+    return sim, reg
+
+
+# -- pure-observer contract -------------------------------------------------
+def test_obs_run_bit_identical_across_all_digest_configs():
+    """The tentpole contract: an obs-instrumented run (registry AND
+    self-profiler attached) reproduces every committed engine digest
+    bit-for-bit — the registry never consumes RNG or pushes events."""
+    for name, (spec, kw) in DIGEST_CONFIGS.items():
+        sim = ClusterSim(spec, **kw, obs=MetricsRegistry())
+        EngineProfiler().attach(sim)
+        sim.run()
+        assert engine_digest(sim) == ENGINE_DIGESTS[name], name
+
+
+def test_registry_is_single_use():
+    _, reg = _run_instrumented(horizon_days=1.0)
+    with pytest.raises(ValueError, match="reused"):
+        ClusterSim(_small_spec(), horizon_days=1.0, obs=reg).run()
+
+
+# -- registry counters + snapshots ------------------------------------------
+def test_registry_counts_match_engine_and_snapshots_cover_horizon():
+    sim, reg = _run_instrumented(horizon_days=6.0)
+    summary = reg.finalize()
+    assert reg.jobs_total == sim.n_records
+    assert sum(reg.state_counts.values()) == reg.jobs_total
+    # 6 days at the default 6h cadence: one snapshot per boundary the
+    # engine crossed, plus the closing one from finalize
+    assert 24 <= len(reg.snapshots) <= 26
+    assert summary["n_snapshots"] == len(reg.snapshots)
+    ts = [s["t"] for s in reg.snapshots]
+    assert ts == sorted(ts)
+    last = reg.snapshots[-1]
+    assert last["jobs_total"] == sim.n_records
+    assert last["nodes"]["total"] == 80
+    assert 0.0 <= (last["ettr_window"] or 0.0) <= 1.0
+    assert last["mttf_window_h"] is None or last["mttf_window_h"] > 0
+    for key in ("gpu_util", "queue_depth", "fault_domains",
+                "detect_lag_s", "sched_pass_ms", "sched_passes_total"):
+        assert key in last
+    # sched wall stats cover the engine-sampled subset of passes
+    pw = next((s["sched_pass_ms"] for s in reg.snapshots
+               if s["sched_pass_ms"]), None)
+    if pw is not None:
+        assert pw["sample_stride"] >= 1
+        assert pw["p50"] <= pw["p99"] <= pw["max"]
+
+
+def test_ettr_window_proxy_math():
+    """Drive the hooks directly: the windowed ETTR is the non-lost
+    share of gpu-time, and buckets expire once outside the window."""
+    reg = MetricsRegistry(snapshot_interval_s=1e9, window_s=24 * 3600.0)
+    # 100 gpu-s completed + 300 gpu-s lost to NODE_FAIL
+    reg.on_job_end(1000.0, JobState.COMPLETED, 1, 900.0, False)
+    reg.on_job_end(1300.0, JobState.NODE_FAIL, 1, 1000.0, False)
+    assert reg.ettr_window() == pytest.approx(0.25)
+    assert reg.jobs_total == 2
+    assert reg.state_counts == {"COMPLETED": 1, "NODE_FAIL": 1}
+    # hw-attributed FAILED counts as lost; user FAILED does not
+    reg2 = MetricsRegistry()
+    reg2.on_job_end(100.0, JobState.FAILED, 1, 0.0, True)
+    reg2.on_job_end(300.0, JobState.FAILED, 1, 200.0, False)
+    assert reg2.ettr_window() == pytest.approx(0.5)
+    # roll the open bucket at its edge, then a full window later the
+    # rolled gpu-time has been trimmed away and the proxy goes silent
+    reg._edge(reg._jb_end)
+    assert reg._w_acc == [0.0, 0.0]
+    assert reg.ettr_window() == pytest.approx(0.25)   # rolled, still in window
+    reg._trim(reg._jb_end + 25 * 3600.0)
+    assert reg.ettr_window() is None
+
+
+def test_on_fault_windows_and_detection_lag():
+    reg = MetricsRegistry()
+    reg.on_fault(SimpleNamespace(t=100.0, domain="rack:7",
+                                 symptom="ib_link_error",
+                                 detected_t=160.0))
+    reg.on_fault(SimpleNamespace(t=200.0, domain=None,
+                                 symptom="gpu_memory_errors",
+                                 detected_t=200.0))
+    assert reg.faults_total == 2
+    assert reg.fault_domain_counts == {"rack": 1, "independent": 1}
+    lag = reg._det_lag.summary()
+    assert lag["n"] == 2 and lag["max"] == 60.0
+
+
+def test_windowed_histogram_trim_and_summary():
+    h = WindowedHistogram(window_s=100.0)
+    for i in range(10):
+        h.add(float(i * 20), float(i))
+    h.trim(200.0)   # cutoff 100: entries at t<100 (values 0..4) expire
+    assert len(h) == 5
+    s = h.summary(scale=2.0)
+    assert s["n"] == 5 and s["max"] == 18.0 and s["p50"] == 14.0
+    assert WindowedHistogram(10.0).summary() is None
+
+
+def test_log_bucket_hist_stats_estimates():
+    """Constant 20us samples land in one bucket whose upper bound
+    (0.024 ms) is reported for every percentile; n/mean stay exact."""
+    reg = MetricsRegistry()
+    for _ in range(100):
+        reg.on_sched_pass(0.0, 3, 1, 0, False, 2e-5)
+    stats = _hist_stats(reg._pass_hist, reg._p_acc[4], reg._p_acc[3])
+    assert stats["n"] == 100
+    assert stats["mean"] == pytest.approx(0.02)
+    assert stats["p50"] == stats["p99"] == stats["max"] == 0.024
+    assert _hist_stats([0] * 8, 0, 0.0) is None
+    # unsampled passes (wall_s=-1) count passes but not wall stats
+    reg.on_sched_pass(0.0, 3, 1, 0, False, -1.0)
+    assert reg.sched_passes_total == 101 and reg._p_acc[4] == 100
+
+
+# -- emission ---------------------------------------------------------------
+def test_snapshot_jsonl_round_trip(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    reg = MetricsRegistry()
+    with JsonlWriter(path) as w:
+        reg.attach_emitter(w)
+        sim = ClusterSim(_small_spec(), horizon_days=3.0, seed=3, obs=reg)
+        sim.run()
+        reg.finalize()
+        assert w.n_written == len(reg.snapshots)
+    back = read_jsonl(path)
+    assert back == reg.snapshots
+    assert all(r["kind"] == "snapshot" for r in back)
+
+
+def test_read_jsonl_rejects_corrupt_lines(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"kind": "snapshot"}\n{"kind": "snaps\n')
+    with pytest.raises(ValueError, match="bad.jsonl:2"):
+        read_jsonl(str(p))
+
+
+def test_to_prometheus_format():
+    _, reg = _run_instrumented(horizon_days=3.0)
+    reg.finalize()
+    text = to_prometheus(reg)
+    assert f"repro_jobs_total {reg.jobs_total}" in text
+    assert "# TYPE repro_jobs_total counter" in text
+    assert "# TYPE repro_gpu_util gauge" in text
+    assert 'repro_job_state_total{state="COMPLETED"}' in text
+    assert 'repro_nodes{state="active"}' in text
+    # summaries appear when the stream saw faults / passes
+    if reg.snapshots[-1].get("sched_pass_ms"):
+        assert 'repro_sched_pass_seconds{quantile="0.5"}' in text
+
+
+# -- heartbeats -------------------------------------------------------------
+def test_heartbeat_math_and_stream(tmp_path):
+    path = str(tmp_path / "beats.jsonl")
+    clock = iter([0.0, 10.0, 20.0, 30.0, 40.0]).__next__
+    hb = Heartbeat(total=4, procs=2, jsonl_path=path, clock=clock)
+    beats = [hb.on_cell(f"cell{i}", wall_s=15.0) for i in range(4)]
+    hb.close()
+    last = beats[-1]
+    assert last["done"] == 4 and last["total"] == 4
+    assert last["eta_s"] == 0.0
+    assert last["elapsed_s"] == 40.0
+    assert last["cells_per_sec"] == pytest.approx(0.1)
+    # 4 cells x 15s in-worker over 40s x 2 procs = 75% busy
+    assert last["pool_efficiency"] == pytest.approx(0.75)
+    mid = beats[1]
+    assert mid["eta_s"] == pytest.approx(20.0)   # 2 left at 0.1 cells/s
+    back = read_jsonl(path)
+    assert back == beats
+    assert "eff 0.75" in Heartbeat.format_line(last)
+
+
+# -- engine self-profiler ---------------------------------------------------
+def test_engine_profiler_breakdown_and_detach():
+    sim = ClusterSim(_small_spec(), horizon_days=3.0, seed=3)
+    prof = EngineProfiler().attach(sim)
+    sim.run()
+    s = prof.summary()
+    assert s["sched_pass"]["calls"] > 0
+    assert s["record"]["calls"] == sim.n_records
+    assert 0.0 < s["sched_pass"]["wall_s"] <= s["total_run"]["wall_s"]
+    assert s["total_run"]["share_of_run"] == 1.0
+    assert s["other"]["wall_s"] >= 0.0
+    table = prof.render()
+    assert "sched_pass" in table and "total_run" in table
+    with pytest.raises(ValueError, match="single-use"):
+        prof.attach(sim)
+    prof.detach()
+    assert "_schedule_pass" not in sim.__dict__ and "run" not in sim.__dict__
+
+
+# -- CLI front doors + bench gate (tier-1 guards) ---------------------------
+def _subproc(args, repo_root, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo_root, "src")
+    return subprocess.run([sys.executable, *args], cwd=repo_root, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_trace_report_obs_flags_cli(repo_root, tmp_path):
+    """`trace.report --simulate --obs-out/--prom-out/--self-profile`
+    streams snapshots, writes the Prometheus text file, and prints the
+    engine phase table; `obs.report` renders the stream."""
+    obs_out = str(tmp_path / "run.jsonl")
+    prom_out = str(tmp_path / "run.prom")
+    proc = _subproc(["-m", "repro.trace.report", "--simulate", "--nodes",
+                     "100", "--days", "2", "--obs-out", obs_out,
+                     "--prom-out", prom_out, "--self-profile"], repo_root)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "engine self-profile" in proc.stdout
+    snaps = read_jsonl(obs_out)
+    assert len(snaps) >= 8 and snaps[-1]["kind"] == "snapshot"
+    with open(prom_out) as f:
+        assert "# TYPE repro_jobs_total counter" in f.read()
+
+    proc = _subproc(["-m", "repro.obs.report", obs_out], repo_root)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "final snapshot" in proc.stdout
+
+    # obs flags without --simulate are rejected up front
+    proc = _subproc(["-m", "repro.trace.report", "--obs-out", obs_out],
+                    repo_root)
+    assert proc.returncode != 0
+
+
+def test_ensemble_run_heartbeat_cli(repo_root, tmp_path):
+    beats_path = str(tmp_path / "beats.jsonl")
+    proc = _subproc(["-m", "repro.ensemble.run", "--gpus", "8,16",
+                     "--seeds", "1", "--days", "1",
+                     "--procs", "0", "--progress",
+                     "--heartbeat", beats_path], repo_root)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    beats = read_jsonl(beats_path)
+    assert [b["done"] for b in beats] == [1, 2]
+    assert all(b["kind"] == "heartbeat" for b in beats)
+    assert "eta" in proc.stdout   # --progress printed beat lines
+
+
+def test_sweep_exposes_progress_flags(repo_root):
+    proc = _subproc(["-m", "repro.mitigations.sweep", "--help"], repo_root)
+    assert proc.returncode == 0
+    assert "--progress" in proc.stdout and "--heartbeat" in proc.stdout
+
+
+def test_obs_bench_quick_smoke(repo_root):
+    """Tier-1 guard: `benchmarks.run --only obs_bench --quick` runs
+    end-to-end and the instrumentation budget (<5%) holds."""
+    proc = _subproc(["-m", "benchmarks.run", "--only", "obs_bench",
+                     "--quick"], repo_root)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "obs_overhead" in proc.stdout
+    assert "[PASS] obs overhead < 5%" in proc.stdout, proc.stdout
+    assert "[PASS] registry job count matches" in proc.stdout
+
+
+def test_benchmarks_profile_flag_generalized(repo_root):
+    """`--profile` now applies to any registered benchmark via the
+    generic cProfile wrap, and demands an explicit --only selection."""
+    proc = _subproc(["-m", "benchmarks.run", "--profile"], repo_root)
+    assert proc.returncode != 0
+    assert "registered benchmarks" in proc.stderr
+    assert "obs_bench" in proc.stderr
+
+    proc = _subproc(["-m", "benchmarks.run", "--only", "fig7_mttf",
+                     "--profile", "--quick"], repo_root)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "cumulative" in proc.stdout
+    assert "profile mode completed" in proc.stdout

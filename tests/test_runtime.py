@@ -129,6 +129,90 @@ def test_collective_tracer_finds_stuck_rank():
     assert d["kind"] == "stuck_inside" and d["culprit_ranks"] == [1]
 
 
+def test_straggler_monitor_strike_reset_on_healthy_step():
+    """A slow step that does not persist never trips the patience
+    counter: one healthy step resets the strikes to zero."""
+    mon = StragglerMonitor(n_nodes=3, threshold=1.5, patience=3)
+    slow = {0: 1.0, 1: 1.0, 2: 4.0}
+    healthy = {0: 1.0, 1: 1.0, 2: 1.0}
+    assert mon.observe(0, slow) == set()
+    assert mon.observe(1, slow) == set()       # 2 strikes, one short
+    assert mon.observe(2, healthy) == set()    # resets node 2
+    assert mon.observe(3, slow) == set()
+    assert mon.observe(4, slow) == set()       # back to 2 strikes only
+    assert not mon.flagged
+    assert mon.observe(5, slow) == {2}         # third consecutive strike
+
+
+def test_straggler_monitor_flags_once():
+    """A flagged node is reported as *newly* flagged exactly once, even
+    though it keeps exceeding the threshold afterwards."""
+    mon = StragglerMonitor(n_nodes=2, threshold=1.5, patience=1)
+    slow = {0: 1.0, 1: 5.0}
+    assert mon.observe(0, slow) == {1}
+    for step in range(1, 4):
+        assert mon.observe(step, slow) == set()
+    assert mon.flagged == {1}
+
+
+def test_collective_tracer_missing_entry_precedes_stuck():
+    """When both pathologies exist, the first missing-entry collective
+    wins — a rank that never arrived explains every later hang."""
+    tr = CollectiveTracer(n_ranks=2)
+    tr.enter("ar_0", 0)
+    tr.enter("ar_0", 1)
+    tr.exit("ar_0", 0)   # rank 1 stuck in ar_0...
+    tr.enter("ar_1", 0)  # ...and never reaches ar_1
+    d = tr.diagnose()
+    assert d["collective"] == "ar_1" and d["kind"] == "missing_entry"
+    assert d["culprit_ranks"] == [1]
+
+
+def test_collective_tracer_healthy_returns_none():
+    tr = CollectiveTracer(n_ranks=2)
+    for cid in ("ar_0", "ar_1"):
+        for r in range(2):
+            tr.enter(cid, r)
+            tr.exit(cid, r)
+    assert tr.diagnose() is None
+
+
+def test_monitors_as_obs_metric_sources():
+    """Both monitors plug into MetricsRegistry.add_source; their polls
+    land under sources.<name> in every snapshot."""
+    from repro.obs import MetricsRegistry
+
+    mon = StragglerMonitor(n_nodes=2, threshold=1.5, patience=1)
+    mon.observe(0, {0: 1.0, 1: 5.0})
+    tr = CollectiveTracer(n_ranks=2)
+    tr.enter("ar_0", 0)
+
+    reg = MetricsRegistry()
+    reg.add_source("stragglers", mon.as_metric_source())
+    reg.add_source("collectives", tr.as_metric_source())
+
+    class _StubSpec:
+        n_nodes = 2
+        gpus_per_node = 8
+
+    class _StubSim:  # enough surface for a snapshot poll
+        spec = _StubSpec()
+        _node_state = [0, 0]
+        running = {}
+        queue = []
+        _deferred = []
+        _now = 0.0
+        horizon_s = 1.0
+
+    reg._sim = _StubSim()
+    snap = reg._snapshot(1.0)
+    assert snap["sources"]["stragglers"] == {
+        "n_flagged": 1, "flagged": [1], "n_striking": 1, "n_steps": 1}
+    assert snap["sources"]["collectives"] == {
+        "n_collectives": 1, "diagnosis_kind": "missing_entry",
+        "culprit_ranks": [1]}
+
+
 # -- serving ------------------------------------------------------------------
 def test_server_retries_through_fault(cfg):
     srv = Server(cfg, ServeConfig(batch=2, prompt_len=16, max_new_tokens=6),
