@@ -34,6 +34,39 @@ SCENARIO_GPUS = 4096
 SCENARIO_SEEDS = 8
 
 
+def _bracket_backends():
+    """Backends the oracle-bracketing checks run on: always the numpy
+    reference, plus JAX_VMAP when jax imports here."""
+    from repro.core.backend import jax_available
+
+    return ["numpy"] + (["jax_vmap"] if jax_available() else [])
+
+
+def _check_bracketing(rep, agg, scales, tag):
+    """Oracle-bracketing contract (both backends): the batched
+    analytical bands — one ``batch_bands`` call over the grid, fed each
+    cell's fitted r_f — must bracket the engine ensemble's
+    model-anchored ETTR band at every scale."""
+    from repro.ensemble.run import batched_analytic_bands, oracle_bracket
+
+    for bk in _bracket_backends():
+        bands, res = batched_analytic_bands(agg, r_f_nominal=R_F_INJECTED,
+                                            backend=bk)
+        for g in scales:
+            ok, eng_mean, ab = oracle_bracket(agg, bands, g)
+            if ok is None:
+                rep.check(f"{tag}: {g} GPUs batched bands ({bk}) bracket "
+                          f"the engine ensemble", True,
+                          "no qualifying runs to bracket (vacuous)")
+                continue
+            rep.check(f"{tag}: {g} GPUs batched bands ({bk}) bracket the "
+                      f"engine ensemble",
+                      bool(ok),
+                      f"engine {eng_mean:.3f} vs batched "
+                      f"[{ab.lo:.3f}, {ab.hi:.3f}] + calibration pads "
+                      f"({res.n_compiled_calls} compiled call(s))")
+
+
 @benchmark("fig11_scale_projection")
 def run(rep):
     from repro.core.mttf_model import projected_mttf_hours
@@ -103,13 +136,19 @@ def run(rep):
                       "the paper's 0.23 h", 0.23 / 2.5 < p131k < 0.23 * 2.5,
                       f"{p131k:.3f}h")
     if common.QUICK:
-        # scenario-pack smoke (tier-1): the v2 packs thread through the
-        # ensemble path end-to-end at toy scale
-        agg_s = run_ensemble([256], range(2), horizon_days=days,
-                             r_f=R_F_INJECTED, min_hours=min_hours,
-                             procs=1, scenario="rack-correlated")
-        rep.check("scenario pack threads through the ensemble",
-                  agg_s.n_cells == 2)
+        # toy-scale bracketing (tier-1): every named fault-model v2 pack
+        # threads through the ensemble AND its batched analytical bands
+        # bracket the engine ensemble band, on both backends
+        from repro.configs.scenarios import available_scenarios
+
+        _check_bracketing(rep, agg, gpus, "independent")
+        for scen in available_scenarios():
+            agg_s = run_ensemble([256], range(2), horizon_days=days,
+                                 r_f=R_F_INJECTED, min_hours=min_hours,
+                                 procs=1, scenario=scen)
+            rep.check(f"{scen}: pack threads through the ensemble",
+                      agg_s.n_cells == 2)
+            _check_bracketing(rep, agg_s, [256], scen)
 
     if not common.QUICK:
         budget = 60.0 * max(1.0, 8.0 / procs)
@@ -117,10 +156,18 @@ def run(rep):
                   f"({budget:.0f}s at {procs} procs)", wall < budget,
                   f"{wall:.1f}s")
 
-        # fault-model v2 scenario packs: one mid-scale grid per pack,
-        # fitted-rate means gated against the calibrated bands above
+        # oracle-bracketing on the headline grid: the batched analytical
+        # bands (one compiled call over the whole seed x scale grid, fed
+        # the fitted rates) must bracket the engine ensemble at every
+        # scale, on both backends
+        _check_bracketing(rep, agg, agg.scales(), "independent")
+
+        # fault-model v2 scenario packs: one mid-scale grid per pack
+        # (all four named packs — None is the exact-legacy
+        # independent-v1), fitted-rate means gated against the
+        # calibrated bands above and batched bands bracketing the engine
         scen_means = {}
-        for scen in (None, *sorted(SCENARIO_RF_BANDS)):
+        for scen in (None, "lablup-504", *sorted(SCENARIO_RF_BANDS)):
             agg_s = run_ensemble([SCENARIO_GPUS], range(SCENARIO_SEEDS),
                                  horizon_days=days, r_f=R_F_INJECTED,
                                  min_hours=min_hours, procs=procs,
@@ -138,6 +185,7 @@ def run(rep):
                           lo <= b.mean <= hi,
                           f"{b.mean * 1000:.2f} vs [{lo * 1000:.2f},"
                           f"{hi * 1000:.2f}] /1000 node-days")
+            _check_bracketing(rep, agg_s, [SCENARIO_GPUS], name)
         rep.check("rack-correlated raises the fitted failure rate above "
                   "the independent chains (same seeds)",
                   scen_means["rack-correlated"]

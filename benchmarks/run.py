@@ -17,8 +17,11 @@ without ``--only`` is an error (it lists the registered benchmarks).
 diffs every numeric metric shared with the baseline file (printing
 per-metric deltas) and exits non-zero if any throughput metric — a row
 key ending in ``jobs_per_sec`` or ``cells_per_sec`` — dropped by more
-than 20%.  Unless ``--only`` narrows further, the run is restricted to
-the benchmarks present in the baseline.
+than 20%.  Metrics (and whole benchmarks) present in the current run
+but absent from the baseline are noted and skipped, never gated —
+regenerate the baseline to start gating them.  Unless ``--only``
+narrows further, the run is restricted to the benchmarks present in
+the baseline.
 """
 from __future__ import annotations
 
@@ -36,7 +39,7 @@ from benchmarks import (ensemble_bench, fig3_job_status, fig4_attribution,  # no
                         fig11_scale_projection, fig12_adaptive_routing,
                         fig13_mitigations, kernel_bench, obs_bench,
                         roofline_table, runtime_ettr, sim_bench,
-                        table2_lemon, trace_bench)
+                        stat_bench, table2_lemon, trace_bench)
 from benchmarks import common
 from benchmarks.common import all_benchmarks
 
@@ -63,12 +66,15 @@ def compare_results(baseline_path: str, results: dict) -> int:
           f"===")
     regressions = 0
     compared = 0
-    for name, bres in base.get("benchmarks", {}).items():
+    new_metrics = 0
+    base_benchmarks = base.get("benchmarks", {})
+    for name, bres in base_benchmarks.items():
         cur = results.get(name)
         if cur is None:
             print(f"  {name}: not run (skipped in diff)")
             continue
         cur_rows = {k: v for k, v, _ in cur["rows"]}
+        base_keys = {key for key, _, _ in bres.get("rows", [])}
         for key, bval, _ in bres.get("rows", []):
             bnum = _numeric(bval)
             cnum = _numeric(cur_rows.get(key))
@@ -83,7 +89,20 @@ def compare_results(baseline_path: str, results: dict) -> int:
             print(f"  {name}.{key:52s} {bnum:>12.6g} -> {cnum:>12.6g} "
                   f"{delta:+8.1%}{flag}")
             compared += 1
+        # metrics the current run has that the baseline predates: noted
+        # and skipped, never gated — a new metric needs a regenerated
+        # baseline, not a green-by-accident diff
+        for key in (k for k, _, _ in cur["rows"] if k not in base_keys):
+            if _numeric(cur_rows.get(key)) is None:
+                continue
+            new_metrics += 1
+            print(f"  {name}.{key:52s} (new metric — not in baseline; "
+                  f"skipped, regenerate the baseline to gate it)")
+    for name in sorted(set(results) - set(base_benchmarks)):
+        print(f"  {name}: new benchmark — not in baseline; skipped "
+              f"(regenerate the baseline to gate it)")
     print(f"  {compared} shared metrics compared, "
+          f"{new_metrics} new metrics skipped, "
           f"{regressions} throughput regressions")
     if not compared:
         print("  (no comparable numeric metrics — quick runs only compare "

@@ -235,14 +235,31 @@ class FaultProcess:
         shared exponential stream in node order, same IEEE op order — but
         one numpy call instead of ``n_nodes`` Python round-trips (the
         scheduler arms every node's initial chain with this)."""
+        rates_per_s = self.node_rates() / 86400.0
+        draws = self._take_std_exponentials(self.n_nodes)
+        return t + draws / np.maximum(rates_per_s, 1e-12)
+
+    def node_rates(self) -> np.ndarray:
+        """Per-node hardware fault rates in failures per node-day, lemon
+        multipliers applied — the shared parameter surface between the
+        engine's chain arming above and the batched statistical backend
+        (``repro.core.backend`` feeds these to the closed-form/MC grid
+        when modeling an engine-matched cluster).  Pure function of the
+        process config; no RNG, so extracting it preserves the engine's
+        bit-identity digests."""
         rates = np.full(self.n_nodes, self.r_f)
         if self.lemons:
             idx = np.fromiter(self.lemons, dtype=np.int64,
                               count=len(self.lemons))
             rates[idx] = rates[idx] * self.lemon_multiplier
-        rates_per_s = rates / 86400.0
-        draws = self._take_std_exponentials(self.n_nodes)
-        return t + draws / np.maximum(rates_per_s, 1e-12)
+        return rates
+
+    def mean_rate_per_node_day(self) -> float:
+        """Cluster-mean effective fault rate (failures per node-day):
+        the nominal ``r_f`` lifted by the lemon tail — what the batched
+        analytical grid should be fed to model this cluster's true
+        injected hazard rather than the nominal one."""
+        return float(self.node_rates().mean())
 
 
 # -- fault-model v2: correlated domains + staged detection ---------------

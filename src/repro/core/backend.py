@@ -1,0 +1,675 @@
+"""Backend-dispatch seam for the statistical layer: numpy | jax.vmap.
+
+The repo's statistical objects — the closed-form ETTR/MTTF models
+(``ettr_model``, ``mttf_model``) and the Monte-Carlo validator
+(``montecarlo``) — historically ran per-seed on numpy: a Python loop
+over (seed, scale, policy) cells, each cell a handful of scalar formula
+evaluations or one vectorized MC loop.  This module adds an enum-keyed
+dispatch seam (the mamba-jax ``KernelType`` idiom) behind those public
+functions plus a batched ``JAX_VMAP`` mode that evaluates an *entire*
+seed x scale x policy grid in one compiled call:
+
+  * closed-form ETTR / E[failures] / MTTF / Daly-Young band math as
+    fused jnp ops over every cell at once;
+  * the per-attempt Monte-Carlo outcome draws vectorized with
+    ``jax.random`` key splits inside a masked ``lax.while_loop``
+    (full-width boolean mask instead of numpy's shrinking index array);
+  * ``batch_bands(grid)`` — the entry point the ensemble and sweep
+    layers call for instant analytical bands (thousands of cells/sec
+    vs. one full engine replay per cell).
+
+Authority and tolerances (see docs/stat_backend.md): the numpy float64
+path remains the reference — JAX runs float32 (the repo never flips
+jax_enable_x64, which is process-global and would perturb the Pallas
+stack), so analytical parity is ~1e-4 relative and MC parity is
+statistical (different RNG streams by construction).  The event-driven
+engine stays the exact oracle above both: batched bands must bracket
+its ensemble bands (gated in benchmarks/fig11_scale_projection.py and
+tests/test_backend_parity.py).
+
+Seed/key mapping: a grid cell's numpy stream is
+``np.random.default_rng(seed)`` (the historical per-cell semantics);
+the JAX stream is ``fold_in(PRNGKey(seed), cell_index)`` with
+``cell_index`` the cell's flat (policy-major, then scale) position, so
+every cell of a batched call draws independently even when seeds repeat
+across policies/scales.
+"""
+from __future__ import annotations
+
+import math
+import os
+from contextlib import contextmanager
+from dataclasses import dataclass
+from enum import Enum
+from functools import lru_cache
+from typing import Optional, Sequence
+
+import numpy as np
+
+SECONDS_PER_DAY = 86400.0
+GPUS_PER_NODE = 8
+
+
+class StatBackend(Enum):
+    """Which implementation serves the statistical layer."""
+
+    NUMPY = 0      # float64 per-seed reference (authoritative)
+    JAX_VMAP = 1   # float32 jit+vmap batched grids
+
+
+BACKEND_MAPPING: dict[str, StatBackend] = {
+    "numpy": StatBackend.NUMPY,
+    "jax_vmap": StatBackend.JAX_VMAP,
+}
+
+_ENV_VAR = "REPRO_STAT_BACKEND"
+
+
+def _env_default() -> StatBackend:
+    name = os.environ.get(_ENV_VAR, "numpy").strip().lower()
+    if name not in BACKEND_MAPPING:
+        raise ValueError(
+            f"{_ENV_VAR}={name!r} is not a backend; expected one of "
+            f"{sorted(BACKEND_MAPPING)}")
+    return BACKEND_MAPPING[name]
+
+
+_current: Optional[StatBackend] = None
+
+
+def get_backend() -> StatBackend:
+    """The process-wide default backend (``REPRO_STAT_BACKEND`` env var
+    until overridden with :func:`set_backend` / :func:`use_backend`)."""
+    global _current
+    if _current is None:
+        _current = _env_default()
+    return _current
+
+
+def set_backend(backend: "StatBackend | str") -> StatBackend:
+    """Set the process-wide default; returns the previous one."""
+    global _current
+    prev = get_backend()
+    _current = resolve_backend(backend)
+    return prev
+
+
+@contextmanager
+def use_backend(backend: "StatBackend | str"):
+    """Scoped default-backend override (tests, CLI flags)."""
+    prev = set_backend(backend)
+    try:
+        yield get_backend()
+    finally:
+        set_backend(prev)
+
+
+def resolve_backend(backend: "StatBackend | str | None") -> StatBackend:
+    """Normalize a ``backend=`` argument: enum member, registry name, or
+    None (-> the process default).  JAX_VMAP additionally requires jax to
+    import; a missing/broken jax raises rather than silently degrading."""
+    if backend is None:
+        resolved = get_backend()
+    elif isinstance(backend, StatBackend):
+        resolved = backend
+    elif isinstance(backend, str):
+        try:
+            resolved = BACKEND_MAPPING[backend.strip().lower()]
+        except KeyError:
+            raise ValueError(
+                f"unknown stat backend {backend!r}; expected one of "
+                f"{sorted(BACKEND_MAPPING)}") from None
+    else:
+        raise TypeError(f"backend must be StatBackend | str | None, "
+                        f"got {type(backend).__name__}")
+    if resolved is StatBackend.JAX_VMAP and not jax_available():
+        raise RuntimeError(
+            "StatBackend.JAX_VMAP requested but jax is not importable "
+            "here; install jax or use the numpy backend")
+    return resolved
+
+
+_JAX: Optional[tuple] = None   # (jax, jnp, lax) once imported
+
+
+def jax_available() -> bool:
+    """Lazy, cached jax import probe (jax is an optional dependency of
+    the statistical layer; the numpy path never imports it)."""
+    global _JAX
+    if _JAX is None:
+        try:
+            import jax
+            import jax.numpy as jnp
+            from jax import lax
+            _JAX = (jax, jnp, lax)
+        except Exception:   # noqa: BLE001  (ImportError or init failure)
+            _JAX = ()
+    return bool(_JAX)
+
+
+def _jax():
+    if not jax_available():
+        raise RuntimeError("jax backend requested but jax is unavailable")
+    return _JAX
+
+
+# ---------------------------------------------------------------------------
+# grid description
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PolicyCell:
+    """One checkpoint/restart policy point of a band grid (the model-side
+    mirror of a mitigation policy's cadence knobs)."""
+
+    name: str = "default"
+    dt_cp_s: float = 3600.0     # checkpoint interval; 0 -> Daly-Young
+    w_cp_s: float = 300.0       # checkpoint write cost (s)
+    u0_s: float = 300.0         # restart overhead (s)
+    q_s: float = 0.0            # expected queue wait per resubmission (s)
+
+
+@dataclass(frozen=True)
+class BandGrid:
+    """A seed x scale x policy grid for :func:`batch_bands`.
+
+    ``r_f`` is a scalar nominal rate or anything broadcastable to shape
+    ``(len(gpus), len(seeds))`` — per-(scale, seed) *fitted* rates from
+    an engine ensemble is the Fig. 9-style use.  ``job_gpus`` sizes the
+    modeled job per scale (default: the ensemble's qualifying size
+    ``max(64, gpus // 16)``)."""
+
+    gpus: tuple
+    seeds: tuple
+    policies: tuple = (PolicyCell(),)
+    r_f: object = 6.5e-3
+    runtime_s: float = 7 * 86400.0
+    gpus_per_node: int = GPUS_PER_NODE
+    job_gpus: Optional[tuple] = None
+    n_runs: int = 256           # MC runs per cell (include_mc=True)
+
+    def __post_init__(self):
+        object.__setattr__(self, "gpus", tuple(int(g) for g in self.gpus))
+        object.__setattr__(self, "seeds", tuple(int(s) for s in self.seeds))
+        object.__setattr__(self, "policies", tuple(self.policies))
+        if not (self.gpus and self.seeds and self.policies):
+            raise ValueError("BandGrid needs >=1 gpus, seeds and policies")
+        if self.job_gpus is not None:
+            jg = tuple(int(j) for j in self.job_gpus)
+            if len(jg) != len(self.gpus):
+                raise ValueError("job_gpus must have one entry per scale")
+            object.__setattr__(self, "job_gpus", jg)
+
+    @property
+    def shape(self) -> tuple:
+        """(n_policies, n_scales, n_seeds)."""
+        return (len(self.policies), len(self.gpus), len(self.seeds))
+
+    @property
+    def n_cells(self) -> int:
+        p, s, k = self.shape
+        return p * s * k
+
+    def resolved_job_gpus(self) -> tuple:
+        if self.job_gpus is not None:
+            return self.job_gpus
+        return tuple(max(64, g // 16) for g in self.gpus)
+
+    def r_f_matrix(self) -> np.ndarray:
+        """Per-(scale, seed) failure rates, shape (n_scales, n_seeds)."""
+        shape = (len(self.gpus), len(self.seeds))
+        return np.ascontiguousarray(
+            np.broadcast_to(np.asarray(self.r_f, dtype=np.float64), shape))
+
+
+@dataclass(frozen=True)
+class Band:
+    """Seed-axis band of one metric at one (policy, scale) cell group."""
+
+    metric: str
+    n: int
+    mean: float
+    std: float
+    p5: float
+    p50: float
+    p95: float
+    lo: float
+    hi: float
+
+    def contains(self, x: float, *, pad_lo: float = 0.0,
+                 pad_hi: float = 0.0) -> bool:
+        if not (self.n and math.isfinite(x)):
+            return False
+        return self.lo - pad_lo <= x <= self.hi + pad_hi
+
+
+def _band(metric: str, values: np.ndarray) -> Band:
+    vals = np.asarray(values, dtype=np.float64)
+    vals = vals[np.isfinite(vals)]
+    if not len(vals):
+        nan = float("nan")
+        return Band(metric, 0, nan, nan, nan, nan, nan, nan, nan)
+    p5, p50, p95 = (float(p) for p in np.percentile(vals, (5.0, 50.0, 95.0)))
+    return Band(metric, int(len(vals)), float(vals.mean()),
+                float(vals.std(ddof=1)) if len(vals) > 1 else 0.0,
+                p5, p50, p95, float(vals.min()), float(vals.max()))
+
+
+@dataclass
+class BandGridResult:
+    """Per-cell arrays (policy, scale, seed) + seed-axis band views."""
+
+    grid: BandGrid
+    backend: StatBackend
+    n_compiled_calls: int       # device executions used (JAX_VMAP: 1)
+    ettr: np.ndarray            # analytic E[ETTR], shape (P, S, K)
+    n_failures: np.ndarray      # analytic E[failures over the run]
+    mttf_hours: np.ndarray      # cluster MTTF = (N r_f)^-1, shape (S, K)
+    dt_s: np.ndarray            # resolved checkpoint interval (P, S, K)
+    mc_ettr_mean: Optional[np.ndarray] = None    # (P, S, K) when include_mc
+    mc_ettr_std: Optional[np.ndarray] = None
+    mc_n_failures: Optional[np.ndarray] = None
+    wall_s: float = 0.0
+
+    def bands(self, policy_idx: int = 0, scale_idx: int = 0
+              ) -> dict[str, Band]:
+        """Seed-axis bands for one (policy, scale) cell group."""
+        out = {
+            "ettr": _band("ettr", self.ettr[policy_idx, scale_idx]),
+            "n_failures": _band("n_failures",
+                                self.n_failures[policy_idx, scale_idx]),
+            "mttf_hours": _band("mttf_hours", self.mttf_hours[scale_idx]),
+        }
+        if self.mc_ettr_mean is not None:
+            out["mc_ettr"] = _band(
+                "mc_ettr", self.mc_ettr_mean[policy_idx, scale_idx])
+        return out
+
+    def table(self) -> str:
+        """Per-(policy, scale) analytic band table (seed axis collapsed)."""
+        hdr = (f"{'policy':20s} {'gpus':>7s} {'E[ETTR]':>8s} "
+               f"{'[lo, hi]':>16s} {'E[fails]':>9s} {'MTTF_h':>9s}")
+        lines = [hdr, "-" * len(hdr)]
+        for pi, pol in enumerate(self.grid.policies):
+            for si, g in enumerate(self.grid.gpus):
+                b = self.bands(pi, si)
+                e, f, m = b["ettr"], b["n_failures"], b["mttf_hours"]
+                lines.append(
+                    f"{pol.name:20s} {g:7d} {e.mean:8.3f} "
+                    f"[{e.lo:6.3f}, {e.hi:6.3f}] {f.mean:9.1f} "
+                    f"{m.mean:9.1f}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# flat cell parameter extraction (shared by both backends)
+# ---------------------------------------------------------------------------
+
+def _flat_cells(grid: BandGrid) -> dict[str, np.ndarray]:
+    """Flatten the (policy, scale, seed) grid into per-cell parameter
+    columns, policy-major then scale then seed — the cell order that
+    defines both the jax ``fold_in`` cell_index and result reshapes."""
+    P, S, K = grid.shape
+    job_nodes = np.array(
+        [max(1, j // grid.gpus_per_node) for j in grid.resolved_job_gpus()],
+        dtype=np.float64)
+    cluster_nodes = np.array(
+        [max(1, g // grid.gpus_per_node) for g in grid.gpus],
+        dtype=np.float64)
+    rf = grid.r_f_matrix()                       # (S, K)
+    pol = grid.policies
+
+    def tile_policy(vals):
+        # (P,) -> (P, S, K) flat
+        return np.repeat(np.asarray(vals, dtype=np.float64), S * K)
+
+    return {
+        "n_nodes": np.tile(np.repeat(job_nodes, K), P),
+        "cluster_nodes": cluster_nodes,          # (S,) — MTTF only
+        "r_f": np.tile(rf.reshape(-1), P),
+        "dt_cp_s": tile_policy([p.dt_cp_s for p in pol]),
+        "w_cp_s": tile_policy([p.w_cp_s for p in pol]),
+        "u0_s": tile_policy([p.u0_s for p in pol]),
+        "q_s": tile_policy([p.q_s for p in pol]),
+        "seeds": np.tile(np.asarray(grid.seeds, dtype=np.uint32), P * S),
+        "cell_index": np.repeat(np.arange(P * S, dtype=np.uint32), K),
+    }
+
+
+# ---------------------------------------------------------------------------
+# JAX kernels (float32; compiled once per (shape, n_runs, flags))
+# ---------------------------------------------------------------------------
+
+def _analytic_cell(jnp, n_nodes, r_f, u0_s, w_cp_s, q_s, runtime_s,
+                   dt_cp_s):
+    """Closed-form Eq. 1 / Eq. 5 / Eq. 3 for one (vectorized) cell —
+    the jnp mirror of ettr_model.expected_ettr / expected_n_failures /
+    ETTRParams.resolved_dt_s."""
+    lam = n_nodes * r_f                          # failures per day
+    lam_per_s = lam / SECONDS_PER_DAY
+    dt_dy = jnp.sqrt(2.0 * w_cp_s / jnp.maximum(lam_per_s, 1e-18))
+    dt_s = jnp.where(dt_cp_s > 0, dt_cp_s, dt_dy)
+    d = dt_s / SECONDS_PER_DAY
+    u0 = u0_s / SECONDS_PER_DAY
+    w = w_cp_s / SECONDS_PER_DAY
+    q = q_s / SECONDS_PER_DAY
+    R = runtime_s / SECONDS_PER_DAY
+    w_d = jnp.where(d > 0, w / jnp.where(d > 0, d, 1.0), 0.0)
+    num = 1.0 - lam * (u0 + d / 2.0)
+    den = (1.0 + (u0 + q) / R + w_d
+           + lam * q * (1.0 + w_d - d / (2.0 * R)))
+    ettr = jnp.where(num <= 0, 0.0, jnp.clip(num / den, 0.0, 1.0))
+    nf = jnp.where(num <= 0, jnp.inf,
+                   R * lam * (1.0 + u0 / R + w_d)
+                   / jnp.where(num <= 0, 1.0, num))
+    return ettr, nf, dt_s
+
+
+def _make_mc_cell(jax, jnp, lax, n_runs: int, has_queue: bool):
+    """One cell's masked Monte-Carlo: the jnp mirror of
+    montecarlo.simulate_run_ettr with a full-width boolean ``alive``
+    mask replacing numpy's shrinking active-index array.  Under vmap the
+    while_loop runs until every lane's slowest run finishes; ``where``
+    masks keep completed runs frozen.  ``has_queue`` is a *static* flag:
+    grids with no queue term skip the per-attempt queue draws entirely
+    (they would double the RNG cost of the loop for nothing)."""
+
+    def mc_cell(key, lam_s, dt, w, u0, q_s, R_target):
+        free_cp = dt <= 0.0                      # w_cp=0 Daly-Young limit
+        dt_safe = jnp.where(free_cp, 1.0, dt)
+        zeros = jnp.zeros((n_runs,), dtype=jnp.float32)
+        if has_queue:
+            key, kq = jax.random.split(key)
+            queue0 = jax.random.exponential(kq, (n_runs,),
+                                            dtype=jnp.float32) * q_s
+        else:
+            queue0 = zeros
+        state = (zeros, zeros, queue0, zeros,
+                 jnp.ones((n_runs,), dtype=bool), key)
+
+        def cond(state):
+            return jnp.any(state[4])
+
+        def body(state):
+            productive, unproductive, queue, fails, alive, key = state
+            if has_queue:
+                key, k1, k2 = jax.random.split(key, 3)
+            else:
+                key, k1 = jax.random.split(key)
+            R_rem = R_target - productive
+            m = jnp.where(free_cp, 0.0,
+                          jnp.maximum(jnp.ceil(R_rem / dt_safe) - 1.0, 0.0))
+            t_done = u0 + R_rem + m * w
+            draws = jax.random.exponential(k1, (n_runs,),
+                                           dtype=jnp.float32)
+            ttf = jnp.where(lam_s > 0,
+                            draws / jnp.maximum(lam_s, 1e-30), jnp.inf)
+            comp = alive & (ttf > t_done)
+            fail = alive & ~comp
+            # durable progress of a failed attempt: checkpoint j*dt, or
+            # the continuous free-checkpoint limit when dt -> 0
+            prog = jnp.where(
+                free_cp, jnp.clip(ttf - u0, 0.0, R_rem),
+                jnp.clip(jnp.floor((ttf - u0) / (dt_safe + w)), 0.0, m)
+                * dt_safe)
+            productive = jnp.where(comp, R_target,
+                                   jnp.where(fail, productive + prog,
+                                             productive))
+            unproductive = unproductive + jnp.where(
+                comp, u0 + m * w,
+                jnp.where(fail, jnp.maximum(ttf, u0) - prog, 0.0))
+            if has_queue:
+                qdraw = jax.random.exponential(k2, (n_runs,),
+                                               dtype=jnp.float32) * q_s
+                queue = queue + jnp.where(fail, qdraw, 0.0)
+            fails = fails + fail
+            return (productive, unproductive, queue, fails, fail, key)
+
+        productive, unproductive, queue, fails, _, _ = lax.while_loop(
+            cond, body, state)
+        W = productive + unproductive + queue
+        ettrs = productive / W
+        return ettrs.mean(), ettrs.std(), fails.mean()
+
+    return mc_cell
+
+
+@lru_cache(maxsize=None)
+def _grid_kernel(n_runs: int, has_queue: bool, include_mc: bool):
+    """The one-compiled-call grid evaluator: jit of (vmapped closed-form
+    + vmapped MC) over flat per-cell parameter columns.  jax caches one
+    executable per (n_cells, n_runs, has_queue, include_mc)."""
+    jax, jnp, lax = _jax()
+
+    def kernel(n_nodes, r_f, u0_s, w_cp_s, q_s, dt_cp_s, runtime_s,
+               cluster_nodes_rf, seeds, cell_index):
+        ettr, nf, dt_s = _analytic_cell(
+            jnp, n_nodes, r_f, u0_s, w_cp_s, q_s, runtime_s, dt_cp_s)
+        mttf_h = jnp.where(cluster_nodes_rf > 0,
+                           24.0 / jnp.maximum(cluster_nodes_rf, 1e-30),
+                           jnp.inf)
+        if not include_mc:
+            return ettr, nf, dt_s, mttf_h
+        keys = jax.vmap(
+            lambda s, i: jax.random.fold_in(jax.random.PRNGKey(s), i)
+        )(seeds, cell_index)
+        mc = jax.vmap(_make_mc_cell(jax, jnp, lax, n_runs, has_queue))
+        lam_s = n_nodes * r_f / SECONDS_PER_DAY
+        runtime_col = jnp.broadcast_to(runtime_s, lam_s.shape)
+        mc_mean, mc_std, mc_fails = mc(keys, lam_s, dt_s, w_cp_s, u0_s,
+                                       q_s, runtime_col)
+        return ettr, nf, dt_s, mttf_h, mc_mean, mc_std, mc_fails
+
+    return jax.jit(kernel)
+
+
+# scalar single-cell entry points for the dispatched model functions ------
+
+@lru_cache(maxsize=None)
+def _scalar_analytic_kernel():
+    jax, jnp, _ = _jax()
+
+    def kernel(n_nodes, r_f, u0_s, w_cp_s, q_s, runtime_s, dt_cp_s):
+        return _analytic_cell(jnp, n_nodes, r_f, u0_s, w_cp_s, q_s,
+                              runtime_s, dt_cp_s)
+
+    return jax.jit(kernel)
+
+
+def jax_expected_ettr(p) -> float:
+    """JAX_VMAP impl behind ettr_model.expected_ettr (float32)."""
+    k = _scalar_analytic_kernel()
+    ettr, _, _ = k(float(p.n_nodes), p.r_f, p.u0_s, p.w_cp_s, p.q_s,
+                   p.runtime_s, p.dt_cp_s)
+    return float(ettr)
+
+
+def jax_expected_n_failures(p) -> float:
+    """JAX_VMAP impl behind ettr_model.expected_n_failures (float32)."""
+    k = _scalar_analytic_kernel()
+    _, nf, _ = k(float(p.n_nodes), p.r_f, p.u0_s, p.w_cp_s, p.q_s,
+                 p.runtime_s, p.dt_cp_s)
+    return float(nf)
+
+
+def jax_projected_mttf_hours(n_gpus, r_f) -> float:
+    """JAX_VMAP impl behind mttf_model.projected_mttf_hours."""
+    jax, jnp, _ = _jax()
+    n_nodes = max(1, int(n_gpus) // GPUS_PER_NODE)
+    rate = jnp.asarray(n_nodes * r_f, dtype=jnp.float32)
+    return float(jnp.where(rate > 0, 24.0 / jnp.maximum(rate, 1e-30),
+                           jnp.inf))
+
+
+def jax_ettr_contour(r_f_grid, w_cp_grid_s, *, n_nodes: int, u0_s: float,
+                     runtime_s: float):
+    """JAX_VMAP impl behind ettr_model.ettr_contour: the whole
+    (w_cp x r_f) Daly-Young contour in one vmapped call instead of a
+    Python double loop.  Returns (E, DT) with numpy dtype float64 for
+    drop-in consumption."""
+    jax, jnp, _ = _jax()
+    W, R = np.meshgrid(np.asarray(w_cp_grid_s, dtype=np.float64),
+                       np.asarray(r_f_grid, dtype=np.float64),
+                       indexing="ij")
+
+    @jax.jit
+    def kernel(w_flat, r_flat):
+        ettr, _, dt_s = _analytic_cell(
+            jnp, float(n_nodes), r_flat, u0_s, w_flat, 0.0, runtime_s,
+            0.0)
+        return ettr, dt_s
+
+    e, dt = kernel(W.reshape(-1), R.reshape(-1))
+    return (np.asarray(e, dtype=np.float64).reshape(W.shape),
+            np.asarray(dt, dtype=np.float64).reshape(W.shape))
+
+
+def jax_simulate_run_ettr(p, *, n_runs: int, seed: int):
+    """JAX_VMAP impl behind montecarlo.simulate_run_ettr: a one-cell
+    batch of the grid MC kernel (key = fold_in(PRNGKey(seed), 0))."""
+    grid = BandGrid(
+        gpus=(p.n_nodes * GPUS_PER_NODE,), seeds=(seed,),
+        policies=(PolicyCell(name="cell", dt_cp_s=p.dt_cp_s,
+                             w_cp_s=p.w_cp_s, u0_s=p.u0_s, q_s=p.q_s),),
+        r_f=p.r_f, runtime_s=p.runtime_s,
+        job_gpus=(p.n_nodes * GPUS_PER_NODE,), n_runs=n_runs)
+    res = batch_bands(grid, backend=StatBackend.JAX_VMAP, include_mc=True)
+    return (float(res.mc_ettr_mean[0, 0, 0]),
+            float(res.mc_ettr_std[0, 0, 0]),
+            float(res.mc_n_failures[0, 0, 0]))
+
+
+@lru_cache(maxsize=None)
+def _fit_kernel():
+    jax, jnp, _ = _jax()
+
+    def kernel(n_nodes, run_time_s, is_failure, qualifies):
+        node_days = jnp.sum(
+            jnp.where(qualifies, n_nodes * run_time_s / SECONDS_PER_DAY,
+                      0.0))
+        failures = jnp.sum(jnp.where(qualifies & is_failure, 1.0, 0.0))
+        return node_days, failures
+
+    return jax.jit(kernel)
+
+
+def jax_fit_r_f(n_gpus, n_nodes, run_time_s, is_failure, *,
+                min_gpus: int) -> float:
+    """JAX_VMAP impl behind mttf_model.fit_r_f, on pre-extracted job
+    columns (the record->column walk stays in Python either way)."""
+    _, jnp, _ = _jax()
+    qualifies = np.asarray(n_gpus) > min_gpus
+    node_days, failures = _fit_kernel()(
+        jnp.asarray(n_nodes, dtype=jnp.float32),
+        jnp.asarray(run_time_s, dtype=jnp.float32),
+        jnp.asarray(is_failure, dtype=bool),
+        jnp.asarray(qualifies, dtype=bool))
+    node_days = float(node_days)
+    if node_days <= 0:
+        return float("nan")
+    return float(failures) / node_days
+
+
+# ---------------------------------------------------------------------------
+# batch_bands: the grid entry point
+# ---------------------------------------------------------------------------
+
+def batch_bands(grid: BandGrid, *, backend: "StatBackend | str | None"
+                = None, include_mc: bool = False) -> BandGridResult:
+    """Evaluate every (policy, scale, seed) cell of ``grid``: analytic
+    E[ETTR] / E[failures] / resolved checkpoint interval per cell and
+    cluster MTTF per (scale, seed), plus the Monte-Carlo validator per
+    cell when ``include_mc``.
+
+    JAX_VMAP evaluates the whole grid (closed form + MC) in **one
+    compiled call** (``n_compiled_calls == 1``); NUMPY is the per-seed
+    reference loop over the same cells.
+    """
+    import time
+
+    backend = resolve_backend(backend)
+    cols = _flat_cells(grid)
+    P, S, K = grid.shape
+    shape = (P, S, K)
+    rf = grid.r_f_matrix()                        # (S, K)
+    cluster_rate = cols["cluster_nodes"][:, None] * rf   # (S, K)
+    t0 = time.time()
+
+    if backend is StatBackend.JAX_VMAP:
+        has_queue = bool(np.any(cols["q_s"] > 0))
+        kernel = _grid_kernel(grid.n_runs, has_queue, include_mc)
+        f32 = np.float32
+        out = kernel(cols["n_nodes"].astype(f32),
+                     cols["r_f"].astype(f32),
+                     cols["u0_s"].astype(f32),
+                     cols["w_cp_s"].astype(f32),
+                     cols["q_s"].astype(f32),
+                     cols["dt_cp_s"].astype(f32),
+                     np.float32(grid.runtime_s),
+                     cluster_rate.reshape(-1).astype(f32),
+                     cols["seeds"], cols["cell_index"])
+        out = [np.asarray(o, dtype=np.float64) for o in out]
+        if include_mc:
+            ettr, nf, dt_s, mttf, mc_mean, mc_std, mc_fails = out
+        else:
+            ettr, nf, dt_s, mttf = out
+            mc_mean = mc_std = mc_fails = None
+        return BandGridResult(
+            grid=grid, backend=backend, n_compiled_calls=1,
+            ettr=ettr.reshape(shape), n_failures=nf.reshape(shape),
+            mttf_hours=mttf.reshape((S, K)),     # policy-invariant
+            dt_s=dt_s.reshape(shape),
+            mc_ettr_mean=None if mc_mean is None
+            else mc_mean.reshape(shape),
+            mc_ettr_std=None if mc_std is None else mc_std.reshape(shape),
+            mc_n_failures=None if mc_fails is None
+            else mc_fails.reshape(shape),
+            wall_s=time.time() - t0)
+
+    # -- numpy reference: the historical per-seed loop -------------------
+    from repro.core.ettr_model import (ETTRParams, expected_ettr,
+                                       expected_n_failures)
+    from repro.core.montecarlo import simulate_run_ettr
+    from repro.core.mttf_model import projected_mttf_hours
+
+    ettr = np.zeros(shape)
+    nf = np.zeros(shape)
+    dt_s = np.zeros(shape)
+    mc_mean = np.zeros(shape) if include_mc else None
+    mc_std = np.zeros(shape) if include_mc else None
+    mc_fails = np.zeros(shape) if include_mc else None
+    job_nodes = [max(1, j // grid.gpus_per_node)
+                 for j in grid.resolved_job_gpus()]
+    n_calls = 0
+    for pi, pol in enumerate(grid.policies):
+        for si in range(S):
+            for ki, seed in enumerate(grid.seeds):
+                p = ETTRParams(
+                    n_nodes=job_nodes[si], r_f=float(rf[si, ki]),
+                    u0_s=pol.u0_s, w_cp_s=pol.w_cp_s, q_s=pol.q_s,
+                    runtime_s=grid.runtime_s, dt_cp_s=pol.dt_cp_s)
+                ettr[pi, si, ki] = expected_ettr(
+                    p, backend=StatBackend.NUMPY)
+                nf[pi, si, ki] = expected_n_failures(
+                    p, backend=StatBackend.NUMPY)
+                dt_s[pi, si, ki] = p.resolved_dt_s()
+                n_calls += 2
+                if include_mc:
+                    r = simulate_run_ettr(p, n_runs=grid.n_runs, seed=seed,
+                                          backend=StatBackend.NUMPY)
+                    mc_mean[pi, si, ki] = r.ettr_mean
+                    mc_std[pi, si, ki] = r.ettr_std
+                    mc_fails[pi, si, ki] = r.n_failures_mean
+                    n_calls += 1
+    mttf = np.zeros((S, K))
+    for si, g in enumerate(grid.gpus):
+        for ki in range(K):
+            rate = float(rf[si, ki])
+            mttf[si, ki] = (projected_mttf_hours(
+                g, rate, backend=StatBackend.NUMPY) if rate > 0
+                else float("inf"))
+    return BandGridResult(
+        grid=grid, backend=backend, n_compiled_calls=n_calls,
+        ettr=ettr, n_failures=nf, mttf_hours=mttf, dt_s=dt_s,
+        mc_ettr_mean=mc_mean, mc_ettr_std=mc_std, mc_n_failures=mc_fails,
+        wall_s=time.time() - t0)

@@ -10,6 +10,12 @@ per node-day); convenience wrappers accept seconds.
   E[ETTR] ~ (1 - N r_f (u0 + dt/2)) / (1 + w/dt)                      (Eq 2)
 
   Daly-Young optimal interval: dt* = sqrt(2 w / (N r_f))              (Eq 3)
+
+The public estimators dispatch through the ``repro.core.backend`` seam:
+``backend=None`` keeps the process default (numpy float64, the
+authoritative path), ``backend=StatBackend.JAX_VMAP`` (or ``"jax_vmap"``)
+routes to the batched float32 jnp kernels — see docs/stat_backend.md for
+the tolerance policy and ``backend.batch_bands`` for whole-grid calls.
 """
 from __future__ import annotations
 
@@ -61,8 +67,12 @@ def _w_over_dt(w: float, d: float) -> float:
     return w / d if d > 0 else 0.0
 
 
-def expected_n_failures(p: ETTRParams) -> float:
+def expected_n_failures(p: ETTRParams, *, backend=None) -> float:
     """Appendix Eq. 5."""
+    from repro.core import backend as _bk
+
+    if _bk.resolve_backend(backend) is _bk.StatBackend.JAX_VMAP:
+        return _bk.jax_expected_n_failures(p)
     d = p.resolved_dt_s() / SECONDS_PER_DAY
     u0 = p.u0_s / SECONDS_PER_DAY
     w = p.w_cp_s / SECONDS_PER_DAY
@@ -74,8 +84,12 @@ def expected_n_failures(p: ETTRParams) -> float:
     return R * lam * (1.0 + u0 / R + _w_over_dt(w, d)) / denom
 
 
-def expected_ettr(p: ETTRParams) -> float:
+def expected_ettr(p: ETTRParams, *, backend=None) -> float:
     """Eq. 1 (full form, with queue waits)."""
+    from repro.core import backend as _bk
+
+    if _bk.resolve_backend(backend) is _bk.StatBackend.JAX_VMAP:
+        return _bk.jax_expected_ettr(p)
     d = p.resolved_dt_s() / SECONDS_PER_DAY
     u0 = p.u0_s / SECONDS_PER_DAY
     w = p.w_cp_s / SECONDS_PER_DAY
@@ -108,15 +122,26 @@ def ettr_contour(
     u0_s: float = 300.0,
     runtime_s: float = 7 * 86400.0,
     gpus_per_node: int = 8,
+    backend=None,
 ):
     """Figure 10: E[ETTR] over (failure rate x checkpoint write overhead)
     for a 12k-GPU run with Daly-Young intervals.  Returns (r_f_grid,
-    w_cp_grid_s, ettr[len(w), len(r)], dt_opt_s same shape)."""
+    w_cp_grid_s, ettr[len(w), len(r)], dt_opt_s same shape).
+
+    The JAX_VMAP backend evaluates the whole contour in one vmapped call
+    instead of the len(w) x len(r) Python loop."""
+    from repro.core import backend as _bk
+
     if r_f_grid is None:
         r_f_grid = np.logspace(np.log10(0.5e-3), np.log10(20e-3), 41)
     if w_cp_grid_s is None:
         w_cp_grid_s = np.logspace(0, np.log10(1200), 41)
     n_nodes = n_gpus // gpus_per_node
+    if _bk.resolve_backend(backend) is _bk.StatBackend.JAX_VMAP:
+        E, DT = _bk.jax_ettr_contour(r_f_grid, w_cp_grid_s,
+                                     n_nodes=n_nodes, u0_s=u0_s,
+                                     runtime_s=runtime_s)
+        return np.asarray(r_f_grid), np.asarray(w_cp_grid_s), E, DT
     E = np.zeros((len(w_cp_grid_s), len(r_f_grid)))
     DT = np.zeros_like(E)
     for i, w in enumerate(w_cp_grid_s):

@@ -19,7 +19,7 @@ class MCResult:
 
 
 def simulate_run_ettr(p: ETTRParams, *, n_runs: int = 2000,
-                      seed: int = 0) -> MCResult:
+                      seed: int = 0, backend=None) -> MCResult:
     """Simulate job runs with Poisson failures, per-interruption queue +
     restart overheads, periodic checkpoint writes, and measure realized
     ETTR = R / (R + U + Q).
@@ -36,13 +36,28 @@ def simulate_run_ettr(p: ETTRParams, *, n_runs: int = 2000,
         ``j = clip(floor((ttf - u0)/(dt + w)), 0, m)`` and everything else
         (restart, writes, work since the last durable checkpoint) counts as
         unproductive time ``max(ttf, u0) - j*dt``.
+
+    ``w_cp_s=0`` drives the Daly-Young interval to 0 (free continuous
+    checkpoints): a failed attempt then keeps ``clip(ttf - u0, 0, R_rem)``
+    of durable progress instead of a whole number of intervals.
+
+    ``backend=StatBackend.JAX_VMAP`` routes to the batched float32 MC in
+    ``repro.core.backend`` (same attempt process, masked ``while_loop``,
+    ``jax.random`` draws — parity is statistical, not bitwise).
     """
+    from repro.core import backend as _bk
+
+    if _bk.resolve_backend(backend) is _bk.StatBackend.JAX_VMAP:
+        mean, std, nf = _bk.jax_simulate_run_ettr(p, n_runs=n_runs,
+                                                  seed=seed)
+        return MCResult(mean, std, nf, n_runs)
     rng = np.random.default_rng(seed)
     lam_s = p.lam / SECONDS_PER_DAY  # failures per wall-second of running
     dt = p.resolved_dt_s()
     w = p.w_cp_s
     u0 = p.u0_s
     R_target = p.runtime_s
+    free_cp = dt <= 0.0
 
     productive = np.zeros(n_runs)
     unproductive = np.zeros(n_runs)
@@ -52,7 +67,8 @@ def simulate_run_ettr(p: ETTRParams, *, n_runs: int = 2000,
     active = np.arange(n_runs)
     while active.size:
         R_rem = R_target - productive[active]
-        m = np.maximum(np.ceil(R_rem / dt) - 1.0, 0.0)
+        m = np.zeros(active.size) if free_cp \
+            else np.maximum(np.ceil(R_rem / dt) - 1.0, 0.0)
         t_done = u0 + R_rem + m * w
         ttf = rng.exponential(1.0 / lam_s, active.size) if lam_s > 0 \
             else np.full(active.size, np.inf)
@@ -62,9 +78,13 @@ def simulate_run_ettr(p: ETTRParams, *, n_runs: int = 2000,
         unproductive[idx] += u0 + m[done] * w
         idx = active[~done]
         tf = ttf[~done]
-        j = np.clip(np.floor((tf - u0) / (dt + w)), 0.0, m[~done])
-        productive[idx] += j * dt
-        unproductive[idx] += np.maximum(tf, u0) - j * dt
+        if free_cp:
+            prog = np.clip(tf - u0, 0.0, R_rem[~done])
+        else:
+            prog = np.clip(np.floor((tf - u0) / (dt + w)),
+                           0.0, m[~done]) * dt
+        productive[idx] += prog
+        unproductive[idx] += np.maximum(tf, u0) - prog
         fails[idx] += 1
         if p.q_s > 0 and idx.size:
             queue[idx] += rng.exponential(p.q_s, idx.size)

@@ -36,28 +36,50 @@ class MTTFPoint:
     node_days: float
 
 
-def projected_mttf_hours(n_gpus: int, r_f_per_node_day: float) -> float:
+def projected_mttf_hours(n_gpus: int, r_f_per_node_day: float, *,
+                         backend=None) -> float:
     """Theory line: MTTF = (N_nodes * r_f)^-1, in hours."""
+    from repro.core import backend as _bk
+
+    if _bk.resolve_backend(backend) is _bk.StatBackend.JAX_VMAP:
+        return _bk.jax_projected_mttf_hours(n_gpus, r_f_per_node_day)
     n_nodes = max(1, n_gpus // GPUS_PER_NODE)
     return 24.0 / (n_nodes * r_f_per_node_day)
 
 
+def _failure_mask(j: JobRecord, require_hw_attribution: bool) -> bool:
+    """Paper §III failure predicate shared by both fit_r_f backends."""
+    if j.state == JobState.NODE_FAIL:
+        return True
+    return j.state == JobState.FAILED and (
+        j.hw_attributed or not require_hw_attribution)
+
+
 def fit_r_f(jobs: Iterable[JobRecord], *, min_gpus: int = 128,
             failure_states=(JobState.NODE_FAIL,),
-            require_hw_attribution: bool = True) -> float:
+            require_hw_attribution: bool = True,
+            backend=None) -> float:
     """Cluster failure rate from job records (paper method: NODE_FAIL jobs
     plus FAILED jobs with an attributable critical health check, over all
     jobs > ``min_gpus``; divided by node-days of runtime)."""
+    from repro.core import backend as _bk
+
+    if _bk.resolve_backend(backend) is _bk.StatBackend.JAX_VMAP:
+        jobs = list(jobs)
+        return _bk.jax_fit_r_f(
+            np.array([j.n_gpus for j in jobs], dtype=np.float64),
+            np.array([j.n_nodes for j in jobs], dtype=np.float64),
+            np.array([j.run_time for j in jobs], dtype=np.float64),
+            np.array([_failure_mask(j, require_hw_attribution)
+                      for j in jobs], dtype=bool),
+            min_gpus=min_gpus)
     node_days = 0.0
     failures = 0
     for j in jobs:
         if j.n_gpus <= min_gpus:
             continue
         node_days += j.n_nodes * j.run_time / 86400.0
-        if j.state == JobState.NODE_FAIL:
-            failures += 1
-        elif j.state == JobState.FAILED and (
-                j.hw_attributed or not require_hw_attribution):
+        if _failure_mask(j, require_hw_attribution):
             failures += 1
     if node_days <= 0:
         return float("nan")

@@ -89,6 +89,11 @@ class EnsembleAggregator:
     def scales(self) -> list[int]:
         return sorted({g for g, _ in self._cells})
 
+    def seeds(self) -> list[int]:
+        """Distinct seeds across the grid (the seed axis of the batched
+        analytical band grid in ``repro.ensemble.run``)."""
+        return sorted({s for _, s in self._cells})
+
     def cells_at(self, n_gpus: int) -> list[CellStats]:
         """Cells for one scale in seed order (the determinism anchor: any
         completion order collapses to this)."""

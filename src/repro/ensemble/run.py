@@ -17,6 +17,8 @@ import json
 import sys
 import time
 
+import numpy as np
+
 from repro.core.ettr_model import ETTRParams, expected_ettr
 from repro.core.mttf_model import projected_mttf_hours
 from repro.ensemble.aggregate import EnsembleAggregator
@@ -47,6 +49,65 @@ def analytic_ettr(n_gpus: int, r_f: float, *, job_gpus: int = None,
 # model may sit up to 0.10 above the band and 0.05 below it
 MODEL_PAD_LO = 0.05
 MODEL_PAD_HI = 0.10
+
+
+def batched_analytic_bands(agg, *, r_f_nominal: float,
+                           runtime_s: float = 7 * 86400.0,
+                           backend=None, include_mc: bool = False):
+    """Replay-free analytical bands for an ensemble grid: one
+    ``repro.core.backend.batch_bands`` call over the aggregator's
+    (scale x seed) cells, feeding each cell's *fitted* r_f (the Fig. 9
+    method — the model sees the rates the replays actually realized;
+    non-finite fits fall back to ``r_f_nominal``) at the ensemble's
+    nominal cadence (hourly checkpoints, W_CP_S/U0_S overheads,
+    qualifying-size jobs).
+
+    Returns ``({scale: {metric: Band}}, BandGridResult)``.  With the
+    JAX_VMAP backend the whole grid is one compiled call — the instant
+    counterpart of the replay bands it is compared against."""
+    from repro.core.backend import BandGrid, PolicyCell, batch_bands
+    from repro.ensemble.runner import default_min_gpus
+
+    scales = agg.scales()
+    seeds = agg.seeds()
+    if not scales:
+        raise ValueError("empty ensemble: no cells to band")
+    rf = np.full((len(scales), len(seeds)), r_f_nominal, dtype=np.float64)
+    for si, g in enumerate(scales):
+        by_seed = {c.seed: c for c in agg.cells_at(g)}
+        for ki, s in enumerate(seeds):
+            c = by_seed.get(s)
+            if (c is not None and np.isfinite(c.fitted_r_f)
+                    and c.fitted_r_f > 0):
+                rf[si, ki] = c.fitted_r_f
+    grid = BandGrid(
+        gpus=tuple(scales), seeds=tuple(seeds),
+        policies=(PolicyCell(name="ensemble-nominal",
+                             dt_cp_s=DEFAULT_CP_INTERVAL_S,
+                             w_cp_s=W_CP_S, u0_s=U0_S),),
+        r_f=rf, runtime_s=runtime_s,
+        job_gpus=tuple(default_min_gpus(g) for g in scales))
+    res = batch_bands(grid, backend=backend, include_mc=include_mc)
+    return {g: res.bands(0, si) for si, g in enumerate(scales)}, res
+
+
+def oracle_bracket(agg, bands_by_scale, n_gpus: int, *,
+                   metric: str = "ettr_model_nominal"):
+    """Oracle-bracketing contract: the event-driven engine is the exact
+    oracle, and the batched analytical bands must bracket its ensemble
+    band — ``agg.bands(n_gpus)[metric].mean`` must fall inside the
+    batched ETTR band padded by the PR-2 calibration (the engine's
+    realized queue/runtime terms pull it up to ``MODEL_PAD_HI`` below
+    the nominal-cadence model and ``MODEL_PAD_LO`` above it).
+
+    Returns ``(ok, engine_mean, batched_band)``; ``ok`` is None when the
+    engine band is empty (no qualifying runs to bracket)."""
+    eng = agg.bands(n_gpus)[metric]
+    ab = bands_by_scale[n_gpus]["ettr"]
+    if not eng.n:
+        return None, float("nan"), ab
+    ok = ab.lo - MODEL_PAD_HI <= eng.mean <= ab.hi + MODEL_PAD_LO
+    return ok, eng.mean, ab
 
 
 def run_ensemble(gpus_list, seeds, *, horizon_days: float = 8.0,
@@ -83,6 +144,14 @@ def main(argv=None) -> int:
                     help="fault-model v2 scenario pack (see "
                          "repro.configs.scenarios; default: exact-legacy "
                          "independent-v1)")
+    ap.add_argument("--analytic-bands", action="store_true",
+                    help="also print the replay-free batched analytical "
+                         "bands (repro.core.backend.batch_bands fed each "
+                         "cell's fitted r_f) next to the replay bands")
+    ap.add_argument("--stat-backend", default=None,
+                    choices=["numpy", "jax_vmap"],
+                    help="statistical backend for --analytic-bands "
+                         "(default: REPRO_STAT_BACKEND or numpy)")
     ap.add_argument("--json", default=None)
     ap.add_argument("--progress", action="store_true",
                     help="stream per-cell heartbeat lines (completion, "
@@ -155,6 +224,23 @@ def main(argv=None) -> int:
               f"{'in' if in_rf else 'OUTSIDE'} fitted band "
               f"[{b_rf.lo:.2e}, {b_rf.hi:.2e}] "
               f"(MTTF at fitted rate ~{mttf_at_fit:.1f}h)")
+
+    if args.analytic_bands:
+        bands, res = batched_analytic_bands(
+            agg, r_f_nominal=args.r_f, backend=args.stat_backend)
+        print()
+        print(f"batched analytical bands at fitted rates "
+              f"({res.backend.name}, {res.grid.n_cells} cells in "
+              f"{res.wall_s * 1e3:.1f} ms, "
+              f"{res.n_compiled_calls} compiled call(s)):")
+        print(res.table())
+        for g in agg.scales():
+            ok, eng_mean, ab = oracle_bracket(agg, bands, g)
+            if ok is not None:
+                print(f"  {g:6d} GPUs: engine model-anchored ETTR "
+                      f"{eng_mean:.3f} "
+                      f"{'bracketed by' if ok else 'OUTSIDE'} batched band "
+                      f"[{ab.lo:.3f}, {ab.hi:.3f}] (+pads)")
 
     if args.json:
         out = agg.to_json()

@@ -49,6 +49,44 @@ DEFAULT_POLICIES = ("baseline", "lemon_eviction", "checkpoint_optimal")
 DEFAULT_GPUS = (512, 2048, 8192)
 
 
+def model_policy_cell(policy_name: str):
+    """The model-side cadence of a registered policy: what the batched
+    analytical backend should assume a sweep cell's checkpoint/restart
+    knobs are.  Cadence policies map to their static interval (fixed ->
+    3600 s, optimal/adaptive -> the Daly-Young optimum the model resolves
+    itself via ``dt_cp_s=0``); every other policy runs the runtime's
+    default hourly cadence."""
+    from repro.core.backend import PolicyCell
+
+    if policy_name in ("checkpoint_optimal", "checkpoint_adaptive"):
+        dt = 0.0   # model resolves the Daly-Young optimum per cell
+    else:
+        dt = DEFAULT_CP_INTERVAL_S
+    return PolicyCell(name=policy_name, dt_cp_s=dt, w_cp_s=W_CP_S,
+                      u0_s=U0_S)
+
+
+def analytic_policy_bands(policies: Sequence[str],
+                          gpus_list: Sequence[int],
+                          seeds: Sequence[int], *,
+                          r_f: float = 6.5e-3,
+                          runtime_s: float = 7 * 86400.0,
+                          backend=None):
+    """Replay-free what-if table: one ``batch_bands`` call over the whole
+    (policy x scale x seed) sweep grid at the nominal rate — the instant
+    analytical preview of the sweep's checkpoint-cadence axis (policies
+    whose effect the closed-form model cannot see, e.g. lemon eviction,
+    show up at baseline cadence).  Returns the ``BandGridResult``."""
+    from repro.core.backend import BandGrid, batch_bands
+
+    grid = BandGrid(
+        gpus=tuple(gpus_list), seeds=tuple(seeds),
+        policies=tuple(model_policy_cell(p) for p in policies),
+        r_f=r_f, runtime_s=runtime_s,
+        job_gpus=tuple(default_min_gpus(g) for g in gpus_list))
+    return batch_bands(grid, backend=backend)
+
+
 @dataclass
 class CellResult:
     """One (policy, scale, seed) grid cell."""
@@ -248,6 +286,17 @@ def main() -> None:
                     help="fault-model v2 scenario pack (see "
                          "repro.configs.scenarios; default: exact-legacy "
                          "independent-v1)")
+    ap.add_argument("--analytic-bands", action="store_true",
+                    help="print the batched analytical what-if table "
+                         "(repro.core.backend.batch_bands over the same "
+                         "policy x scale grid) before the replay sweep")
+    ap.add_argument("--stat-backend", default=None,
+                    choices=["numpy", "jax_vmap"],
+                    help="statistical backend for --analytic-bands "
+                         "(default: REPRO_STAT_BACKEND or numpy)")
+    ap.add_argument("--r-f", type=float, default=6.5e-3,
+                    help="nominal failure rate for --analytic-bands "
+                         "(failures per node-day)")
     ap.add_argument("--json", default=None)
     ap.add_argument("--save-traces", default=None, metavar="DIR",
                     help="archive each cell's trace as npz under DIR "
@@ -268,6 +317,15 @@ def main() -> None:
 
     policies = args.policies.split(",")
     gpus_list = [int(g) for g in args.gpus.split(",")]
+    if args.analytic_bands:
+        res = analytic_policy_bands(policies, gpus_list,
+                                    range(args.seeds), r_f=args.r_f,
+                                    backend=args.stat_backend)
+        print(f"batched analytical what-if ({res.backend.name}, "
+              f"{res.grid.n_cells} cells in {res.wall_s * 1e3:.1f} ms, "
+              f"{res.n_compiled_calls} compiled call(s)):")
+        print(res.table())
+        print()
     on_result = None
     hb = None
     if args.progress or args.heartbeat:

@@ -1,0 +1,351 @@
+"""Backend-dispatch seam gates (ISSUE 8): JAX_VMAP vs numpy parity.
+
+The numpy float64 path is authoritative; the JAX_VMAP float32 path must
+agree within the documented tolerance policy (docs/stat_backend.md):
+closed-form math to ~5e-4 relative, Monte-Carlo distributionally (the
+two backends draw from different RNG streams by design).  Also gated
+here: the oracle-bracketing contract on every named fault-model v2
+scenario pack, the engine bit-identity digest drift guard, the
+``--compare`` new-metric skip semantics, and the stat_bench smoke.
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.backend import (BACKEND_MAPPING, Band, BandGrid, PolicyCell,
+                                StatBackend, batch_bands, get_backend,
+                                jax_available, resolve_backend, use_backend)
+from repro.core.ettr_model import (ETTRParams, ettr_contour, expected_ettr,
+                                   expected_n_failures)
+from repro.core.metrics import JobRecord, JobState
+from repro.core.montecarlo import simulate_run_ettr
+from repro.core.mttf_model import fit_r_f, projected_mttf_hours
+
+needs_jax = pytest.mark.skipif(not jax_available(),
+                               reason="jax not importable")
+
+NP = StatBackend.NUMPY
+JX = StatBackend.JAX_VMAP
+
+
+def _subproc(repo_root, args, timeout=300):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo_root, "src")
+    return subprocess.run([sys.executable, *args], cwd=repo_root, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+# -- dispatch seam ----------------------------------------------------------
+def test_backend_registry_and_resolution():
+    assert set(BACKEND_MAPPING) == {"numpy", "jax_vmap"}
+    assert resolve_backend("numpy") is NP
+    assert resolve_backend(" NumPy ") is NP      # normalized
+    assert resolve_backend(NP) is NP
+    assert resolve_backend(None) is get_backend()
+    with pytest.raises(ValueError, match="jax_vmap"):
+        resolve_backend("cuda")
+    with pytest.raises(TypeError):
+        resolve_backend(3.14)
+
+
+def test_use_backend_scoped_override():
+    prev = get_backend()
+    with use_backend("numpy") as bk:
+        assert bk is NP
+        assert get_backend() is NP
+        assert resolve_backend(None) is NP
+    assert get_backend() is prev
+
+
+def test_env_var_selects_default_backend(repo_root):
+    code = ("from repro.core.backend import get_backend, StatBackend; "
+            "assert get_backend() is StatBackend.JAX_VMAP")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo_root, "src")
+    env["REPRO_STAT_BACKEND"] = "jax_vmap"
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    env["REPRO_STAT_BACKEND"] = "cuda"
+    code_bad = ("from repro.core.backend import get_backend\n"
+                "try:\n    get_backend()\n"
+                "except ValueError:\n    raise SystemExit(0)\n"
+                "raise SystemExit(1)")
+    proc = subprocess.run([sys.executable, "-c", code_bad], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# -- closed-form parity (randomized over the supported envelope) -----------
+@needs_jax
+@given(n_nodes=st.integers(1, 512), r_f=st.floats(0.0, 1e-2),
+       w_cp=st.floats(0.0, 600.0), u0=st.floats(0.0, 900.0),
+       q=st.floats(0.0, 3600.0), dt=st.sampled_from([0.0, 1800.0, 3600.0]))
+def test_analytic_ettr_parity(n_nodes, r_f, w_cp, u0, q, dt):
+    """expected_ettr / expected_n_failures agree across backends over a
+    randomized parameter grid, including the pinned edge examples
+    (w_cp_s=0 free checkpoints, r_f=0 no failures)."""
+    p = ETTRParams(n_nodes=n_nodes, r_f=r_f, u0_s=u0, w_cp_s=w_cp, q_s=q,
+                   dt_cp_s=dt)
+    e_np = expected_ettr(p, backend=NP)
+    e_jx = expected_ettr(p, backend=JX)
+    assert e_jx == pytest.approx(e_np, rel=5e-4, abs=5e-5)
+    f_np = expected_n_failures(p, backend=NP)
+    f_jx = expected_n_failures(p, backend=JX)
+    if math.isinf(f_np):
+        assert math.isinf(f_jx)
+    else:
+        assert f_jx == pytest.approx(f_np, rel=1e-3, abs=1e-3)
+
+
+@needs_jax
+@given(n_gpus=st.integers(8, 131072), r_f=st.floats(1e-4, 2e-2))
+def test_mttf_parity(n_gpus, r_f):
+    m_np = projected_mttf_hours(n_gpus, r_f, backend=NP)
+    m_jx = projected_mttf_hours(n_gpus, r_f, backend=JX)
+    assert m_jx == pytest.approx(m_np, rel=5e-4)
+
+
+@needs_jax
+def test_contour_parity():
+    """Figure 10 contour: one vmapped call matches the numpy double loop
+    over the default 41x41 grid."""
+    r_np, w_np, E_np, DT_np = ettr_contour(backend=NP)
+    r_jx, w_jx, E_jx, DT_jx = ettr_contour(backend=JX)
+    np.testing.assert_allclose(r_jx, r_np)
+    np.testing.assert_allclose(w_jx, w_np)
+    np.testing.assert_allclose(E_jx, E_np, rtol=5e-4, atol=5e-5)
+    np.testing.assert_allclose(DT_jx, DT_np, rtol=5e-4)
+
+
+@needs_jax
+def test_fit_r_f_parity():
+    """The masked-sum jax fit matches the numpy loop on a synthetic job
+    log with a size mix straddling min_gpus (and agrees the log is empty
+    when it is)."""
+    rng = np.random.default_rng(11)
+    states = [JobState.COMPLETED, JobState.NODE_FAIL, JobState.FAILED,
+              JobState.CANCELLED]
+    jobs = []
+    for i in range(300):
+        start = float(rng.uniform(0, 1e5))
+        jobs.append(JobRecord(
+            job_id=i, run_id=i, n_gpus=int(rng.choice([8, 64, 256, 1024])),
+            submit_t=start, start_t=start,
+            end_t=start + float(rng.uniform(600, 2e5)),
+            state=states[int(rng.integers(len(states)))],
+            hw_attributed=bool(rng.integers(2))))
+    r_np = fit_r_f(jobs, backend=NP)
+    r_jx = fit_r_f(jobs, backend=JX)
+    assert math.isfinite(r_np) and r_np > 0
+    assert r_jx == pytest.approx(r_np, rel=1e-6)
+    assert math.isnan(fit_r_f([], backend=NP))
+    assert math.isnan(fit_r_f([], backend=JX))
+
+
+# -- Monte-Carlo parity (distributional: different RNG streams) ------------
+@needs_jax
+def test_mc_parity_nominal():
+    p = ETTRParams(n_nodes=64, r_f=6.5e-3, dt_cp_s=3600.0)
+    r_np = simulate_run_ettr(p, n_runs=1000, seed=3, backend=NP)
+    r_jx = simulate_run_ettr(p, n_runs=1000, seed=3, backend=JX)
+    assert abs(r_jx.ettr_mean - r_np.ettr_mean) < 0.03
+    assert abs(r_jx.n_failures_mean - r_np.n_failures_mean) < 0.5
+
+
+@needs_jax
+def test_mc_parity_free_checkpoints():
+    """w_cp_s=0 drives the Daly-Young interval to 0 (continuous free
+    checkpoints) — the limit that used to divide by zero in numpy and
+    needs the dt_safe guard in the jitted kernel."""
+    p = ETTRParams(n_nodes=64, r_f=6.5e-3, w_cp_s=0.0, dt_cp_s=0.0)
+    r_np = simulate_run_ettr(p, n_runs=1000, seed=5, backend=NP)
+    r_jx = simulate_run_ettr(p, n_runs=1000, seed=5, backend=JX)
+    assert r_np.ettr_mean > 0.97          # near-lossless by construction
+    assert abs(r_jx.ettr_mean - r_np.ettr_mean) < 0.02
+
+
+@needs_jax
+def test_mc_parity_r_f_zero_is_deterministic():
+    """r_f=0: no failures ever, so the MC collapses to a deterministic
+    value both backends must hit within float32."""
+    p = ETTRParams(n_nodes=64, r_f=0.0, dt_cp_s=3600.0)
+    r_np = simulate_run_ettr(p, n_runs=200, seed=0, backend=NP)
+    r_jx = simulate_run_ettr(p, n_runs=200, seed=0, backend=JX)
+    assert r_np.n_failures_mean == 0.0
+    assert r_jx.n_failures_mean == 0.0
+    assert r_jx.ettr_mean == pytest.approx(r_np.ettr_mean, rel=1e-5)
+
+
+# -- batched band grids -----------------------------------------------------
+def _backends():
+    return [NP] + ([JX] if jax_available() else [])
+
+
+def test_degenerate_one_cell_grid():
+    """A single-seed, single-scale, single-policy grid is a valid batch:
+    bands have n=1, std=0, and the jax path still compiles one call."""
+    grid = BandGrid(gpus=(1024,), seeds=(7,))
+    assert grid.shape == (1, 1, 1)
+    for bk in _backends():
+        res = batch_bands(grid, backend=bk, include_mc=True)
+        bands = res.bands(0, 0)
+        assert bands["ettr"].n == 1
+        assert bands["ettr"].std == 0.0
+        assert 0.0 < bands["ettr"].mean <= 1.0
+        assert math.isfinite(bands["mttf_hours"].mean)
+        assert "mc_ettr" in bands
+        if bk is JX:
+            assert res.n_compiled_calls == 1
+
+
+@needs_jax
+def test_batch_grid_parity_randomized():
+    """Full-grid parity on a randomized policy x scale x seed grid with a
+    per-cell r_f matrix: analytic ETTR / E[failures] / MTTF / resolved
+    dt agree within the float32 tolerance policy."""
+    rng = np.random.default_rng(2)
+    seeds = tuple(range(8))
+    gpus = (512, 2048)
+    grid = BandGrid(
+        gpus=gpus, seeds=seeds,
+        policies=(PolicyCell("hourly"),
+                  PolicyCell("daly", dt_cp_s=0.0),
+                  PolicyCell("queued", q_s=1800.0)),
+        r_f=rng.uniform(2e-3, 1.2e-2, size=(len(gpus), len(seeds))))
+    res_np = batch_bands(grid, backend=NP)
+    res_jx = batch_bands(grid, backend=JX)
+    assert res_jx.n_compiled_calls == 1
+    np.testing.assert_allclose(res_jx.ettr, res_np.ettr,
+                               rtol=5e-4, atol=5e-5)
+    fin = np.isfinite(res_np.n_failures)
+    np.testing.assert_array_equal(np.isfinite(res_jx.n_failures), fin)
+    np.testing.assert_allclose(res_jx.n_failures[fin],
+                               res_np.n_failures[fin], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(res_jx.mttf_hours, res_np.mttf_hours,
+                               rtol=5e-4)
+    np.testing.assert_allclose(res_jx.dt_s, res_np.dt_s, rtol=5e-4)
+
+
+@needs_jax
+def test_batch_grid_single_seed_parity():
+    """Single-seed batches (K=1) exercise the degenerate band-axis
+    reshapes on both backends."""
+    grid = BandGrid(gpus=(1024, 4096), seeds=(42,),
+                    policies=(PolicyCell("hourly"),))
+    res_np = batch_bands(grid, backend=NP)
+    res_jx = batch_bands(grid, backend=JX)
+    assert res_np.ettr.shape == res_jx.ettr.shape == (1, 2, 1)
+    np.testing.assert_allclose(res_jx.ettr, res_np.ettr,
+                               rtol=5e-4, atol=5e-5)
+
+
+@needs_jax
+def test_batch_mc_statistical_consistency():
+    """include_mc=True: per-cell MC means from the two backends' distinct
+    RNG streams stay within sampling noise of each other."""
+    seeds = tuple(range(6))
+    grid = BandGrid(gpus=(1024, 4096), seeds=seeds,
+                    r_f=np.linspace(5e-3, 8e-3, len(seeds)), n_runs=256)
+    res_np = batch_bands(grid, backend=NP, include_mc=True)
+    res_jx = batch_bands(grid, backend=JX, include_mc=True)
+    assert res_jx.n_compiled_calls == 1
+    assert np.max(np.abs(res_jx.mc_ettr_mean - res_np.mc_ettr_mean)) < 0.06
+    assert np.max(np.abs(res_jx.mc_n_failures
+                         - res_np.mc_n_failures)) < 1.0
+
+
+def test_band_contains_pads():
+    b = Band("x", n=3, mean=0.5, std=0.1, p5=0.4, p50=0.5, p95=0.6,
+             lo=0.4, hi=0.6)
+    assert b.contains(0.5)
+    assert not b.contains(0.35)
+    assert b.contains(0.35, pad_lo=0.1)
+    assert not b.contains(float("nan"))
+
+
+# -- oracle bracketing: the engine stays the exact oracle -------------------
+def test_oracle_bracketing_all_scenario_packs():
+    """For every named fault-model v2 scenario pack, the batched
+    analytical bands (both backends) bracket the engine ensemble's
+    model-anchored ETTR band at toy scale — the quick-mode form of the
+    fig11 containment contract."""
+    from repro.configs.scenarios import available_scenarios
+    from repro.ensemble.run import (batched_analytic_bands, oracle_bracket,
+                                    run_ensemble)
+
+    packs = available_scenarios()
+    assert len(packs) == 4
+    for scen in packs:
+        agg = run_ensemble([256], range(2), horizon_days=2.0, r_f=6.5e-3,
+                           min_hours=4.0, procs=1, scenario=scen)
+        assert agg.n_cells == 2
+        for bk in _backends():
+            bands, res = batched_analytic_bands(agg, r_f_nominal=6.5e-3,
+                                                backend=bk)
+            ok, eng_mean, ab = oracle_bracket(agg, bands, 256)
+            assert ok is not False, \
+                (f"{scen}/{bk}: engine {eng_mean:.3f} outside batched "
+                 f"[{ab.lo:.3f}, {ab.hi:.3f}] + pads")
+            if bk is JX:
+                assert res.n_compiled_calls == 1
+
+
+# -- tooling satellites -----------------------------------------------------
+def test_engine_digests_no_drift(repo_root):
+    """Tier-1 digest-drift guard: the sanctioned recapture tool agrees
+    the committed ENGINE_DIGESTS match the current engine (a mismatch
+    here means an engine behavior change rode along unreviewed)."""
+    proc = _subproc(repo_root,
+                    ["-m", "tests.capture_digests", "--check"])
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "already match" in proc.stdout
+
+
+def test_compare_skips_new_metrics(tmp_path, capsys):
+    """benchmarks.run --compare: metrics/benchmarks present in the
+    current run but absent from the baseline are noted and skipped (not
+    gated), while genuine throughput drops still count."""
+    from benchmarks.run import compare_results
+
+    def _res(rows):
+        return {"rows": rows, "checks": [], "wall_s": 0.0, "labels": {}}
+
+    base = {"meta": {"git_sha": "feedc0de"},
+            "benchmarks": {"sim_bench": _res([["a_jobs_per_sec", "100", ""]])}}
+    path = tmp_path / "base.json"
+    path.write_text(json.dumps(base))
+    current = {
+        "sim_bench": _res([["a_jobs_per_sec", "50", ""],
+                           ["b_cells_per_sec", "1", ""]]),
+        "stat_bench": _res([["c_cells_per_sec", "5", ""]]),
+    }
+    n_reg = compare_results(str(path), current)
+    out = capsys.readouterr().out
+    assert n_reg == 1                     # the real 50% drop still gates
+    assert "REGRESSION" in out
+    assert "sim_bench.b_cells_per_sec" in out and "new metric" in out
+    assert "stat_bench: new benchmark" in out
+    assert "1 new metrics skipped" in out
+
+
+def test_stat_bench_quick_smoke(repo_root):
+    """Tier-1 guard: `benchmarks.run --only stat_bench --quick` runs
+    end-to-end and (with jax present) proves the one-compiled-call
+    claim.  The timing checks are WARN-level reports, not gated here."""
+    proc = _subproc(repo_root,
+                    ["-m", "benchmarks.run", "--only", "stat_bench",
+                     "--quick"])
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "stat_bench" in proc.stdout
+    assert "cells_per_sec" in proc.stdout
+    if jax_available():
+        assert ("[PASS] MC+analytic seed x scale grid evaluated in one "
+                "compiled call" in proc.stdout), proc.stdout
