@@ -1,0 +1,135 @@
+"""Fork-plan speedup: prefix-sharing sweeps vs cold-start replays.
+
+The paper's mitigation what-ifs (§IV) replay the same cluster under many
+policies; the fork plan (``repro.mitigations.forkplan``) runs the shared
+baseline prefix once per (scale, seed) and forks each policy cell at its
+first intervention.  This benchmark runs the checkpoint-cadence what-if
+grid (paper §II-D / Fig. 10 — 3 policies x 3 scales x seeds at a
+multi-month horizon) both ways through ``repro.mitigations.sweep`` and
+reports:
+
+  * ``fork_cells_per_sec`` — the gated throughput row (``--compare``
+    fails on a >20% drop);
+  * ``grid_speedup_x`` — whole-grid wall ratio (bounded by
+    n_policies: the probe is itself one full replay per group);
+  * ``policy_cell_speedup_x`` — the marginal ratio on non-probe cells
+    (sum of cold walls over sum of forked/shared walls), the >=5x
+    acceptance target: cadence policies are engine-inert, so their
+    cells score straight off the probe trace;
+
+plus a mixed grid with a mutating policy (``lemon_eviction``) reported
+for context — an early diverger pays most of the horizon back, which is
+exactly what the escape hatch and the marginal metric make visible.
+
+Quick mode shrinks to 2 scales x 2 seeds x 4 days and additionally
+asserts fork-vs-cold ``CellResult`` equality (tier-1 pytest smoke; the
+full equality matrix lives in tests/test_forking.py).
+"""
+import time
+
+from benchmarks import common
+from benchmarks.common import benchmark
+
+# acceptance (ISSUE 9): non-probe policy cells >=5x cheaper under the
+# fork plan on the cadence what-if grid
+ACCEPT_POLICY_CELL_SPEEDUP = 5.0
+
+CADENCE_POLICIES = ("baseline", "checkpoint_fixed", "checkpoint_optimal")
+# per-cell wall floor (s) when summing fork-side walls: shared cells
+# round to 0.00 and would divide out to infinity
+_WALL_FLOOR_S = 0.005
+
+
+def _run_grid(policies, gpus, seeds, days, *, fork):
+    from repro.mitigations.sweep import sweep
+
+    t0 = time.time()
+    res = sweep(policies=policies, gpus_list=gpus, seeds=range(seeds),
+                horizon_days=days, procs=0, fork=fork)
+    return res, time.time() - t0
+
+
+def _noncarrier_wall(cells):
+    """Sum of cell walls excluding the probe-carrying (or baseline) cell
+    of each (scale, seed) group, floored per cell at _WALL_FLOOR_S."""
+    total = 0.0
+    for c in cells:
+        fk = c.extra.get("fork")
+        if fk is not None:
+            if fk.get("carries_probe"):
+                continue
+        elif c.policy == "baseline":
+            continue
+        total += max(c.wall_s, _WALL_FLOOR_S)
+    return total
+
+
+def _strip(cell):
+    d = {k: v for k, v in cell.__dict__.items() if k != "wall_s"}
+    d["extra"] = {k: v for k, v in cell.extra.items() if k != "fork"}
+    return d
+
+
+@benchmark("fork_bench")
+def run(rep):
+    if common.QUICK:
+        gpus, seeds, days = [256, 512], 2, 4.0
+    else:
+        gpus, seeds, days = [512, 2048, 8192], 2, 60.0
+    rep.label("grid", f"{len(CADENCE_POLICIES)}pol_x_{len(gpus)}scale_"
+                      f"x_{seeds}seed_{days:g}d")
+
+    fork_res, fork_wall = _run_grid(CADENCE_POLICIES, gpus, seeds, days,
+                                    fork=True)
+    cold_res, cold_wall = _run_grid(CADENCE_POLICIES, gpus, seeds, days,
+                                    fork=False)
+    n_cells = len(fork_res.cells)
+    marginal = (_noncarrier_wall(cold_res.cells)
+                / _noncarrier_wall(fork_res.cells))
+    n_shared = sum(1 for c in fork_res.cells
+                   if c.extra.get("fork", {}).get("mode") == "shared")
+    n_forked = n_cells - n_shared
+    n_snaps = sum(c.extra["fork"].get("n_snapshots", 0)
+                  for c in fork_res.cells if "fork" in c.extra)
+    rep.add("grid_cells", n_cells)
+    rep.add("fork_wall_s", round(fork_wall, 2))
+    rep.add("cold_wall_s", round(cold_wall, 2))
+    rep.add("fork_cells_per_sec",
+            round(n_cells / max(fork_wall, 1e-9), 2))
+    rep.add("cold_cells_per_sec",
+            round(n_cells / max(cold_wall, 1e-9), 2))
+    rep.add("grid_speedup_x", round(cold_wall / max(fork_wall, 1e-9), 2),
+            f"bounded by n_policies={len(CADENCE_POLICIES)}")
+    rep.add("policy_cell_speedup_x", round(marginal, 1),
+            "non-probe cells: cold walls / forked+shared walls")
+    rep.add("n_shared_cells", n_shared)
+    rep.add("n_forked_cells", n_forked)
+    rep.add("n_probe_snapshots", n_snaps,
+            "cadence grid is engine-inert: snapshots stop after t=0")
+    rep.check("every grid cell completed",
+              n_cells == len(CADENCE_POLICIES) * len(gpus) * seeds
+              and len(cold_res.cells) == n_cells,
+              f"{n_cells} fork / {len(cold_res.cells)} cold")
+
+    if common.QUICK:
+        # tier-1 smoke: fork and cold grids must agree cell for cell
+        fk = sorted((_strip(c) for c in fork_res.cells),
+                    key=lambda d: (d["n_gpus"], d["policy"], d["seed"]))
+        cd = sorted((_strip(c) for c in cold_res.cells),
+                    key=lambda d: (d["n_gpus"], d["policy"], d["seed"]))
+        rep.check("fork cells == cold cells (wall/provenance aside)",
+                  fk == cd, f"{n_cells} cells")
+    else:
+        rep.check(
+            f"policy cells >={ACCEPT_POLICY_CELL_SPEEDUP:.0f}x cheaper "
+            f"under the fork plan", marginal >= ACCEPT_POLICY_CELL_SPEEDUP,
+            f"{marginal:.1f}x")
+
+        # context: a mutating policy mix (lemon forks mid-run and pays
+        # its divergent suffix) — reported, not gated
+        mixed = ("baseline", "checkpoint_optimal", "lemon_eviction")
+        mf, mf_wall = _run_grid(mixed, [gpus[0]], seeds, days, fork=True)
+        mc, mc_wall = _run_grid(mixed, [gpus[0]], seeds, days, fork=False)
+        rep.add("mixed_grid_speedup_x",
+                round(mc_wall / max(mf_wall, 1e-9), 2),
+                f"{'+'.join(mixed)} at {gpus[0]} GPUs")

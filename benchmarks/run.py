@@ -37,8 +37,8 @@ from benchmarks import (ensemble_bench, fig3_job_status, fig4_attribution,  # no
                         fig5_timeline, fig6_job_mix, fig7_mttf,
                         fig8_goodput_loss, fig9_ettr, fig10_contours,
                         fig11_scale_projection, fig12_adaptive_routing,
-                        fig13_mitigations, kernel_bench, obs_bench,
-                        roofline_table, runtime_ettr, sim_bench,
+                        fig13_mitigations, fork_bench, kernel_bench,
+                        obs_bench, roofline_table, runtime_ettr, sim_bench,
                         stat_bench, table2_lemon, trace_bench)
 from benchmarks import common
 from benchmarks.common import all_benchmarks
@@ -46,6 +46,31 @@ from benchmarks.common import all_benchmarks
 
 _THROUGHPUT_SUFFIXES = ("jobs_per_sec", "cells_per_sec")
 _MAX_THROUGHPUT_DROP = 0.20
+
+_REGEN_HINT = (
+    "regenerate it from a clean tree with:\n"
+    "  PYTHONPATH=src python -m benchmarks.run "
+    "--only sim_bench,ensemble_bench,stat_bench,fork_bench "
+    "--json BENCH_sim.json")
+
+
+def _load_baseline(path: str) -> dict:
+    """Read a ``--compare`` baseline, failing fast with a regeneration
+    recipe when the file is missing or not a benchmark-run json."""
+    try:
+        with open(path) as f:
+            base = json.load(f)
+    except FileNotFoundError:
+        sys.exit(f"error: --compare baseline {path!r} does not exist; "
+                 f"{_REGEN_HINT}")
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"error: --compare baseline {path!r} is unreadable "
+                 f"({e}); {_REGEN_HINT}")
+    if not isinstance(base, dict) or "benchmarks" not in base:
+        sys.exit(f"error: --compare baseline {path!r} has no "
+                 f"'benchmarks' section (not a benchmarks.run --json "
+                 f"file?); {_REGEN_HINT}")
+    return base
 
 
 def _numeric(v):
@@ -59,8 +84,7 @@ def _numeric(v):
 def compare_results(baseline_path: str, results: dict) -> int:
     """Print per-metric deltas vs a ``--json`` baseline file; return the
     number of >20% throughput regressions (jobs/sec, cells/sec)."""
-    with open(baseline_path) as f:
-        base = json.load(f)
+    base = _load_baseline(baseline_path)
     sha = base.get("meta", {}).get("git_sha", "?")
     print(f"\n=== regression diff vs {baseline_path} (baseline git {sha}) "
           f"===")
@@ -134,9 +158,9 @@ def main() -> None:
         ap.error("--profile needs --only to pick what to profile; "
                  f"registered benchmarks:\n  {names}")
     if args.compare and only is None:
-        # default the run to the baseline's benchmark set
-        with open(args.compare) as f:
-            only = set(json.load(f).get("benchmarks", {}))
+        # default the run to the baseline's benchmark set (fails fast on
+        # a missing/unreadable baseline, before any benchmark runs)
+        only = set(_load_baseline(args.compare)["benchmarks"])
     if only:
         unknown = only - set(all_benchmarks())
         if unknown:

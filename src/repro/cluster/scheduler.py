@@ -53,11 +53,15 @@ Hot-path v3 (columnar-store pass, on top of v2):
     arrays — ``free`` (GPUs), ``_bucket_of``, and a single merged
     ``_node_state`` status array (ACTIVE / DRAINING / DOWN replaces the
     two boolean arrays, halving status loads on the release path).
-    Bucket *membership* stays as per-bucket sets: which member a bucket
-    yields is part of the frozen event-sequence contract (sha256-gated in
-    tests/test_sim_perf.py), so the index is maintained as O(1) set ops
-    while the status/free arrays are plain SoA.  ``node_ok`` /
-    ``node_draining`` remain as derived read-only views.
+    Bucket *membership* is a per-bucket insertion-ordered dict (value
+    ``None``): which member a bucket yields is part of the frozen
+    event-sequence contract (sha256-gated in tests/test_sim_perf.py),
+    and dict order — unlike set table order — survives
+    ``copy.deepcopy``/pickle exactly, which ``snapshot()``/``fork()``
+    depend on for bit-identical resume (see docs/replay_forking.md).
+    The index is still maintained as O(1) membership ops while the
+    status/free arrays are plain SoA.  ``node_ok`` / ``node_draining``
+    remain as derived read-only views.
   * **batch-drained main loop**: consecutive arrivals and consecutive
     event-heap pops are drained in inner loops that only re-check the
     competing streams' head timestamps when they can actually have
@@ -77,11 +81,18 @@ Hot-path v3 (columnar-store pass, on top of v2):
     every completed chunk to npz part files, so a full 330-day replay
     records in near-constant RSS (see ``repro.trace.store``).
 
-The v3 pass preserves the event order, RNG consumption order, and set-op
-sequence of the v2 engine bit-for-bit — sha256 digests of the full
+The engine's event order, RNG consumption order, and membership-op
+sequence are frozen — sha256 digests of the full
 record/fault/drain/lemon sequences plus RNG stream positions are pinned
 across five configs (incl. lemon eviction, RSC-1 scale, and a
-spill-enabled run) in tests/test_sim_perf.py.
+spill-enabled run) in tests/test_sim_perf.py.  The digests were
+re-captured (``python -m tests.capture_digests``) when bucket/node-job
+membership moved from sets to insertion-ordered dicts for replay
+forking: the member yielded by ``popitem``/``next(iter(...))`` differs
+from the old set table order, but the new order is *restorable* —
+deepcopy/pickle preserve dict insertion order exactly, so a forked run
+replays bit-identically (set layout depends on unreconstructible hash
+table history; see docs/replay_forking.md).
 
 Fault-model v2 (see docs/failure_model.md): per-node fault chains carry a
 *generation* — the heap entry is ``(t, node_id, gen)`` and only the
@@ -137,6 +148,7 @@ per hook site (overhead-benchmarked in benchmarks/obs_bench.py).
 """
 from __future__ import annotations
 
+import copy
 import gc
 import heapq
 import itertools
@@ -227,6 +239,59 @@ class Running:
     finish_seq: int  # sequence id of the scheduled finish event (for cancel)
 
 
+# bump when the snapshot state inventory changes shape (a restore of an
+# older snapshot must fail loudly, not resume with missing state)
+SNAPSHOT_VERSION = 1
+
+
+@dataclass
+class EngineSnapshot:
+    """Serialized ``ClusterSim`` live state (see ``ClusterSim.snapshot``).
+
+    ``mut`` holds the deep-copied mutable object graph (heaps, queues,
+    SoA node arrays, histories, logs) — isolated from the live sim at
+    snapshot time, and deep-copied *again* on every restore so sibling
+    forks never share mutable state.  The columnar job/fault chunks are
+    the exception: they are immutable once flushed, so snapshots and
+    forks share them by reference (copy-on-write — a fork only ever
+    appends new chunks to its own list).  Picklable, so snapshots can
+    ship across the spawn worker pool.
+    """
+
+    version: int
+    # reconstruction config (restore rebuilds a ClusterSim from these,
+    # then overwrites its state)
+    spec: ClusterSpec
+    horizon_days: float
+    seed: int
+    scenario: object
+    episodes: tuple
+    check_introduced: dict
+    enable_lemon: bool
+    lemon_scan_period_days: float
+    detector: LemonDetector
+    # dynamic state
+    started: bool
+    t: float
+    arr_next: int
+    mut: dict
+    bucket_mask: int
+    free_epoch: int
+    full_epoch: int
+    next_seq: int
+    next_job_id: int
+    next_fault_id: int
+    rng_state: dict
+    faults_rng_state: dict
+    exp_buf: np.ndarray
+    exp_ptr: int
+    domain_rng_state: Optional[dict]
+    interners: dict
+    jobs_log: tuple
+    faults_log: tuple
+    recorder_state: Optional[dict]
+
+
 class ClusterSim:
     def __init__(self, spec: ClusterSpec, *, horizon_days: float = 30.0,
                  seed: int = 0, enable_lemon_detection: bool = False,
@@ -278,12 +343,16 @@ class ClusterSim:
         # SoA node state: parallel flat arrays indexed by node id
         self.free = [g] * n
         self._node_state = [N_ACTIVE] * n
-        self.node_jobs: list[set] = [set() for _ in range(n)]
+        # insertion-ordered dicts (value None) rather than sets: the
+        # member a bucket / node-job walk yields is digest-pinned, and
+        # dict iteration order survives deepcopy/pickle exactly (set
+        # table layout does not), which snapshot()/fork() require
+        self.node_jobs: list[dict] = [{} for _ in range(n)]
         # free-GPU bucket index: _buckets[f] holds schedulable nodes with
         # exactly f free GPUs (f >= 1); _bucket_of[i] = -1 means unindexed
         # (node down, draining, or fully allocated)
-        self._buckets: list[set] = [set() for _ in range(g + 1)]
-        self._buckets[g] = set(range(n))
+        self._buckets: list[dict] = [{} for _ in range(g + 1)]
+        self._buckets[g] = dict.fromkeys(range(n))
         self._bucket_of = [g] * n
         # occupancy bitmask over the bucket index (bit f set iff
         # _buckets[f] is non-empty): tightest-fit placement finds its
@@ -365,6 +434,15 @@ class ClusterSim:
         self._armed: list[float] = []   # outstanding sched-pass ticks (heap)
         self._pass_t = -1.0             # tick of the pass currently running
         self._trace_spill_dir: Optional[str] = None
+        # replay forking (see snapshot()/restore()): _arr_next counts the
+        # arrivals consumed so far (the workload cursor a restored run
+        # regenerates its arrival stream from); _resumed routes run()
+        # into the resume path (skip init + hook binds, reuse restored
+        # heaps); _started distinguishes a t=0 snapshot (full cold init
+        # on restore) from a mid-run one
+        self._arr_next = 0
+        self._started = False
+        self._resumed = False
 
     # -- columnar-log views (API compatibility) -------------------------
     @property
@@ -457,11 +535,11 @@ class ClusterSim:
         if b != old:
             if old >= 0:
                 s = self._buckets[old]
-                s.discard(i)
+                s.pop(i, None)
                 if not s:
                     self._bucket_mask &= ~(1 << old)
             if b >= 0:
-                self._buckets[b].add(i)
+                self._buckets[b][i] = None
                 self._bucket_mask |= 1 << b
                 self._free_epoch += 1   # capacity became reachable
                 if b == self._g:
@@ -480,7 +558,7 @@ class ClusterSim:
             bucket_of = self._bucket_of
             out = {}
             for _ in range(n_nodes):
-                i = full.pop()
+                i = full.popitem()[0]
                 free[i] = 0
                 bucket_of[i] = -1
                 out[i] = g
@@ -500,11 +578,11 @@ class ClusterSim:
         i = next(iter(b))
         nf = f - req_gpus              # f == g (full node) => nf > 0
         self.free[i] = nf
-        b.discard(i)
+        del b[i]
         if not b:
             self._bucket_mask &= ~(1 << f)
         if nf > 0:
-            buckets[nf].add(i)
+            buckets[nf][i] = None
             self._bucket_mask |= 1 << nf
             self._bucket_of[i] = nf
         else:
@@ -534,11 +612,11 @@ class ClusterSim:
         if run.n_gpus <= 8:   # single-node job (n_nodes == 1)
             histories = self.histories
             for i in nodes:
-                node_jobs[i].add(job_id)
+                node_jobs[i][job_id] = None
                 histories[i].single_node_jobs += 1
         else:
             for i in nodes:
-                node_jobs[i].add(job_id)
+                node_jobs[i][job_id] = None
 
     def _record(self, r: Running, t: float, state: JobState,
                 hw: bool = False, symptoms=(), preempted_by=None) -> None:
@@ -581,11 +659,11 @@ class ClusterSim:
             full = self._buckets[g]
             bucket_of = self._bucket_of
             for i in r.nodes:
-                node_jobs[i].discard(job_id)
+                node_jobs[i].pop(job_id, None)
                 free[i] = g
                 si = state[i]
                 if si == N_ACTIVE:
-                    full.add(i)
+                    full[i] = None
                     bucket_of[i] = g
                     self._bucket_mask |= 1 << g
                     self._full_epoch += 1
@@ -596,7 +674,7 @@ class ClusterSim:
             buckets = self._buckets
             bucket_of = self._bucket_of
             for i, g_used in r.nodes.items():
-                node_jobs[i].discard(job_id)
+                node_jobs[i].pop(job_id, None)
                 f = free[i] + g_used
                 free[i] = f
                 si = state[i]
@@ -605,11 +683,11 @@ class ClusterSim:
                 if b != old:
                     if old >= 0:
                         s = buckets[old]
-                        s.discard(i)
+                        s.pop(i, None)
                         if not s:
                             self._bucket_mask &= ~(1 << old)
                     if b >= 0:
-                        buckets[b].add(i)
+                        buckets[b][i] = None
                         self._bucket_mask |= 1 << b
                         if b == g:
                             self._full_epoch += 1
@@ -1143,6 +1221,200 @@ class ClusterSim:
         if self.obs is not None:
             self.obs.on_node_up(t, node_id)
 
+    # -- snapshot / restore (copy-on-write replay forking) -------------------
+    def snapshot(self) -> EngineSnapshot:
+        """Serialize the engine's live state into an :class:`EngineSnapshot`
+        that :meth:`restore` resumes **bit-identically** (same event order,
+        same RNG stream positions, same sha256 engine digest at the
+        horizon — see docs/replay_forking.md and tests/test_forking.py).
+
+        Pure observer: consumes no RNG, pushes no events, and mutates
+        nothing — snapshotting mid-run leaves the live sim's trajectory
+        untouched (the columnar staging buffers are captured as shared
+        immutable tuples, not flushed).
+
+        Safe capture points: before ``run()`` (a t=0 snapshot), or
+        mid-run from inside a ``policy.on_timer`` / ``policy.on_fault``
+        hook — at both, the current event is fully processed and the
+        main loop re-derives every stream head from the captured heaps.
+        NOT safe inside ``on_schedule_pass`` (the pass's K_SCHED event
+        is consumed but the pass hasn't run — guarded below) or from
+        ``bind`` (the fault chains aren't armed yet).  Snapshots of
+        spilling runs are refused: spilled chunks live in part files
+        owned by the original run.
+        """
+        if self._trace_spill_dir is not None:
+            raise ValueError(
+                "cannot snapshot a spilling run — replay forking "
+                "requires in-memory stores (drop trace_spill_dir)")
+        if self._pass_t != -1.0:
+            raise ValueError(
+                "cannot snapshot from inside a scheduling pass — "
+                "snapshot from on_timer/on_fault, not on_schedule_pass")
+        # one deepcopy over the whole mutable graph: shared objects
+        # (a JobRequest referenced from the queue AND a deferred entry,
+        # Fault payloads) keep their cross-references via the shared memo
+        mut = copy.deepcopy({
+            "free": self.free, "node_state": self._node_state,
+            "node_jobs": self.node_jobs, "buckets": self._buckets,
+            "bucket_of": self._bucket_of, "queue": self.queue,
+            "deferred": self._deferred, "def_epochs": self._def_epochs,
+            "running": self.running,
+            "running_by_prio": self._running_by_prio,
+            "prio_keys": self._prio_keys, "guard_heap": self._guard_heap,
+            "events": self.events, "fault_heap": self._fault_heap,
+            "chain_gen": self._chain_gen, "armed": self._armed,
+            "drain_log": self.drain_log, "histories": self.histories,
+            "removed_lemons": self.removed_lemons,
+            "lemon_removal_log": self.lemon_removal_log,
+            "lemons": self.faults.lemons,
+        })
+        faults = self.faults
+        return EngineSnapshot(
+            version=SNAPSHOT_VERSION,
+            spec=self.spec,
+            horizon_days=self.horizon_s / 86400.0,
+            seed=self.seed,
+            scenario=self.scenario,
+            episodes=faults.episodes,
+            check_introduced=dict(faults.check_introduced),
+            enable_lemon=self.enable_lemon,
+            lemon_scan_period_days=self.lemon_scan_period_s / 86400.0,
+            detector=self.detector,
+            started=self._started,
+            t=self._now,
+            arr_next=self._arr_next,
+            mut=mut,
+            bucket_mask=self._bucket_mask,
+            free_epoch=self._free_epoch,
+            full_epoch=self._full_epoch,
+            # itertools.count peek without consuming: __reduce__ carries
+            # the next value
+            next_seq=self._seq.__reduce__()[1][0],
+            next_job_id=self._job_ids.__reduce__()[1][0],
+            next_fault_id=self._fault_ids.__reduce__()[1][0],
+            rng_state=self.rng.bit_generator.state,
+            faults_rng_state=faults.rng.bit_generator.state,
+            exp_buf=faults._exp_buf.copy(),
+            exp_ptr=faults._exp_ptr,
+            domain_rng_state=(None if self._domain_proc is None
+                              else self._domain_proc.rng.bit_generator.state),
+            interners={
+                "state": self._state_int.snapshot_state(),
+                "symptoms": self._sym_int.snapshot_state(),
+                "fsym": self._fsym_int.snapshot_state(),
+                "cos": self._cos_int.snapshot_state(),
+                "dom": self._dom_int.snapshot_state(),
+            },
+            jobs_log=self._jobs_log.snapshot_state(),
+            faults_log=self._faults_log.snapshot_state(),
+            recorder_state=(None if self.recorder is None
+                            else self.recorder.snapshot_state()),
+        )
+
+    @classmethod
+    def restore(cls, snap: EngineSnapshot, *, policy=None) -> "ClusterSim":
+        """Rebuild a ``ClusterSim`` from an :class:`EngineSnapshot` and
+        prepare it to resume exactly where the snapshot was taken —
+        ``run()`` on the result continues the replay bit-identically
+        (a t=0 snapshot restores to a full cold run reproducing the
+        committed ``ENGINE_DIGESTS``).
+
+        ``policy`` attaches a mitigation policy to the fork.  For a
+        started (mid-run) snapshot, hook binds are *skipped* on resume:
+        the policy's own state must already correspond to the snapshot
+        time (the fork planner unpickles the policy captured alongside
+        the snapshot — see ``repro.mitigations.forkplan``).  A recorder
+        captured in the snapshot is re-attached pre-bound; a fresh
+        recorder/obs cannot be added to a started snapshot (their binds
+        already ran in the original run).  Each restore deep-copies the
+        snapshot's mutable graph, so one snapshot forks any number of
+        independent suffixes.
+        """
+        if snap.version != SNAPSHOT_VERSION:
+            raise ValueError(
+                f"EngineSnapshot v{snap.version} is not compatible with "
+                f"this engine (expects v{SNAPSHOT_VERSION}) — re-snapshot "
+                "from a fresh baseline run")
+        sim = cls(snap.spec, horizon_days=snap.horizon_days,
+                  seed=snap.seed, enable_lemon_detection=snap.enable_lemon,
+                  lemon_scan_period_days=snap.lemon_scan_period_days,
+                  lemon_detector=snap.detector, episodes=snap.episodes,
+                  check_introduced=snap.check_introduced,
+                  scenario=snap.scenario, policy=policy)
+        d = copy.deepcopy(snap.mut)
+        sim.free = d["free"]
+        sim._node_state = d["node_state"]
+        sim.node_jobs = d["node_jobs"]
+        sim._buckets = d["buckets"]
+        sim._bucket_of = d["bucket_of"]
+        sim._bucket_mask = snap.bucket_mask
+        sim.full_free = sim._buckets[sim._g]   # re-bind the alias
+        sim.queue = d["queue"]
+        sim._deferred = d["deferred"]
+        sim._def_epochs = d["def_epochs"]
+        sim._def_scratch = []
+        sim._def_ep_scratch = []
+        sim._free_epoch = snap.free_epoch
+        sim._full_epoch = snap.full_epoch
+        sim.running = d["running"]
+        sim._running_by_prio = d["running_by_prio"]
+        sim._prio_keys = d["prio_keys"]
+        sim._guard_heap = d["guard_heap"]
+        sim.events = d["events"]
+        sim._fault_heap = d["fault_heap"]
+        sim._chain_gen = d["chain_gen"]
+        sim._armed = d["armed"]
+        sim.drain_log = d["drain_log"]
+        sim.histories = d["histories"]
+        sim.removed_lemons = d["removed_lemons"]
+        sim.lemon_removal_log = d["lemon_removal_log"]
+        sim._seq = itertools.count(snap.next_seq)
+        sim._job_ids = itertools.count(snap.next_job_id)
+        sim._fault_ids = itertools.count(snap.next_fault_id)
+        sim.rng.bit_generator.state = snap.rng_state
+        faults = sim.faults
+        faults.lemons = d["lemons"]
+        faults.rng.bit_generator.state = snap.faults_rng_state
+        faults._exp_buf = snap.exp_buf.copy()
+        faults._exp_ptr = snap.exp_ptr
+        if snap.domain_rng_state is not None:
+            sim._domain_proc.rng.bit_generator.state = snap.domain_rng_state
+        # columnar logs: rebuild vocabularies, adopt the shared chunks
+        sim._state_int = Interner.from_state(snap.interners["state"])
+        sim._sym_int = Interner.from_state(snap.interners["symptoms"])
+        sim._fsym_int = Interner.from_state(snap.interners["fsym"])
+        sim._cos_int = Interner.from_state(snap.interners["cos"])
+        sim._dom_int = Interner.from_state(snap.interners["dom"])
+        sim._jobs_log = ChunkedStore("jobs", interners={
+            "state": sim._state_int, "symptoms": sim._sym_int})
+        sim._jobs_log.restore_state(snap.jobs_log)
+        sim._faults_log = ChunkedStore("faults", interners={
+            "symptom": sim._fsym_int, "co_symptoms": sim._cos_int,
+            "domain": sim._dom_int})
+        sim._faults_log.restore_state(snap.faults_log)
+        sim._records_view = []
+        sim._faults_view = []
+        sim._now = snap.t
+        sim._pass_t = -1.0
+        sim._arr_next = snap.arr_next
+        sim._started = snap.started
+        sim._resumed = snap.started
+        if snap.recorder_state is not None:
+            from repro.trace.recorder import TraceRecorder
+
+            sim.recorder = TraceRecorder.from_snapshot_state(
+                snap.recorder_state, sim=sim)
+            # a not-yet-started snapshot restores to the normal cold
+            # path, where _run() binds hooks — let bind re-run there
+            sim.recorder._bound = snap.started
+        return sim
+
+    def fork(self, *, policy=None) -> "ClusterSim":
+        """``restore(snapshot())`` in one call: an independent sim that
+        resumes this one's exact state (optionally under ``policy``)."""
+        return ClusterSim.restore(self.snapshot(), policy=policy)
+
     # -- main loop -----------------------------------------------------------
     def run(self) -> None:
         # the cyclic collector is pure overhead here: steady-state
@@ -1158,7 +1430,7 @@ class ClusterSim:
             if gc_was_enabled:
                 gc.enable()
 
-    def _arrival_windows(self):
+    def _arrival_windows(self, skip: int = 0):
         """Yield arrival column *windows* — (submit_t, n_gpus,
         duration_s, priority, outcome_code, first_job_id) as plain lists
         (fast scalar access in the loop).  Windowing bounds the boxed-
@@ -1166,13 +1438,18 @@ class ClusterSim:
         up front, which alone put ~450 MB of Python floats/ints under an
         11-month replay.  In spill mode the windows come straight off
         the disk-backed arrival parts and each part is deleted once
-        consumed, so arrival data never exceeds ~one block in RAM."""
+        consumed, so arrival data never exceeds ~one block in RAM.
+
+        ``skip`` (resume path): drop the first ``skip`` arrivals — a
+        restored run regenerates the full deterministic arrival stream
+        (``generate_arrays`` is a pure function of spec/seed/horizon on
+        a fresh generator) and windows from its snapshot cursor."""
         spill_dir = self._trace_spill_dir
         if spill_dir is None:
             arrivals = self.gen.generate_arrays(self.horizon_s / 86400.0)
             n = len(arrivals)
             w = 131072
-            for lo in range(0, n, w):
+            for lo in range(skip, n, w):
                 hi = lo + w if lo + w < n else n
                 yield (arrivals.submit_t[lo:hi].tolist(),
                        arrivals.n_gpus[lo:hi].tolist(),
@@ -1181,6 +1458,7 @@ class ClusterSim:
                        arrivals.outcome_code[lo:hi].tolist(),
                        arrivals.start_job_id + lo)
             return
+        assert skip == 0, "spill-mode runs cannot be restored"
         import os
 
         parts = self.gen.spill_arrival_blocks(self.horizon_s / 86400.0,
@@ -1196,15 +1474,25 @@ class ClusterSim:
                 os.remove(path)
 
     def _run(self) -> None:
-        # hooks bind before arrival generation: spill mode must be
-        # configured first (neither bind consumes engine RNG or seq)
-        if self.recorder is not None:
-            self.recorder.bind(self)
-        if self.policy is not None:
-            self.policy.bind(self)
-        if self.obs is not None:
-            self.obs.bind(self)
-        windows = self._arrival_windows()
+        if not self._resumed:
+            self._started = True
+            # hooks bind before arrival generation: spill mode must be
+            # configured first (neither bind consumes engine RNG or seq)
+            if self.recorder is not None:
+                self.recorder.bind(self)
+            if self.policy is not None:
+                self.policy.bind(self)
+            if self.obs is not None:
+                self.obs.bind(self)
+            windows = self._arrival_windows()
+        else:
+            # resuming a restored mid-run snapshot: hook binds already
+            # ran in the original run (a restored recorder re-attaches
+            # pre-bound; the forked policy's state corresponds to the
+            # snapshot time), the fault chains / domain clocks / lemon
+            # scans are already armed in the restored heaps, and the
+            # arrival stream regenerates from the snapshot cursor
+            windows = self._arrival_windows(self._arr_next)
         win = next(windows, None)
         if win is None:
             arr_t = arr_gpus = arr_dur = arr_prio = arr_out = ()
@@ -1215,24 +1503,26 @@ class ClusterSim:
             n_arr = len(arr_t)
         ai = 0
 
-        # batched fault delivery: the initial per-node chain is one
-        # vectorized draw (same RNG stream as n scalar calls) heapified
-        # into the dedicated fault stream (generation 0)
-        first = self.faults.next_fault_times(0.0).tolist()
-        fheap = [(first[i], i, 0) for i in range(self.spec.n_nodes)]
-        heapq.heapify(fheap)
-        self._fault_heap = fheap
-        if self._domain_proc is not None:
-            for k in range(len(self._domain_proc.specs)):
-                self._push(self._domain_proc.next_event_time(k, 0.0),
-                           K_DOMFAULT, k)
-        if self.enable_lemon:
-            t = self.lemon_scan_period_s
-            while t < self.horizon_s:
-                self._push(t, K_LEMON, None)
-                t += self.lemon_scan_period_s
-
-        self._now = 0.0
+        if not self._resumed:
+            # batched fault delivery: the initial per-node chain is one
+            # vectorized draw (same RNG stream as n scalar calls)
+            # heapified into the dedicated fault stream (generation 0)
+            first = self.faults.next_fault_times(0.0).tolist()
+            fheap = [(first[i], i, 0) for i in range(self.spec.n_nodes)]
+            heapq.heapify(fheap)
+            self._fault_heap = fheap
+            if self._domain_proc is not None:
+                for k in range(len(self._domain_proc.specs)):
+                    self._push(self._domain_proc.next_event_time(k, 0.0),
+                               K_DOMFAULT, k)
+            if self.enable_lemon:
+                t = self.lemon_scan_period_s
+                while t < self.horizon_s:
+                    self._push(t, K_LEMON, None)
+                    t += self.lemon_scan_period_s
+            self._now = 0.0
+        else:
+            fheap = self._fault_heap
         events = self.events
         armed = self._armed
         horizon = self.horizon_s
@@ -1278,6 +1568,7 @@ class ClusterSim:
                         if win is None:
                             n_arr = 0
                             ai = 0
+                            self._arr_next = jid + 1   # stream exhausted
                             break
                         (arr_t, arr_gpus, arr_dur, arr_prio, arr_out,
                          jid0) = win
@@ -1286,6 +1577,10 @@ class ClusterSim:
                     if armed and armed[0] < t_min:
                         t_min = armed[0]
                     if arr_t[ai] > t_min:
+                        # snapshot cursor: consistent at every batch exit
+                        # (hooks never fire mid-batch), two stores per
+                        # batch instead of one per arrival
+                        self._arr_next = jid0 + ai
                         break
                 continue
             if t_min > horizon:   # also covers both-heaps-empty (inf)
@@ -1334,14 +1629,17 @@ class ClusterSim:
                 elif kind == K_SCHED:
                     if armed and armed[0] <= t:
                         heappop(armed)
+                    # _pass_t absorbs same-tick re-arms from in-pass
+                    # preemption releases: the changed/blocked retry logic
+                    # below covers them.  Set before the policy hook: the
+                    # pass's K_SCHED/armed entries are already popped, so
+                    # a snapshot from inside the hook would lose the pass
+                    # (the snapshot guard keys off _pass_t).
+                    self._pass_t = t
                     if policy is not None:
                         # interventions (evictions, spare releases) land
                         # before the pass so this tick's placements see them
                         policy.on_schedule_pass(self, t)
-                    # _pass_t absorbs same-tick re-arms from in-pass
-                    # preemption releases: the changed/blocked retry logic
-                    # below covers them
-                    self._pass_t = t
                     if on_sched_pass is None and obs_sched_pass is None:
                         n_started, n_preempted, blocked = \
                             self._schedule_pass(t)

@@ -280,5 +280,27 @@ def run_cells(worker: Callable, tasks: Sequence, *, procs: int = 0,
     return results
 
 
+def run_grouped_cells(worker, tasks: Sequence, *, procs: int = 0,
+                      on_result: Optional[Callable] = None) -> list:
+    """``run_cells`` over *group* tasks — each ``worker(task)`` returns a
+    **list** of results (e.g. every policy cell at one (scale, seed)
+    under the prefix-sharing fork plan, where the group shares one
+    probe replay and its snapshots never leave the worker).  Returns the
+    flattened results in task order; ``on_result(i, result)`` streams
+    each *sub*-result as its group lands, with ``i`` counting delivered
+    sub-results in arrival order."""
+    delivered = 0
+
+    def _stream(_i, group):
+        nonlocal delivered
+        for res in group:
+            on_result(delivered, res)
+            delivered += 1
+
+    groups = run_cells(worker, tasks, procs=procs,
+                       on_result=_stream if on_result is not None else None)
+    return [res for group in groups for res in group]
+
+
 def default_procs() -> int:
     return min(os.cpu_count() or 1, 8)

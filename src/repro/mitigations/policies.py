@@ -34,6 +34,7 @@ class NoOpPolicy(MitigationPolicy):
     sweep.  Must reproduce the bare engine's output bit-for-bit."""
 
     name = "baseline"
+    engine_inert = True
 
     def __init__(self, seed: int = 0):
         del seed  # deterministic by construction
@@ -61,6 +62,8 @@ class CheckpointCadencePolicy(MitigationPolicy):
                        ``AdaptiveCheckpointPolicy``): what a practical
                        feedback controller reaches without per-run oracles.
     """
+
+    engine_inert = True   # accounting-side only: never calls a helper
 
     def __init__(self, mode: str = "optimal", dt_s: float = 3600.0,
                  w_cp_s: float = 300.0, seed: int = 0):

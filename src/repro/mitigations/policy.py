@@ -73,6 +73,12 @@ class MitigationPolicy:
     they need and register themselves with ``@register_policy``."""
 
     name: str = "base"
+    # declares "this policy never mutates the engine" (no helper calls,
+    # no repair verdicts — accounting-side knobs only).  The fork
+    # planner (repro.mitigations.forkplan) skips snapshot bookkeeping
+    # for inert shadows: they can never diverge from the baseline, so
+    # their cells are scored straight off the shared probe replay.
+    engine_inert: bool = False
 
     def bind(self, sim) -> None:
         pass

@@ -40,7 +40,7 @@ import numpy as np
 from repro.cluster.scheduler import ClusterSim
 from repro.ensemble.runner import (  # noqa: F401  (re-exported for compat)
     DEFAULT_CP_INTERVAL_S, JOBS_PER_NODE_DAY, U0_S, W_CP_S, default_min_gpus,
-    run_cells, scaled_spec, score_cell)
+    run_cells, run_grouped_cells, scaled_spec, score_cell)
 from repro.mitigations.policy import make_policy
 from repro.trace import TraceRecorder
 from repro.trace import io as trace_io
@@ -109,27 +109,14 @@ class CellResult:
     trace_path: Optional[str] = None   # npz archive (--save-traces)
 
 
-def run_cell(policy_name: str, n_gpus: int, seed: int, *,
-             horizon_days: float = 8.0, min_gpus: Optional[int] = None,
-             min_hours: float = 12.0, policy_kwargs: Optional[dict] = None,
-             trace_dir: Optional[str] = None,
-             scenario: Optional[str] = None) -> CellResult:
-    """One grid cell: replay with the policy attached, record the trace,
-    and score every metric from it through the shared ensemble scorer
-    (optionally archiving the trace as npz under ``trace_dir``)."""
-    spec = scaled_spec(n_gpus)
-    policy = make_policy(policy_name, seed=seed + 9000,
-                         **(policy_kwargs or {}))
-    recorder = TraceRecorder()
-    t0 = time.time()
-    sim = ClusterSim(spec, horizon_days=horizon_days, seed=seed,
-                     policy=policy, recorder=recorder, scenario=scenario)
-    sim.run()
-    trace = recorder.finalize(sim)
-    wall = time.time() - t0
-
+def _finish_cell(policy_name: str, n_gpus: int, seed: int, sim, trace,
+                 policy, wall: float, *, min_gpus: Optional[int],
+                 min_hours: float, trace_dir: Optional[str],
+                 fork_info: Optional[dict] = None) -> CellResult:
+    """Score one replayed cell (cold or forked) into its ``CellResult``
+    — the shared back half of ``run_cell`` and ``run_fork_group``."""
     stats = score_cell(sim, trace, policy=policy, min_gpus=min_gpus,
-                       min_hours=min_hours, r_f_nominal=spec.r_f)
+                       min_hours=min_hours, r_f_nominal=sim.spec.r_f)
     extra = {"n_node_events": trace.n_rows("node_events"),
              "n_sched_passes": trace.n_rows("sched_passes"),
              "fitted_r_f": stats["fitted_r_f"]}
@@ -137,6 +124,8 @@ def run_cell(policy_name: str, n_gpus: int, seed: int, *,
         v = getattr(policy, attr, None)
         if v is not None:
             extra[f"n_{attr}"] = len(v)
+    if fork_info is not None:
+        extra["fork"] = fork_info
     trace_path = None
     if trace_dir:
         os.makedirs(trace_dir, exist_ok=True)
@@ -154,9 +143,118 @@ def run_cell(policy_name: str, n_gpus: int, seed: int, *,
         n_evicted=stats["n_evicted"], extra=extra, trace_path=trace_path)
 
 
+def run_cell(policy_name: str, n_gpus: int, seed: int, *,
+             horizon_days: float = 8.0, min_gpus: Optional[int] = None,
+             min_hours: float = 12.0, policy_kwargs: Optional[dict] = None,
+             trace_dir: Optional[str] = None,
+             scenario: Optional[str] = None,
+             r_f: float = 6.5e-3) -> CellResult:
+    """One cold-start grid cell: replay with the policy attached from
+    t=0, record the trace, and score every metric from it through the
+    shared ensemble scorer (optionally archiving the trace as npz under
+    ``trace_dir``).  The fork-plan path (``run_fork_group``) must agree
+    with this bit-for-bit (regression-tested in tests/test_forking.py)."""
+    spec = scaled_spec(n_gpus, r_f=r_f)
+    policy = make_policy(policy_name, seed=seed + 9000,
+                         **(policy_kwargs or {}))
+    recorder = TraceRecorder()
+    t0 = time.time()
+    sim = ClusterSim(spec, horizon_days=horizon_days, seed=seed,
+                     policy=policy, recorder=recorder, scenario=scenario)
+    sim.run()
+    trace = recorder.finalize(sim)
+    wall = time.time() - t0
+    return _finish_cell(policy_name, n_gpus, seed, sim, trace, policy,
+                        wall, min_gpus=min_gpus, min_hours=min_hours,
+                        trace_dir=trace_dir)
+
+
 def _cell_worker(args) -> CellResult:
     name, n_gpus, seed, kw = args
     return run_cell(name, n_gpus, seed, **kw)
+
+
+def run_fork_group(policies: Sequence[str], n_gpus: int, seed: int, *,
+                   horizon_days: float = 8.0,
+                   min_gpus: Optional[int] = None, min_hours: float = 12.0,
+                   policy_kwargs: Optional[dict[str, dict]] = None,
+                   trace_dir: Optional[str] = None,
+                   scenario: Optional[str] = None, r_f: float = 6.5e-3,
+                   snap_period_days: float = 1.0) -> list[CellResult]:
+    """Every policy cell at one (scale, seed) via the prefix-sharing
+    fork plan (``repro.mitigations.forkplan``): one *probe* replay runs
+    the shared baseline prefix with each policy shadowed behind a trap
+    proxy and rolling snapshots at a ``snap_period_days`` cadence.
+    Cells whose policy never intervenes are scored straight off the
+    probe trace (their cold trajectory *is* the probe's — near-free);
+    each diverging cell forks from the snapshot preceding its first
+    intervention and pays only the divergent suffix.  Output is
+    identical to running ``run_cell`` per policy, cell for cell, except
+    ``wall_s`` (machine time) and the ``extra["fork"]`` provenance
+    block (the cell that absorbed the probe carries
+    ``carries_probe=True``)."""
+    from repro.mitigations.forkplan import ForkProbePolicy, fork_cell
+
+    pk = policy_kwargs or {}
+    policies = list(policies)
+
+    def _make(name: str):
+        return make_policy(name, seed=seed + 9000, **(pk.get(name) or {}))
+
+    spec = scaled_spec(n_gpus, r_f=r_f)
+    shadows = [_make(p) for p in policies]
+    probe = ForkProbePolicy(shadows,
+                            snap_period_s=snap_period_days * 86400.0)
+    recorder = TraceRecorder()
+    sim = ClusterSim(spec, horizon_days=horizon_days, seed=seed,
+                     policy=probe, recorder=recorder, scenario=scenario)
+    probe.prepare(sim)
+    t0 = time.time()
+    sim.run()
+    trace = recorder.finalize(sim)
+    probe_wall = time.time() - t0
+
+    # the probe *is* one full baseline replay: its wall lands on the
+    # baseline cell when present (first cell otherwise), so summed cell
+    # walls stay comparable with the cold path
+    carrier = policies.index("baseline") if "baseline" in policies else 0
+    kw = dict(min_gpus=min_gpus, min_hours=min_hours, trace_dir=trace_dir)
+    out = []
+    for idx, name in enumerate(policies):
+        div = probe.divergences[idx]
+        t1 = time.time()
+        if div is None:
+            # never intervened: the probe trajectory is this cell's
+            cell_sim, cell_trace, policy = sim, trace, shadows[idx]
+            fork_info = {"mode": "shared"}
+        else:
+            fork = fork_cell(div, shadow_idx=idx,
+                             make_policy_fn=lambda nm=name: _make(nm))
+            fork.run()
+            cell_trace = fork.recorder.finalize(fork)
+            cell_sim, policy = fork, fork.policy
+            fork_info = {
+                "mode": "forked",
+                "hook": div.hook,
+                "t_diverge_days": round(div.t / 86400.0, 4),
+                "t_fork_days": round(div.cursor_t / 86400.0, 4),
+                "replayed_days": round((div.t - div.cursor_t) / 86400.0, 4),
+            }
+        wall = time.time() - t1
+        if idx == carrier:
+            fork_info["carries_probe"] = True
+            fork_info["probe_wall_s"] = round(probe_wall, 3)
+            fork_info["n_snapshots"] = probe.n_snapshots
+            fork_info["snapshot_wall_s"] = round(probe.snapshot_wall_s, 3)
+            wall += probe_wall
+        out.append(_finish_cell(name, n_gpus, seed, cell_sim, cell_trace,
+                                policy, wall, fork_info=fork_info, **kw))
+    return out
+
+
+def _fork_group_worker(args) -> list[CellResult]:
+    policies, n_gpus, seed, kw = args
+    return run_fork_group(policies, n_gpus, seed, **kw)
 
 
 @dataclass
@@ -250,21 +348,38 @@ def sweep(policies: Sequence[str] = DEFAULT_POLICIES,
           policy_kwargs: Optional[dict[str, dict]] = None,
           trace_dir: Optional[str] = None,
           scenario: Optional[str] = None,
+          r_f: float = 6.5e-3,
+          fork: bool = True, snap_period_days: float = 1.0,
           on_result=None) -> SweepResult:
     """Run the policy x scale x seed grid on the shared ensemble executor
     (``procs`` > 1 fans cells out over its spawn pool; 0/1 runs serially
-    in-process).  ``trace_dir`` archives each cell's trace as npz;
-    ``scenario`` names a fault-model v2 pack applied to every cell;
-    ``on_result(i, cell)`` streams each ``CellResult`` as it lands (in
-    completion order — the heartbeat/progress channel)."""
+    in-process).  ``fork=True`` (default) executes the grid as
+    prefix-sharing groups — per (scale, seed) one probe replay plus
+    forked/shared suffix cells (``run_fork_group``); ``fork=False`` is
+    the cold-start escape hatch, one full replay per cell.  Both paths
+    produce identical cells (wall_s/``extra["fork"]`` aside).
+    ``trace_dir`` archives each cell's trace as npz; ``scenario`` names
+    a fault-model v2 pack applied to every cell; ``r_f`` the nominal
+    per-node-day hardware fault rate; ``on_result(i, cell)`` streams
+    each ``CellResult`` as it lands (in completion order — the
+    heartbeat/progress channel)."""
     kw = dict(horizon_days=horizon_days, min_gpus=min_gpus,
-              min_hours=min_hours, trace_dir=trace_dir, scenario=scenario)
-    tasks = [(p, g, s, {**kw, "policy_kwargs":
-                        (policy_kwargs or {}).get(p)})
-             for p in policies for g in gpus_list for s in seeds]
+              min_hours=min_hours, trace_dir=trace_dir, scenario=scenario,
+              r_f=r_f)
     t0 = time.time()
-    cells = run_cells(_cell_worker, tasks, procs=procs,
-                      on_result=on_result)
+    if fork:
+        gtasks = [(tuple(policies), g, s,
+                   {**kw, "policy_kwargs": policy_kwargs,
+                    "snap_period_days": snap_period_days})
+                  for g in gpus_list for s in seeds]
+        cells = run_grouped_cells(_fork_group_worker, gtasks, procs=procs,
+                                  on_result=on_result)
+    else:
+        tasks = [(p, g, s, {**kw, "policy_kwargs":
+                            (policy_kwargs or {}).get(p)})
+                 for p in policies for g in gpus_list for s in seeds]
+        cells = run_cells(_cell_worker, tasks, procs=procs,
+                          on_result=on_result)
     cells.sort(key=lambda c: (c.n_gpus, c.policy, c.seed))
     return SweepResult(cells, horizon_days, wall_s=time.time() - t0)
 
@@ -297,6 +412,13 @@ def main() -> None:
     ap.add_argument("--r-f", type=float, default=6.5e-3,
                     help="nominal failure rate for --analytic-bands "
                          "(failures per node-day)")
+    ap.add_argument("--no-fork", action="store_true",
+                    help="disable the prefix-sharing fork plan: run every "
+                         "cell cold from t=0 (the escape hatch; output is "
+                         "identical up to wall_s/extra['fork'])")
+    ap.add_argument("--snap-period-days", type=float, default=1.0,
+                    help="rolling-snapshot cadence of the fork plan's "
+                         "probe replay (sim days)")
     ap.add_argument("--json", default=None)
     ap.add_argument("--save-traces", default=None, metavar="DIR",
                     help="archive each cell's trace as npz under DIR "
@@ -326,26 +448,41 @@ def main() -> None:
               f"{res.n_compiled_calls} compiled call(s)):")
         print(res.table())
         print()
+    fork = not args.no_fork
     on_result = None
     hb = None
     if args.progress or args.heartbeat:
         from repro.obs import Heartbeat
 
+        # under the fork plan each (scale, seed) group yields exactly one
+        # probe-carrying "prefix" cell; the rest are near-free "suffix"
+        # cells — declaring the split keeps the ETA steady when the
+        # cheap suffixes land first
+        n_groups = len(gpus_list) * args.seeds
+        phase_totals = ({"prefix": n_groups,
+                         "suffix": n_groups * (len(policies) - 1)}
+                        if fork and len(policies) > 1 else None)
         hb = Heartbeat(
             total=len(policies) * len(gpus_list) * args.seeds,
             procs=args.procs,
             print_fn=(lambda line: print(f"  {line}", flush=True))
             if args.progress else None,
-            jsonl_path=args.heartbeat)
+            jsonl_path=args.heartbeat,
+            phase_totals=phase_totals)
 
         def on_result(i, cell):
+            fk = cell.extra.get("fork")
+            phase = None
+            if fk is not None:
+                phase = "prefix" if fk.get("carries_probe") else "suffix"
             hb.on_cell(f"{cell.policy}/{cell.n_gpus}gpu/s{cell.seed}",
-                       cell.wall_s)
+                       cell.wall_s, phase=phase)
 
     res = sweep(policies=policies, gpus_list=gpus_list,
                 seeds=range(args.seeds), horizon_days=args.days,
                 min_hours=args.min_hours, procs=args.procs,
                 trace_dir=args.save_traces, scenario=args.scenario,
+                fork=fork, snap_period_days=args.snap_period_days,
                 on_result=on_result)
     if hb is not None:
         hb.close()

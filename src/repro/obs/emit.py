@@ -160,24 +160,66 @@ class Heartbeat:
     def __init__(self, total: int, procs: int, *,
                  print_fn: Optional[Callable[[str], None]] = None,
                  jsonl_path: Optional[str] = None,
+                 phase_totals: Optional[dict] = None,
                  clock: Callable[[], float] = time.monotonic):
         self.total = total
         self.procs = max(1, procs)
         self.done = 0
         self.cell_wall_sum = 0.0
+        # ``phase_totals`` (phase name -> expected cell count) enables a
+        # cost-aware ETA for heterogeneous grids: under the fork plan a
+        # grid mixes probe-carrying "prefix" cells with near-free
+        # "suffix" cells, and the naive done/elapsed rate whipsaws when
+        # the cheap suffixes land first.  Budgeting each phase's
+        # remaining cells at that phase's own mean wall keeps the ETA
+        # steady.
+        self.phase_totals = dict(phase_totals) if phase_totals else None
+        self._phase_done: dict = {}
+        self._phase_wall: dict = {}
         self._clock = clock
         self._t0 = clock()
         self._print = print_fn
         self._writer = JsonlWriter(jsonl_path) if jsonl_path else None
 
-    def on_cell(self, label: str, wall_s: float) -> dict:
+    def _phase_eta_s(self) -> Optional[float]:
+        """Remaining-work ETA from per-phase mean cell walls (None when
+        no ``phase_totals`` were declared).  Phases with no completed
+        sample yet are budgeted at the costliest observed phase mean (a
+        deliberately conservative stand-in: the cheap phases finish
+        first under the fork plan), or the overall mean before any
+        sample exists."""
+        if not self.phase_totals:
+            return None
+        overall = self.cell_wall_sum / max(self.done, 1)
+        means = {p: self._phase_wall[p] / n
+                 for p, n in self._phase_done.items() if n}
+        fallback = max(means.values()) if means else overall
+        work = 0.0
+        for p, tot in self.phase_totals.items():
+            rem = max(tot - self._phase_done.get(p, 0), 0)
+            work += rem * means.get(p, fallback)
+        # cells outside any declared phase fall back to the overall mean
+        undeclared = self.total - sum(self.phase_totals.values())
+        if undeclared > 0:
+            phased_done = sum(self._phase_done.values())
+            work += max(undeclared - (self.done - phased_done), 0) * overall
+        return work / self.procs
+
+    def on_cell(self, label: str, wall_s: float,
+                phase: Optional[str] = None) -> dict:
         """Fold one completed cell; returns (and emits) the beat."""
         self.done += 1
         self.cell_wall_sum += wall_s
+        if phase is not None:
+            self._phase_done[phase] = self._phase_done.get(phase, 0) + 1
+            self._phase_wall[phase] = (self._phase_wall.get(phase, 0.0)
+                                       + wall_s)
         elapsed = max(self._clock() - self._t0, 1e-9)
         rate = self.done / elapsed                      # cells/sec, pool-wide
         remaining = self.total - self.done
-        eta_s = remaining / rate
+        eta_s = self._phase_eta_s()
+        if eta_s is None:
+            eta_s = remaining / rate
         efficiency = min(self.cell_wall_sum / (elapsed * self.procs), 1.0)
         beat = {
             "kind": "heartbeat",
@@ -191,6 +233,8 @@ class Heartbeat:
             "procs": self.procs,
             "pool_efficiency": round(efficiency, 3),
         }
+        if phase is not None:
+            beat["phase"] = phase
         if self._writer is not None:
             self._writer(beat)
         if self._print is not None:
@@ -199,8 +243,10 @@ class Heartbeat:
 
     @staticmethod
     def format_line(beat: dict) -> str:
+        phase = f" [{beat['phase']}]" if "phase" in beat else ""
         return (f"[{beat['done']:3d}/{beat['total']}] "
-                f"{beat['label']:<28s} {beat['cell_wall_s']:6.2f}s  "
+                f"{beat['label']:<28s}{phase} "
+                f"{beat['cell_wall_s']:6.2f}s  "
                 f"eta {beat['eta_s']:6.1f}s  "
                 f"{beat['cells_per_sec']:5.2f} cells/s  "
                 f"eff {beat['pool_efficiency']:.2f} "

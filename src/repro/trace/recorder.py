@@ -95,6 +95,50 @@ class TraceRecorder:
         self._checkpoints.append((t, job_id, dur_s,
                                   self._kind_int.code(kind)))
 
+    # -- snapshot/restore (replay forking) -------------------------------
+    def snapshot_state(self) -> dict:
+        """State capture for ``ClusterSim.snapshot()``: meta plus the
+        recorder-owned stores/vocabularies (the job/fault tables live in
+        the engine's own logs and are captured there).  Chunks are
+        shared copy-on-write — see ``ChunkedStore.snapshot_state``."""
+        if self.trace_spill_dir is not None:
+            raise ValueError(
+                "cannot snapshot a spilling TraceRecorder — replay "
+                "forking requires in-memory recording")
+        return {
+            "meta": dict(self.meta),
+            "event_int": self._event_int.snapshot_state(),
+            "reason_int": self._reason_int.snapshot_state(),
+            "kind_int": self._kind_int.snapshot_state(),
+            "node_events": self._node_events.snapshot_state(),
+            "sched": self._sched.snapshot_state(),
+            "checkpoints": self._checkpoints.snapshot_state(),
+        }
+
+    @classmethod
+    def from_snapshot_state(cls, state: dict, sim=None) -> "TraceRecorder":
+        """Rebuild a recorder mid-stream from a ``snapshot_state``
+        capture.  The result is already *bound* (``bind`` ran in the
+        original run and must not run again — it would re-enter spill
+        setup and re-stamp meta); ``ClusterSim.restore`` passes ``sim``
+        to re-attach it to the forked engine."""
+        rec = cls()
+        rec.meta = dict(state["meta"])
+        rec._event_int = Interner.from_state(state["event_int"])
+        rec._reason_int = Interner.from_state(state["reason_int"])
+        rec._kind_int = Interner.from_state(state["kind_int"])
+        rec._node_events = ChunkedStore("node_events", interners={
+            "event": rec._event_int, "reason": rec._reason_int})
+        rec._node_events.restore_state(state["node_events"])
+        rec._sched = ChunkedStore("sched_passes")
+        rec._sched.restore_state(state["sched"])
+        rec._checkpoints = ChunkedStore("checkpoints", interners={
+            "kind": rec._kind_int})
+        rec._checkpoints.restore_state(state["checkpoints"])
+        rec._bound = True
+        rec._sim = sim
+        return rec
+
     # -- finalize --------------------------------------------------------
     def _stores(self, sim) -> dict[str, ChunkedStore]:
         return {"jobs": sim._jobs_log, "faults": sim._faults_log,

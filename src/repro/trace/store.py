@@ -80,6 +80,21 @@ class Interner:
             return np.empty(0, dtype="<U1")
         return np.array(self.strings, dtype=np.str_)[codes]
 
+    # -- snapshot/restore (replay forking) -------------------------------
+    def snapshot_state(self) -> tuple:
+        """Vocabulary state for an engine snapshot (shallow copies: codes
+        and strings are immutable once interned)."""
+        return (dict(self._codes), list(self.strings), list(self.raw))
+
+    @classmethod
+    def from_state(cls, state: tuple) -> "Interner":
+        it = cls()
+        codes, strings, raw = state
+        it._codes = dict(codes)
+        it.strings = list(strings)
+        it.raw = list(raw)
+        return it
+
 
 class ChunkedStore:
     """Columnar append store for one ``schema.TABLES`` table.
@@ -160,6 +175,30 @@ class ChunkedStore:
     @property
     def spilled(self) -> bool:
         return self._spill_dir is not None
+
+    # -- snapshot/restore (replay forking) -------------------------------
+    def snapshot_state(self) -> tuple:
+        """Copy-on-write position capture for an engine snapshot.
+
+        Completed chunks are immutable after ``_flush`` (appends only
+        ever create *new* chunks), so the snapshot shares them by
+        reference — a forked store costs two shallow list copies, not a
+        columnar copy.  Staged rows are immutable tuples, shared the
+        same way.  Spilling stores cannot snapshot: their chunks live in
+        part files owned by the original run."""
+        if self._spill_dir is not None:
+            raise ValueError(
+                f"{self.table}: cannot snapshot a spilling store — "
+                "snapshot/fork requires in-memory chunks")
+        return (self.rows, list(self._chunks), list(self._staged))
+
+    def restore_state(self, state: tuple) -> None:
+        """Adopt a ``snapshot_state`` capture (fresh lists; chunk dicts
+        stay shared — see ``snapshot_state``)."""
+        rows, chunks, staged = state
+        self.rows = rows
+        self._chunks = list(chunks)
+        self._staged = list(staged)
 
     # -- finalize --------------------------------------------------------
     def _decode(self, name: str, kind: str, arr: np.ndarray) -> np.ndarray:

@@ -1,0 +1,351 @@
+"""Copy-on-write replay forking: snapshot/restore bit-identity and the
+prefix-sharing fork plan.
+
+The contract under test (docs/replay_forking.md):
+
+  * ``ClusterSim.snapshot()`` + ``restore()`` resume **bit-identically**
+    — a t=0 fork reproduces every committed ``ENGINE_DIGESTS`` pin, a
+    mid-run fork matches the uninterrupted run's digest under every
+    fault-model-v2 scenario pack;
+  * snapshotting is a pure observer — taking one mid-run perturbs
+    neither the live engine nor an attached recorder/obs;
+  * the sweep's fork plan (``run_fork_group``) produces ``CellResult``s
+    equal to the cold-start path cell for cell (wall clock and the
+    ``extra["fork"]`` provenance block aside).
+"""
+import dataclasses
+import pickle
+
+import pytest
+
+from repro.cluster.scheduler import ClusterSim
+from repro.cluster.workload import ClusterSpec
+from repro.mitigations.policy import MitigationPolicy
+from tests.conftest import run_subprocess_py
+from tests.test_sim_perf import (DIGEST_CONFIGS, ENGINE_DIGESTS,
+                                 engine_digest)
+
+SCENARIO_PACKS = ("independent-v1", "rack-correlated", "slow-detection",
+                  "lablup-504")
+
+MIDRUN_SPEC = ClusterSpec("RSC-1", n_nodes=100, jobs_per_day=400.0,
+                          target_utilization=0.83, r_f=0.08)
+MIDRUN_KW = dict(horizon_days=6.0, seed=0)
+SNAP_T_S = 2.5 * 86400.0
+
+
+class SnapAtPolicy(MitigationPolicy):
+    """Test harness policy: capture one engine snapshot at a fixed sim
+    time (from ``on_timer`` — a sanctioned capture point) and otherwise
+    stay a pure observer."""
+
+    name = "__snap_at__"
+
+    def __init__(self, t_snap_s: float):
+        self.t_snap_s = t_snap_s
+        self.snap = None
+
+    def bind(self, sim) -> None:
+        sim.push_policy_timer(self.t_snap_s, "snap")
+
+    def on_timer(self, sim, t, tag) -> None:
+        if tag == "snap":
+            self.snap = sim.snapshot()
+
+
+def _roundtrip(snap):
+    """Snapshots cross the spawn pool as pickles — test that path."""
+    return pickle.loads(pickle.dumps(snap))
+
+
+# -- t=0 forks reproduce the committed engine digests -----------------------
+@pytest.mark.parametrize("name", sorted(DIGEST_CONFIGS))
+def test_fork_at_t0_reproduces_digest(name):
+    spec, kw = DIGEST_CONFIGS[name]
+    snap = ClusterSim(spec, **kw).snapshot()
+    fork = ClusterSim.restore(_roundtrip(snap))
+    fork.run()
+    assert engine_digest(fork) == ENGINE_DIGESTS[name], (
+        f"{name}: a t=0 fork diverged from the committed engine digest")
+
+
+# -- mid-run forks match the uninterrupted run, every scenario pack ---------
+@pytest.mark.parametrize("scenario", SCENARIO_PACKS)
+def test_midrun_fork_bit_identical(scenario):
+    cold = ClusterSim(MIDRUN_SPEC, **MIDRUN_KW, scenario=scenario)
+    cold.run()
+    pin = engine_digest(cold)
+
+    probe_policy = SnapAtPolicy(SNAP_T_S)
+    probe = ClusterSim(MIDRUN_SPEC, **MIDRUN_KW, scenario=scenario,
+                       policy=probe_policy)
+    probe.run()
+    assert probe_policy.snap is not None
+    assert probe_policy.snap.started
+    # the snapshot timer is digest-neutral: the probe still matches
+    assert engine_digest(probe) == pin
+
+    fork = ClusterSim.restore(_roundtrip(probe_policy.snap))
+    fork.run()
+    assert engine_digest(fork) == pin, (
+        f"{scenario}: mid-run fork diverged from the uninterrupted run")
+
+
+def test_fork_is_independent_of_parent():
+    """One snapshot forks many independent suffixes: running one fork
+    does not disturb a sibling forked from the same snapshot."""
+    probe_policy = SnapAtPolicy(SNAP_T_S)
+    probe = ClusterSim(MIDRUN_SPEC, **MIDRUN_KW, policy=probe_policy)
+    probe.run()
+    pin = engine_digest(probe)
+    snap = probe_policy.snap
+    f1 = ClusterSim.restore(snap)
+    f2 = ClusterSim.restore(snap)
+    f1.run()
+    f2.run()
+    assert engine_digest(f1) == pin
+    assert engine_digest(f2) == pin
+
+
+# -- snapshot is a pure observer under recorder / obs -----------------------
+def test_snapshot_under_recorder_pure_observer():
+    from repro.trace import TraceRecorder
+
+    spec, kw = DIGEST_CONFIGS["busy_80n_6d"]
+    rec_cold = TraceRecorder()
+    cold = ClusterSim(spec, **kw, recorder=rec_cold)
+    cold.run()
+    assert engine_digest(cold) == ENGINE_DIGESTS["busy_80n_6d"]
+    trace_cold = rec_cold.finalize(cold)
+
+    rec = TraceRecorder()
+    probe_policy = SnapAtPolicy(3.0 * 86400.0)
+    probe = ClusterSim(spec, **kw, recorder=rec, policy=probe_policy)
+    probe.run()
+    # snapshotting mid-run perturbed neither the engine nor the trace
+    assert engine_digest(probe) == ENGINE_DIGESTS["busy_80n_6d"]
+    assert rec.finalize(probe) == trace_cold
+
+    # the fork resumes the captured recorder and completes the same trace
+    fork = ClusterSim.restore(_roundtrip(probe_policy.snap))
+    fork.run()
+    assert engine_digest(fork) == ENGINE_DIGESTS["busy_80n_6d"]
+    assert fork.recorder is not None
+    assert fork.recorder.finalize(fork) == trace_cold
+
+
+def test_snapshot_under_obs_pure_observer():
+    from repro.obs import MetricsRegistry
+
+    spec, kw = DIGEST_CONFIGS["busy_80n_6d"]
+    probe_policy = SnapAtPolicy(3.0 * 86400.0)
+    probe = ClusterSim(spec, **kw, obs=MetricsRegistry(),
+                       policy=probe_policy)
+    probe.run()
+    assert engine_digest(probe) == ENGINE_DIGESTS["busy_80n_6d"]
+    # obs state is deliberately not captured (windowed wall-clock
+    # telemetry belongs to the run that produced it): the fork resumes
+    # without one, still bit-identical
+    fork = ClusterSim.restore(_roundtrip(probe_policy.snap))
+    assert fork.obs is None
+    fork.run()
+    assert engine_digest(fork) == ENGINE_DIGESTS["busy_80n_6d"]
+
+
+def test_snapshot_guards():
+    """Refused capture points fail loudly, not with silent corruption."""
+    from repro.trace import TraceRecorder
+
+    class SnapInPassPolicy(MitigationPolicy):
+        name = "__snap_in_pass__"
+        error = None
+
+        def on_schedule_pass(self, sim, t):
+            if self.error is None:
+                try:
+                    sim.snapshot()
+                except ValueError as e:
+                    self.error = e
+
+    spec, kw = DIGEST_CONFIGS["busy_80n_6d"]
+    pol = SnapInPassPolicy()
+    sim = ClusterSim(spec, **kw, policy=pol)
+    sim.run()
+    assert "scheduling pass" in str(pol.error)
+
+    rec = TraceRecorder(trace_spill_dir="/tmp/forking_spill_guard")
+    sim = ClusterSim(spec, **kw, recorder=rec)
+    with pytest.raises(ValueError, match="spill"):
+        sim.snapshot()
+
+
+# -- sweep fork plan == cold start, cell for cell ---------------------------
+def _comparable(cell):
+    d = dataclasses.asdict(cell)
+    d.pop("wall_s")
+    d["extra"].pop("fork", None)
+    return d
+
+
+def test_sweep_fork_equals_cold():
+    """Seeds 0-2 at an aggressive fault rate: every divergence class —
+    bind-time hold (warm_spare), timer eviction (lemon_eviction), repair
+    verdict (health_gate), plus engine-inert shared cells — produces
+    CellResults equal to the cold-start path."""
+    from repro.mitigations.sweep import run_cell, run_fork_group
+
+    policies = ("baseline", "checkpoint_optimal", "lemon_eviction",
+                "health_gate", "warm_spare")
+    pk = {"lemon_eviction": {"scan_period_days": 0.5}}
+    kw = dict(horizon_days=4.0, r_f=0.05, snap_period_days=0.5)
+    n_forked = 0
+    for seed in (0, 1, 2):
+        group = run_fork_group(policies, 512, seed,
+                               policy_kwargs=pk, **kw)
+        assert [c.policy for c in group] == list(policies)
+        for cell in group:
+            if cell.extra["fork"]["mode"] == "forked":
+                n_forked += 1
+            cold = run_cell(cell.policy, 512, seed,
+                            horizon_days=kw["horizon_days"],
+                            r_f=kw["r_f"],
+                            policy_kwargs=pk.get(cell.policy))
+            assert _comparable(cell) == _comparable(cold), (
+                f"{cell.policy}/seed{seed}: fork plan diverged from cold")
+    assert n_forked >= 1, "grid never exercised the fork path"
+
+
+def test_fork_group_provenance():
+    """The probe's cost lands on exactly one carrier cell; shared cells
+    ride free; forked cells report their divergence point."""
+    from repro.mitigations.sweep import run_fork_group
+
+    group = run_fork_group(
+        ("baseline", "checkpoint_optimal", "lemon_eviction"), 512, 0,
+        horizon_days=4.0, r_f=0.05, snap_period_days=0.5,
+        policy_kwargs={"lemon_eviction": {"scan_period_days": 0.5}})
+    carriers = [c for c in group
+                if c.extra["fork"].get("carries_probe")]
+    assert len(carriers) == 1
+    assert carriers[0].policy == "baseline"
+    assert carriers[0].extra["fork"]["n_snapshots"] >= 1
+    lemon = next(c for c in group if c.policy == "lemon_eviction")
+    fk = lemon.extra["fork"]
+    assert fk["mode"] == "forked"
+    assert fk["t_fork_days"] <= fk["t_diverge_days"]
+    assert fk["replayed_days"] == pytest.approx(
+        fk["t_diverge_days"] - fk["t_fork_days"], abs=1e-3)
+
+
+def test_misdeclared_inert_policy_fails_loudly():
+    """A policy marked engine_inert that calls a helper anyway is a
+    contract violation the probe must surface, not paper over."""
+    from repro.mitigations.forkplan import ForkProbePolicy
+    from repro.trace import TraceRecorder
+
+    class LyingPolicy(MitigationPolicy):
+        name = "__lying_inert__"
+        engine_inert = True
+
+        def on_node_drain(self, sim, t, node_id, reason):
+            sim.restart_node(t, node_id)
+
+    probe = ForkProbePolicy([LyingPolicy()], snap_period_s=0.5 * 86400.0)
+    sim = ClusterSim(MIDRUN_SPEC, **MIDRUN_KW, policy=probe,
+                     recorder=TraceRecorder())
+    probe.prepare(sim)
+    with pytest.raises(RuntimeError, match="engine_inert"):
+        sim.run()
+
+
+# -- CLI / bench wiring -----------------------------------------------------
+def test_fork_bench_quick_smoke(repo_root):
+    """Tier-1 guard: `benchmarks.run --only fork_bench --quick` runs the
+    fork-vs-cold grid end-to-end with the equality check passing."""
+    import subprocess
+    import sys
+
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "fork_bench",
+         "--quick"], cwd=repo_root, capture_output=True, text=True,
+        env={**__import__("os").environ,
+             "PYTHONPATH": f"{repo_root}/src"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "fork_bench" in proc.stdout
+    assert "[PASS] fork cells == cold cells" in proc.stdout
+
+
+def test_compare_missing_baseline_fails_fast(repo_root):
+    """`benchmarks.run --compare MISSING.json` must die before running
+    any benchmark, naming the regeneration recipe."""
+    import subprocess
+    import sys
+
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--compare",
+         "/nonexistent/BENCH_sim.json"], cwd=repo_root,
+        capture_output=True, text=True,
+        env={**__import__("os").environ,
+             "PYTHONPATH": f"{repo_root}/src"})
+    assert proc.returncode != 0
+    err = proc.stderr
+    assert "does not exist" in err
+    assert "benchmarks.run" in err and "--json BENCH_sim.json" in err
+    assert "===" not in proc.stdout   # no benchmark ran
+
+
+def test_sweep_cli_no_fork_flag(repo_root):
+    """--no-fork is the escape hatch: same table, cold path."""
+    code = (
+        "import sys; sys.argv = ['sweep', '--policies',"
+        "'baseline,checkpoint_optimal', '--gpus', '256', '--seeds', '1',"
+        "'--days', '1', '--procs', '0', '--no-fork'];"
+        "from repro.mitigations.sweep import main; main()")
+    proc = run_subprocess_py(code)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "baseline" in proc.stdout
+
+
+# -- heartbeat phases -------------------------------------------------------
+def test_heartbeat_phase_aware_eta():
+    """Near-free suffix cells landing first must not collapse the ETA:
+    remaining prefix cells are budgeted at the prefix phase's own mean
+    wall, not the grid-wide completion rate."""
+    from repro.obs import Heartbeat
+
+    now = [0.0]
+    hb = Heartbeat(total=6, procs=1,
+                   phase_totals={"prefix": 3, "suffix": 3},
+                   clock=lambda: now[0])
+    # three near-free suffix cells land almost instantly
+    for i in range(3):
+        now[0] += 0.01
+        beat = hb.on_cell(f"s{i}", 0.01, phase="suffix")
+        assert beat["phase"] == "suffix"
+    # one expensive prefix (probe-carrying) cell
+    now[0] += 10.0
+    beat = hb.on_cell("p0", 10.0, phase="prefix")
+    assert beat["phase"] == "prefix"
+    # naive rate ETA would say ~5s for 2 remaining cells; the phase-aware
+    # ETA budgets both remaining prefix cells at ~10s each
+    assert beat["eta_s"] >= 15.0
+    # before any prefix sample exists, unseen phases borrow the costliest
+    # observed mean (conservative), so the early ETA never collapses
+    hb2 = Heartbeat(total=4, procs=1,
+                    phase_totals={"prefix": 2, "suffix": 2},
+                    clock=lambda: now[0])
+    now[0] += 2.0
+    b = hb2.on_cell("s0", 2.0, phase="suffix")
+    assert b["eta_s"] >= 6.0   # 3 remaining cells x 2.0s mean
+
+
+def test_heartbeat_without_phases_unchanged():
+    """No phase_totals -> the legacy rate-based ETA and beat shape."""
+    from repro.obs import Heartbeat
+
+    now = [0.0]
+    hb = Heartbeat(total=4, procs=2, clock=lambda: now[0])
+    now[0] += 1.0
+    beat = hb.on_cell("a", 2.0)
+    assert "phase" not in beat
+    assert beat["eta_s"] == pytest.approx(3.0, abs=0.1)

@@ -15,9 +15,11 @@ positions) across five configs — including lemon eviction and the RSC-1
 2000-node scale — and the digest must also hold for a spill-enabled
 recorded run (tests below).  Any change to allocation order, RNG
 consumption, or event tie-breaking trips these.  The committed digests
-were re-captured on the fault-model-v2 engine (repair-path chain-leak
-fix) with ``python -m tests.capture_digests``; an *intentional*
-behavior change regenerates them the same way.
+were re-captured for the replay-forking ordered-dict bucket membership
+(docs/replay_forking.md — set iteration order does not survive
+deepcopy/pickle, dict order does) with
+``python -m tests.capture_digests``; an *intentional* behavior change
+regenerates them the same way.
 """
 import hashlib
 import json
@@ -159,22 +161,22 @@ DIGEST_CONFIGS = {
                       dict(horizon_days=4.0, seed=3)),
 }
 
-# captured on the fault-model-v2 engine (repair-path chain-leak fix:
-# a DOWN node's fault chain is retired instead of stacking a fresh one on
-# repair, and fault rows carry domain/fault_id/detected_t) — regenerate
+# captured on the replay-forking engine (ordered-dict bucket/node-job
+# membership: copied iteration order is a language guarantee, which
+# snapshot/restore requires — see docs/replay_forking.md) — regenerate
 # ONLY for an intentional behavior change, never for a perf PR, via
 #   PYTHONPATH=src python -m tests.capture_digests
 ENGINE_DIGESTS = {
     "busy_80n_6d":
-        "5001fed5f51ea7a0b7db7af978c2c73de1b98b5b23c3a9b7ab1cb596c101da58",
+        "59f49ddf23db7bc22315e7dfb6cce9fc4ba51e01787ad58fdd84e86ca63380a6",
     "hi_rf_120n_4d":
-        "09ae7f0c435ce86e97c1e5800858c61e0bdbff761993984a3985ecca198c6c4a",
+        "b75165734f017c4e206bae41eaf81bfd84a6203fcbaadfaaec6243c23617fc35",
     "lemon_150n_21d":
-        "545988f853c9cca954681da75d75f35ddc16072c7745a3e8cc817231b424851b",
+        "416cddf666b69f593219082cf96898b27294a9db54556d69de163e02c2f87550",
     "rsc1_2000n_2d":
-        "4c61131dd59e6aae0fc5bd6be27622ea17356ef1ea68a2c067543382dce5758e",
+        "cce536ee60ef8dcf7c25e2a1fbc552c01650bd39879c6b57d9a114317b40235e",
     "rsc2ish_250n_6d":
-        "13a00c73f4047e84ef8c4de6dbab8636023d23b1bcaff9d81754006b4368c28f",
+        "4737a082ea6848efba886cd8ffe7cb3508bdae70a30eec4e8d07f854486226e6",
 }
 
 
