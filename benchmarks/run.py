@@ -33,8 +33,9 @@ import time
 import traceback
 
 # importing registers each benchmark
-from benchmarks import (ensemble_bench, fig3_job_status, fig4_attribution,  # noqa: F401
-                        fig5_timeline, fig6_job_mix, fig7_mttf,
+from benchmarks import (cache_bench, ensemble_bench, fig3_job_status,  # noqa: F401
+                        fig4_attribution, fig5_timeline, fig6_job_mix,
+                        fig7_mttf,
                         fig8_goodput_loss, fig9_ettr, fig10_contours,
                         fig11_scale_projection, fig12_adaptive_routing,
                         fig13_mitigations, fork_bench, kernel_bench,
@@ -50,7 +51,7 @@ _MAX_THROUGHPUT_DROP = 0.20
 _REGEN_HINT = (
     "regenerate it from a clean tree with:\n"
     "  PYTHONPATH=src python -m benchmarks.run "
-    "--only sim_bench,ensemble_bench,stat_bench,fork_bench "
+    "--only sim_bench,ensemble_bench,stat_bench,fork_bench,cache_bench "
     "--json BENCH_sim.json")
 
 

@@ -179,14 +179,27 @@ def run(rep):
         return
 
     if common.QUICK:
+        from repro.cluster.scheduler import ClusterSim
         rep.label("scale", "100n_2d")
         spec = ClusterSpec("RSC-1", n_nodes=100, jobs_per_day=400.0,
                            target_utilization=0.83, r_f=6.5e-3)
-        wall, jps = _run_scale(rep, "quick_100n_2d", spec, 2.0)
+        # best-of-3: the quick smoke replay runs in ~50 ms, so a single
+        # sample's jobs/sec whipsaws with scheduler jitter and trips the
+        # --compare throughput gate; damp it like the 2000n_5d row
+        wall, jobs = float("inf"), 0
+        for _ in range(3):
+            t0 = time.time()
+            sim = ClusterSim(spec, horizon_days=2.0, seed=0)
+            sim.run()
+            wall = min(wall, time.time() - t0)
+            jobs = sim.n_records
+        rep.add("quick_100n_2d.wall_s", round(wall, 3), "best of 3")
+        rep.add("quick_100n_2d.job_attempts", jobs)
+        rep.add("quick_100n_2d.jobs_per_sec",
+                round(jobs / max(wall, 1e-9)), "best of 3")
         rep.check("quick smoke scale completes fast", wall < 30.0,
                   f"{wall:.2f}s")
         # spill-mode smoke: records to disk parts, reloads, row counts match
-        from repro.cluster.scheduler import ClusterSim
         from repro.trace import TraceRecorder
         from repro.trace import io as trace_io
 

@@ -1,0 +1,97 @@
+"""Engine version identity: the committed bit-identity pins plus a
+source hash over the replay-determining modules.
+
+Two ingredients compose the **engine-version digest** that keys every
+persisted replay artifact (the content-addressed cell cache,
+``repro.ensemble.cellcache``):
+
+1. ``ENGINE_DIGESTS`` — the committed sha256 pins over five reference
+   configs' full event/RNG sequences (the tier-1 bit-identity gate,
+   ``tests/test_sim_perf.py::test_engine_bit_identical_to_v2``).  They
+   change **only** on an intentional behavior change, via
+   ``python -m tests.capture_digests`` (which rewrites the literal
+   below in place).
+2. ``engine_source_hash()`` — a sha256 over the source bytes of every
+   module that can influence a replay's outcome (engine, fault model,
+   workload, scoring, scenario packs, policies, fork plan).  Code
+   drift that does *not* trip the five pins (a new scenario pack, a
+   scoring change, a policy tweak) still changes this hash.
+
+Either ingredient moving ⇒ :func:`engine_version_digest` moves ⇒ every
+cached cell keyed under the old engine silently misses — stale reads
+are structurally impossible, no invalidation pass needed.
+"""
+from __future__ import annotations
+
+import hashlib
+import importlib
+from functools import lru_cache
+
+# captured on the replay-forking engine (ordered-dict bucket/node-job
+# membership: copied iteration order is a language guarantee, which
+# snapshot/restore requires — see docs/replay_forking.md) — regenerate
+# ONLY for an intentional behavior change, never for a perf PR, via
+#   PYTHONPATH=src python -m tests.capture_digests
+ENGINE_DIGESTS = {
+    "busy_80n_6d":
+        "59f49ddf23db7bc22315e7dfb6cce9fc4ba51e01787ad58fdd84e86ca63380a6",
+    "hi_rf_120n_4d":
+        "b75165734f017c4e206bae41eaf81bfd84a6203fcbaadfaaec6243c23617fc35",
+    "lemon_150n_21d":
+        "416cddf666b69f593219082cf96898b27294a9db54556d69de163e02c2f87550",
+    "rsc1_2000n_2d":
+        "cce536ee60ef8dcf7c25e2a1fbc552c01650bd39879c6b57d9a114317b40235e",
+    "rsc2ish_250n_6d":
+        "4737a082ea6848efba886cd8ffe7cb3508bdae70a30eec4e8d07f854486226e6",
+}
+
+# every module whose source can change what a replay computes: the
+# engine and its inputs (fault model, workload, scenarios), the scoring
+# path a CellStats flows through, and the policy/fork machinery that a
+# sweep cell's trajectory depends on.  Additions are cheap (one line);
+# omissions are the only way a stale cache read can happen, so when in
+# doubt a module belongs here.
+ENGINE_HASH_MODULES = (
+    "repro.cluster.scheduler",
+    "repro.cluster.failures",
+    "repro.cluster.workload",
+    "repro.cluster.analysis",
+    "repro.core.ettr_model",
+    "repro.core.metrics",
+    "repro.core.taxonomy",
+    "repro.trace.schema",
+    "repro.trace.recorder",
+    "repro.trace.store",
+    "repro.configs.scenarios",
+    "repro.mitigations.policy",
+    "repro.mitigations.policies",
+    "repro.mitigations.forkplan",
+    "repro.ensemble.runner",
+    "repro.ensemble.episodes",
+)
+
+
+@lru_cache(maxsize=1)
+def engine_source_hash() -> str:
+    """sha256 over the source bytes of :data:`ENGINE_HASH_MODULES`, in
+    listed order (each file prefixed by its module name, so moving code
+    between modules changes the hash too)."""
+    h = hashlib.sha256()
+    for name in ENGINE_HASH_MODULES:
+        mod = importlib.import_module(name)
+        h.update(name.encode())
+        with open(mod.__file__, "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()
+
+
+@lru_cache(maxsize=1)
+def engine_version_digest() -> str:
+    """The engine identity that keys persisted replay artifacts:
+    sha256 over the committed bit-identity pins (sorted) and the
+    engine source hash."""
+    h = hashlib.sha256()
+    for name in sorted(ENGINE_DIGESTS):
+        h.update(f"{name}={ENGINE_DIGESTS[name]}\n".encode())
+    h.update(engine_source_hash().encode())
+    return h.hexdigest()

@@ -1197,6 +1197,34 @@ class ClusterSim:
                         repair_s=repair_s)
         return True
 
+    def scale_fault_rates(self, t: float, factor: float) -> int:
+        """Multiply the base hardware fault rate by ``factor`` from sim
+        time ``t`` onward (scenario what-if episodes: a fleet-wide rate
+        excursion; lemon multipliers stack on top as before).  Every
+        in-service node's fault chain is re-armed at the new rate —
+        inter-fault gaps are memoryless exponentials, so re-arming
+        mid-gap is statistically identical to the chain having run at
+        the new rate since ``t`` — preserving the exactly-one-live-chain
+        invariant; DOWN nodes pick the new rate up at return-to-service.
+        Correlated *domain* fault processes (fault-model v2 packs) keep
+        their own rates.  Chains re-arm in node-id order (one draw each
+        off the shared exponential stream), so RNG consumption is
+        deterministic.  Returns the number of chains re-armed."""
+        if factor <= 0.0:
+            raise ValueError(f"scale_fault_rates: factor must be > 0, "
+                             f"got {factor}")
+        self.faults.r_f *= factor
+        n = 0
+        for node_id in range(self.spec.n_nodes):
+            if self._node_state[node_id] == N_DOWN:
+                continue
+            self._chain_gen[node_id] += 1
+            heapq.heappush(self._fault_heap,
+                           (self.faults.next_fault_time(node_id, t),
+                            node_id, self._chain_gen[node_id]))
+            n += 1
+        return n
+
     def push_policy_timer(self, t: float, tag=None) -> None:
         """Arm a policy callback: on_timer(sim, t, tag) fires at time t."""
         self._push(t, K_POLICY, tag)

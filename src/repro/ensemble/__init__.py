@@ -12,19 +12,30 @@ never leaves the worker) into a deterministic band aggregator:
 
 Pieces:
   * ``runner``    — spawn-pool cell executor (``run_cells``), the
-    RSC-1-like ``scaled_spec``, and ``score_cell`` (the one place a
+    RSC-1-like ``scaled_spec``, ``score_cell`` (the one place a
     replay's trace is turned into ETTR/MTTF/goodput/attribution stats —
-    the mitigation sweep scores its cells through it too).
+    the mitigation sweep scores its cells through it too), and
+    ``run_cell_group`` (prefix-sharing episode groups on the fork plan).
   * ``aggregate`` — ``EnsembleAggregator``: order-independent online
     accumulation; bands are bit-identical for any worker count and any
     cell completion order (tests/test_ensemble.py).
+  * ``episodes``  — scenario what-if perturbations (``rf:2.0@4``,
+    ``outage:16@4``) applied mid-replay through the public helpers.
+  * ``cellcache`` — content-addressed cell memoization keyed by engine
+    version + canonical cell config (docs/ensemble_cache.md).
   * ``run``       — the CLI front door.
 """
 from repro.ensemble.aggregate import EnsembleAggregator, MetricBand
-from repro.ensemble.runner import (CellStats, ReplayCell, run_cells,
-                                   run_replay_cell, scaled_spec, score_cell)
+from repro.ensemble.cellcache import CellCache, cell_key, open_cache
+from repro.ensemble.episodes import (EpisodeSpec, EpisodeWhatIf,
+                                     parse_episode)
+from repro.ensemble.runner import (CellStats, ReplayCell, run_cell_group,
+                                   run_cells, run_replay_cell, scaled_spec,
+                                   score_cell)
 
 __all__ = [
-    "CellStats", "EnsembleAggregator", "MetricBand", "ReplayCell",
-    "run_cells", "run_replay_cell", "scaled_spec", "score_cell",
+    "CellCache", "CellStats", "EnsembleAggregator", "EpisodeSpec",
+    "EpisodeWhatIf", "MetricBand", "ReplayCell", "cell_key", "open_cache",
+    "parse_episode", "run_cell_group", "run_cells", "run_replay_cell",
+    "scaled_spec", "score_cell",
 ]

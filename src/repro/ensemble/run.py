@@ -9,6 +9,15 @@ mean / percentile bands for ETTR, MTTF, goodput, fitted r_f, and the
 fault-attribution mix, next to the single-seed analytical predictions
 (``ettr_model`` at nominal rates, the MTTF ~ 1/N theory line) the bands
 are expected to contain.
+
+What-if *episodes* (``--episodes rf:2.0@4,outage:16@4``) run perturbed
+variants of every cell next to the base grid, prefix-shared through
+the fork plan: one carrier replay per (scale, seed) runs the common
+pre-onset prefix and each variant forks at its onset (``--no-fork``
+replays them cold — bit-identical output).  ``--cache DIR`` (or
+``$REPRO_CELL_CACHE``) memoizes scored cells content-addressed by
+engine version + cell config (``repro.ensemble.cellcache``): warm
+repeats answer from the store without replaying.
 """
 from __future__ import annotations
 
@@ -23,8 +32,9 @@ from repro.core.ettr_model import ETTRParams, expected_ettr
 from repro.core.mttf_model import projected_mttf_hours
 from repro.ensemble.aggregate import EnsembleAggregator
 from repro.ensemble.runner import (DEFAULT_CP_INTERVAL_S, U0_S, W_CP_S,
-                                   default_procs, grid, run_cells,
-                                   run_replay_cell)
+                                   ReplayCell, default_procs, grid,
+                                   run_cell_group, run_cells,
+                                   run_grouped_cells, run_replay_cell)
 
 
 def analytic_ettr(n_gpus: int, r_f: float, *, job_gpus: int = None,
@@ -110,11 +120,84 @@ def oracle_bracket(agg, bands_by_scale, n_gpus: int, *,
     return ok, eng.mean, ab
 
 
+def run_ensemble_grid(gpus_list, seeds, *, horizon_days: float = 8.0,
+                      r_f: float = 6.5e-3, min_hours: float = 12.0,
+                      procs: int = 0, on_result=None, scenario: str = None,
+                      episodes=(), fork: bool = True,
+                      cache=None) -> dict:
+    """Run the (scale x seed [x episode]) grid and fold streaming
+    results into one :class:`EnsembleAggregator` per episode variant —
+    key ``""`` is the unperturbed base grid, episode keys are canonical
+    spec tokens (``repro.ensemble.episodes``).
+
+    ``cache`` (a ``repro.ensemble.cellcache.CellCache``) is consulted
+    first: hits stream straight into their aggregator (the aggregator's
+    order-independence makes mixing cached and live cells safe) and
+    only misses are scheduled on the pool; every live result is
+    appended back.  With episodes and ``fork=True`` the live cells run
+    as prefix-sharing groups per (scale, seed)
+    (:func:`repro.ensemble.runner.run_cell_group`); ``fork=False`` is
+    the cold escape hatch — bit-identical output, cell for cell.
+
+    ``on_result(i, stats, done, total, cached)`` streams every cell
+    (cached or live) in completion order."""
+    from repro.ensemble.episodes import parse_episode
+
+    labels = [""]
+    for tok in episodes:
+        lab = parse_episode(tok).label()
+        if lab not in labels:
+            labels.append(lab)
+    cells = [ReplayCell(n_gpus=g, seed=s, horizon_days=horizon_days,
+                        r_f=r_f, min_hours=min_hours, scenario=scenario,
+                        episode=lab or None)
+             for g in gpus_list for s in seeds for lab in labels]
+    aggs = {lab: EnsembleAggregator() for lab in labels}
+    total = len(cells)
+    done = 0
+
+    def _fold(stats, cached):
+        nonlocal done
+        done += 1
+        aggs[stats.episode].add(stats)
+        if on_result is not None:
+            on_result(done - 1, stats, done, total, cached)
+
+    live = []
+    for c in cells:
+        hit = cache.get_cell(c) if cache is not None else None
+        if hit is not None:
+            _fold(hit, True)
+        else:
+            live.append(c)
+
+    by_coord = {(c.n_gpus, c.seed, c.episode or ""): c for c in live}
+
+    def _fold_live(_i, stats):
+        if cache is not None:
+            cache.put_cell(
+                by_coord[(stats.n_gpus, stats.seed, stats.episode)], stats)
+        _fold(stats, False)
+
+    if fork and any(c.episode for c in live):
+        groups: dict = {}
+        for c in live:
+            groups.setdefault((c.n_gpus, c.seed), []).append(c)
+        run_grouped_cells(run_cell_group, list(groups.values()),
+                          procs=procs, on_result=_fold_live)
+    else:
+        run_cells(run_replay_cell, live, procs=procs,
+                  on_result=_fold_live)
+    return aggs
+
+
 def run_ensemble(gpus_list, seeds, *, horizon_days: float = 8.0,
                  r_f: float = 6.5e-3, min_hours: float = 12.0,
                  procs: int = 0, on_result=None,
                  scenario: str = None) -> EnsembleAggregator:
-    """Run the grid and fold the streaming results into an aggregator."""
+    """Run the plain grid and fold the streaming results into an
+    aggregator (the episode/cache-aware front end is
+    :func:`run_ensemble_grid`)."""
     cells = grid(gpus_list, seeds, horizon_days=horizon_days, r_f=r_f,
                  min_hours=min_hours, scenario=scenario)
     agg = EnsembleAggregator()
@@ -144,6 +227,22 @@ def main(argv=None) -> int:
                     help="fault-model v2 scenario pack (see "
                          "repro.configs.scenarios; default: exact-legacy "
                          "independent-v1)")
+    ap.add_argument("--episodes", default=None,
+                    help="comma-separated what-if episodes run next to the "
+                         "base grid (rf:FACTOR@DAY scales the fault rate, "
+                         "outage:N@DAY removes N nodes); episode cells "
+                         "share the pre-onset prefix with the base cell "
+                         "via the fork plan")
+    ap.add_argument("--no-fork", action="store_true",
+                    help="run every episode cell cold from t=0 instead of "
+                         "forking at its onset (the escape hatch; output "
+                         "is identical up to wall_s and fork provenance)")
+    ap.add_argument("--cache", default=None, metavar="DIR",
+                    help="content-addressed cell cache directory (default: "
+                         "$REPRO_CELL_CACHE): hits skip the replay, "
+                         "misses run and are appended")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="ignore --cache/$REPRO_CELL_CACHE for this run")
     ap.add_argument("--analytic-bands", action="store_true",
                     help="also print the replay-free batched analytical "
                          "bands (repro.core.backend.batch_bands fed each "
@@ -172,6 +271,16 @@ def main(argv=None) -> int:
         ap.error(f"--gpus has duplicate scales: {args.gpus} "
                  f"(each (scale, seed) cell must be unique)")
     seeds = range(args.seeds)
+    episodes = []
+    if args.episodes:
+        from repro.ensemble.episodes import parse_episode
+        try:
+            episodes = [parse_episode(tok).label()
+                        for tok in args.episodes.split(",")]
+        except ValueError as e:
+            ap.error(str(e))
+    from repro.ensemble.cellcache import open_cache
+    cache = open_cache(args.cache, no_cache=args.no_cache)
 
     on_result = None
     hb = None
@@ -179,20 +288,31 @@ def main(argv=None) -> int:
         from repro.obs import Heartbeat
 
         hb = Heartbeat(
-            total=len(gpus_list) * args.seeds, procs=args.procs,
+            total=len(gpus_list) * args.seeds * (1 + len(episodes)),
+            procs=args.procs,
             print_fn=(lambda line: print(f"  {line}", flush=True))
             if args.progress else None,
             jsonl_path=args.heartbeat)
 
-        def on_result(i, stats, done, total):
-            hb.on_cell(f"{stats.n_gpus}gpu/seed{stats.seed}",
-                       stats.wall_s)
+        def on_result(i, stats, done, total, cached=False):
+            ep = f"/{stats.episode}" if stats.episode else ""
+            phase = None
+            if cached:
+                phase = "cached"
+            elif stats.fork:
+                phase = ("prefix" if stats.fork.get("carries_probe")
+                         else "suffix")
+            hb.on_cell(f"{stats.n_gpus}gpu/seed{stats.seed}{ep}",
+                       0.0 if cached else stats.wall_s, phase=phase,
+                       cached=cached if cache is not None else None)
 
     t0 = time.time()
-    agg = run_ensemble(gpus_list, seeds, horizon_days=args.days,
-                       r_f=args.r_f, min_hours=args.min_hours,
-                       procs=args.procs, on_result=on_result,
-                       scenario=args.scenario)
+    aggs = run_ensemble_grid(gpus_list, seeds, horizon_days=args.days,
+                             r_f=args.r_f, min_hours=args.min_hours,
+                             procs=args.procs, on_result=on_result,
+                             scenario=args.scenario, episodes=episodes,
+                             fork=not args.no_fork, cache=cache)
+    agg = aggs[""]
     wall = time.time() - t0
     if hb is not None:
         hb.close()
@@ -201,10 +321,19 @@ def main(argv=None) -> int:
 
     print()
     print(agg.band_table())
+    for lab in episodes:
+        print()
+        print(f"episode {lab}:")
+        print(aggs[lab].band_table())
     print()
-    print(f"{agg.n_cells} cells in {wall:.1f}s on {args.procs} procs "
-          f"(~{agg.rsc1_cluster_days() / max(wall, 1e-9):.2f} "
+    n_cells = sum(a.n_cells for a in aggs.values())
+    cluster_days = sum(a.rsc1_cluster_days() for a in aggs.values())
+    print(f"{n_cells} cells in {wall:.1f}s on {args.procs} procs "
+          f"(~{cluster_days / max(wall, 1e-9):.2f} "
           f"RSC-1-cluster-days/s)")
+    if cache is not None:
+        print(f"cell cache {cache.root}: {cache.hits} hits, "
+              f"{cache.misses} misses ({len(cache)} cells held)")
     for g in agg.scales():
         bands = agg.bands(g)
         model = analytic_ettr(g, args.r_f)
@@ -246,6 +375,12 @@ def main(argv=None) -> int:
         out = agg.to_json()
         out["wall_s"] = wall
         out["procs"] = args.procs
+        if episodes:
+            out["episodes"] = {lab: aggs[lab].to_json()
+                               for lab in episodes}
+        if cache is not None:
+            out["cache"] = {"root": cache.root, "hits": cache.hits,
+                            "misses": cache.misses}
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)
         print(f"wrote {args.json}")

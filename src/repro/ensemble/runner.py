@@ -17,7 +17,7 @@ from __future__ import annotations
 import math
 import os
 import time
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass, field, fields, replace
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -180,6 +180,7 @@ class ReplayCell:
     min_hours: float = 12.0
     min_gpus: Optional[int] = None   # None -> default_min_gpus(n_gpus)
     scenario: Optional[str] = None   # fault-model v2 pack name
+    episode: Optional[str] = None    # what-if episode token (episodes.py)
 
 
 @dataclass
@@ -203,38 +204,167 @@ class CellStats:
     fitted_r_f: float
     n_evicted: int
     attribution: dict = field(default_factory=dict)
+    episode: str = ""                      # "" -> unperturbed cell
+    fork: dict = field(default_factory=dict)   # fork-plan provenance
 
     def to_json(self) -> dict:
-        return asdict(self)
+        """Canonical JSON form: recursively sorted keys, numpy scalars
+        coerced to Python floats/ints — byte-stable under
+        ``json.dumps(..., sort_keys=True)``, which is what the cell
+        cache digests and jsonl round-trips key on."""
+        return _canonical(asdict(self))
+
+    @classmethod
+    def from_json(cls, d: dict) -> "CellStats":
+        """Inverse of :meth:`to_json` (unknown keys ignored, so newer
+        stores load under older readers and vice versa)."""
+        names = {f.name for f in fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+
+def _canonical(v):
+    """Recursively sort dict keys and coerce numpy scalars to plain
+    Python so ``json.dumps(..., sort_keys=True)`` of the result is
+    byte-stable across numpy versions and insertion orders."""
+    if isinstance(v, dict):
+        return {str(k): _canonical(v[k]) for k in sorted(v, key=str)}
+    if isinstance(v, (list, tuple)):
+        return [_canonical(x) for x in v]
+    if isinstance(v, np.generic):
+        v = v.item()
+    if isinstance(v, float):
+        return float(v)
+    return v
 
 
 def run_replay_cell(cell: ReplayCell) -> CellStats:
-    """One full replay with a trace recorder attached, scored in-process
-    (module-level: spawn-picklable pool worker)."""
+    """One full cold replay with a trace recorder attached, scored
+    in-process (module-level: spawn-picklable pool worker).  A cell
+    with an ``episode`` runs with the :class:`EpisodeWhatIf` policy
+    attached from t=0 — the reference trajectory the fork-grouped path
+    (:func:`run_cell_group`) must reproduce bit-for-bit."""
     from repro.cluster.scheduler import ClusterSim
     from repro.trace import TraceRecorder
 
+    policy = None
+    if cell.episode:
+        from repro.ensemble.episodes import EpisodeWhatIf, parse_episode
+        policy = EpisodeWhatIf(parse_episode(cell.episode))
     spec = scaled_spec(cell.n_gpus, r_f=cell.r_f)
     recorder = TraceRecorder()
     t0 = time.time()
     sim = ClusterSim(spec, horizon_days=cell.horizon_days, seed=cell.seed,
-                     recorder=recorder, scenario=cell.scenario)
+                     recorder=recorder, scenario=cell.scenario,
+                     policy=policy)
     sim.run()
     trace = recorder.finalize(sim)
     stats = score_cell(sim, trace, policy=None, min_gpus=cell.min_gpus,
                        min_hours=cell.min_hours, r_f_nominal=cell.r_f)
     return CellStats(n_gpus=cell.n_gpus, seed=cell.seed,
                      wall_s=round(time.time() - t0, 3),
-                     sim_days=cell.horizon_days, **stats)
+                     sim_days=cell.horizon_days,
+                     episode=cell.episode or "", **stats)
+
+
+def run_cell_group(cells: Sequence[ReplayCell]) -> list[CellStats]:
+    """Every cell of one prefix-sharing group — the unperturbed base
+    cell plus episode what-if variants at the same (scale, seed) — via
+    the fork plan (``repro.mitigations.forkplan``), module-level so a
+    spawn pool can run whole groups as tasks.
+
+    One *carrier* replay runs the shared pre-onset prefix with each
+    episode shadowed behind a trap proxy; a snapshot hint lands exactly
+    on every onset, so each variant forks at its divergence boundary
+    and replays a ~zero-length prefix before perturbing for real.  The
+    base cell is scored straight off the carrier's trace (the carrier
+    *is* its cold replay).  Output matches ``run_replay_cell`` per
+    cell, bit-for-bit, except ``wall_s`` (machine time) and the
+    ``fork`` provenance dict."""
+    from repro.ensemble.episodes import EpisodeWhatIf, parse_episode
+
+    cells = list(cells)
+    base_cfg = replace(cells[0], episode=None)
+    for c in cells[1:]:
+        if replace(c, episode=None) != base_cfg:
+            raise ValueError(
+                f"run_cell_group: cells must share everything but "
+                f"episode ({replace(c, episode=None)} != {base_cfg})")
+    ep_idx = [i for i, c in enumerate(cells) if c.episode]
+    if not ep_idx:
+        return [run_replay_cell(c) for c in cells]
+
+    from repro.cluster.scheduler import ClusterSim
+    from repro.mitigations.forkplan import ForkProbePolicy, fork_cell
+    from repro.trace import TraceRecorder
+
+    specs = [parse_episode(cells[i].episode) for i in ep_idx]
+    shadows = [EpisodeWhatIf(s) for s in specs]
+    # one snapshot per distinct onset, no rolling cadence: every
+    # divergence lands on a hint, so periodic snapshots are dead weight
+    probe = ForkProbePolicy(
+        shadows, snap_period_s=0.0,
+        snap_hints_s={s.onset_days * 86400.0 for s in specs})
+    spec = scaled_spec(base_cfg.n_gpus, r_f=base_cfg.r_f)
+    recorder = TraceRecorder()
+    sim = ClusterSim(spec, horizon_days=base_cfg.horizon_days,
+                     seed=base_cfg.seed, policy=probe, recorder=recorder,
+                     scenario=base_cfg.scenario)
+    probe.prepare(sim)
+    t0 = time.time()
+    sim.run()
+    trace = recorder.finalize(sim)
+    probe_wall = time.time() - t0
+
+    score_kw = dict(min_gpus=base_cfg.min_gpus, min_hours=base_cfg.min_hours,
+                    r_f_nominal=base_cfg.r_f)
+    shadow_of = {cell_i: shadow_i for shadow_i, cell_i in enumerate(ep_idx)}
+    out = []
+    for i, cell in enumerate(cells):
+        sh = shadow_of.get(i)
+        div = None if sh is None else probe.divergences[sh]
+        t1 = time.time()
+        if div is None:
+            # base cell — or an episode whose onset is past the horizon:
+            # the carrier trajectory is this cell's
+            cell_sim, cell_trace = sim, trace
+            fork_info = {"mode": "shared"}
+        else:
+            fork = fork_cell(div, shadow_idx=sh,
+                             make_policy_fn=lambda s=specs[sh]:
+                             EpisodeWhatIf(s))
+            fork.run()
+            cell_trace = fork.recorder.finalize(fork)
+            cell_sim = fork
+            fork_info = {
+                "mode": "forked",
+                "t_fork_days": round(div.cursor_t / 86400.0, 4),
+                "replayed_days": round((div.t - div.cursor_t) / 86400.0, 4),
+            }
+        wall = time.time() - t1
+        if i == 0:
+            # the first cell carries the shared prefix replay, so summed
+            # cell walls stay comparable with the cold path
+            fork_info["carries_probe"] = True
+            fork_info["probe_wall_s"] = round(probe_wall, 3)
+            fork_info["n_snapshots"] = probe.n_snapshots
+            wall += probe_wall
+        stats = score_cell(cell_sim, cell_trace, policy=None, **score_kw)
+        out.append(CellStats(n_gpus=cell.n_gpus, seed=cell.seed,
+                             wall_s=round(wall, 3),
+                             sim_days=cell.horizon_days,
+                             episode=cell.episode or "", fork=fork_info,
+                             **stats))
+    return out
 
 
 def grid(gpus_list: Sequence[int], seeds: Sequence[int], *,
          horizon_days: float = 8.0, r_f: float = 6.5e-3,
-         min_hours: float = 12.0,
-         scenario: Optional[str] = None) -> list[ReplayCell]:
+         min_hours: float = 12.0, scenario: Optional[str] = None,
+         episode: Optional[str] = None) -> list[ReplayCell]:
     """The seed x scale grid, scale-major (matches aggregation order)."""
     return [ReplayCell(n_gpus=g, seed=s, horizon_days=horizon_days,
-                       r_f=r_f, min_hours=min_hours, scenario=scenario)
+                       r_f=r_f, min_hours=min_hours, scenario=scenario,
+                       episode=episode)
             for g in gpus_list for s in seeds]
 
 
@@ -303,4 +433,11 @@ def run_grouped_cells(worker, tasks: Sequence, *, procs: int = 0,
 
 
 def default_procs() -> int:
-    return min(os.cpu_count() or 1, 8)
+    """Pool width default: the CPUs this process may actually run on
+    (containers/cgroups often pin fewer than ``os.cpu_count`` reports),
+    capped at 8."""
+    try:
+        n = len(os.sched_getaffinity(0))
+    except (AttributeError, OSError):
+        n = os.cpu_count() or 1
+    return min(n or 1, 8)

@@ -55,7 +55,7 @@ SHADOW_TAG = "__fork_shadow__"
 # the scheduler's public intervention helpers: the first call to any of
 # these is the policy-divergence point
 MUTATORS = frozenset({"hold_node", "release_node", "evict_node",
-                      "restart_node"})
+                      "restart_node", "scale_fault_rates"})
 
 DEFAULT_SNAP_PERIOD_S = 86400.0
 
@@ -129,9 +129,17 @@ class ForkProbePolicy(MitigationPolicy):
     name = "__fork_probe__"
 
     def __init__(self, shadows, *,
-                 snap_period_s: float = DEFAULT_SNAP_PERIOD_S):
+                 snap_period_s: float = DEFAULT_SNAP_PERIOD_S,
+                 snap_hints_s=()):
         self.shadows: list[MitigationPolicy] = list(shadows)
         self.snap_period_s = snap_period_s
+        # known divergence boundaries (e.g. ensemble episode onsets):
+        # a snapshot lands exactly there, armed in bind() *before* the
+        # shadow binds push their own timers, so at an equal fire time
+        # the snapshot's event seq is lower and it pops first — the
+        # fork then replays a ~zero-length prefix
+        self.snap_hints_s = sorted({float(h) for h in snap_hints_s
+                                    if h > 0.0})
         n = len(self.shadows)
         self.live = [True] * n
         self.divergences: list[Optional[Divergence]] = [None] * n
@@ -211,6 +219,9 @@ class ForkProbePolicy(MitigationPolicy):
             raise ValueError(
                 "ForkProbePolicy.prepare(sim) must be called before "
                 "sim.run() — the t=0 cursor snapshot precedes bind")
+        for h in self.snap_hints_s:
+            if h < sim.horizon_s:
+                sim.push_policy_timer(h, SNAP_TAG)
         self._dispatch_all("bind", 0.0, lambda s, v: s.bind(v))
         self._arm_snap(0.0)
 

@@ -32,7 +32,7 @@ import math
 import os
 import time
 from collections import defaultdict
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass, field, fields
 from typing import Optional, Sequence
 
 import numpy as np
@@ -40,7 +40,7 @@ import numpy as np
 from repro.cluster.scheduler import ClusterSim
 from repro.ensemble.runner import (  # noqa: F401  (re-exported for compat)
     DEFAULT_CP_INTERVAL_S, JOBS_PER_NODE_DAY, U0_S, W_CP_S, default_min_gpus,
-    run_cells, run_grouped_cells, scaled_spec, score_cell)
+    default_procs, run_cells, run_grouped_cells, scaled_spec, score_cell)
 from repro.mitigations.policy import make_policy
 from repro.trace import TraceRecorder
 from repro.trace import io as trace_io
@@ -107,6 +107,12 @@ class CellResult:
     n_evicted: int
     extra: dict = field(default_factory=dict)
     trace_path: Optional[str] = None   # npz archive (--save-traces)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "CellResult":
+        """Rebuild from a cell-cache stats dict (unknown keys ignored)."""
+        names = {f.name for f in fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
 
 
 def _finish_cell(policy_name: str, n_gpus: int, seed: int, sim, trace,
@@ -350,7 +356,7 @@ def sweep(policies: Sequence[str] = DEFAULT_POLICIES,
           scenario: Optional[str] = None,
           r_f: float = 6.5e-3,
           fork: bool = True, snap_period_days: float = 1.0,
-          on_result=None) -> SweepResult:
+          cache=None, on_result=None) -> SweepResult:
     """Run the policy x scale x seed grid on the shared ensemble executor
     (``procs`` > 1 fans cells out over its spawn pool; 0/1 runs serially
     in-process).  ``fork=True`` (default) executes the grid as
@@ -362,24 +368,73 @@ def sweep(policies: Sequence[str] = DEFAULT_POLICIES,
     a fault-model v2 pack applied to every cell; ``r_f`` the nominal
     per-node-day hardware fault rate; ``on_result(i, cell)`` streams
     each ``CellResult`` as it lands (in completion order — the
-    heartbeat/progress channel)."""
+    heartbeat/progress channel).
+
+    ``cache`` (a ``repro.ensemble.cellcache.CellCache``) memoizes
+    scored cells by content key: hits stream back immediately (marked
+    ``extra["cache_hit"]``) and only misses replay — fork groups shrink
+    to their missing policies.  Ignored when ``trace_dir`` is set (an
+    archived trace must come from a real replay)."""
     kw = dict(horizon_days=horizon_days, min_gpus=min_gpus,
               min_hours=min_hours, trace_dir=trace_dir, scenario=scenario,
               r_f=r_f)
+    use_cache = cache is not None and trace_dir is None
     t0 = time.time()
+    delivered = 0
+    cells: list[CellResult] = []
+
+    def _deliver(c: CellResult) -> None:
+        nonlocal delivered
+        cells.append(c)
+        if on_result is not None:
+            on_result(delivered, c)
+        delivered += 1
+
+    def _cfg(p: str, g: int, s: int) -> dict:
+        from repro.ensemble.cellcache import sweep_config
+        return sweep_config(p, g, s, horizon_days=horizon_days,
+                            min_gpus=min_gpus, min_hours=min_hours,
+                            scenario=scenario, r_f=r_f,
+                            policy_kwargs=(policy_kwargs or {}).get(p))
+
+    miss: list[tuple] = []
+    for g in gpus_list:
+        for s in seeds:
+            for p in policies:
+                if use_cache:
+                    from repro.ensemble.cellcache import config_key
+                    rec = cache.lookup(config_key(_cfg(p, g, s),
+                                                  kind="sweep"))
+                    if rec is not None:
+                        c = CellResult.from_json(rec)
+                        c.extra = {**c.extra, "cache_hit": True}
+                        _deliver(c)
+                        continue
+                miss.append((p, g, s))
+
+    def _live(_i, c: CellResult) -> None:
+        if use_cache:
+            from repro.ensemble.cellcache import config_key
+            cfg = _cfg(c.policy, c.n_gpus, c.seed)
+            cache.store(config_key(cfg, kind="sweep"), "sweep", cfg,
+                        asdict(c))
+        _deliver(c)
+
     if fork:
-        gtasks = [(tuple(policies), g, s,
+        by_gs: dict[tuple, list] = {}
+        for p, g, s in miss:
+            by_gs.setdefault((g, s), []).append(p)
+        gtasks = [(tuple(ps), g, s,
                    {**kw, "policy_kwargs": policy_kwargs,
                     "snap_period_days": snap_period_days})
-                  for g in gpus_list for s in seeds]
-        cells = run_grouped_cells(_fork_group_worker, gtasks, procs=procs,
-                                  on_result=on_result)
+                  for (g, s), ps in by_gs.items()]
+        run_grouped_cells(_fork_group_worker, gtasks, procs=procs,
+                          on_result=_live)
     else:
         tasks = [(p, g, s, {**kw, "policy_kwargs":
                             (policy_kwargs or {}).get(p)})
-                 for p in policies for g in gpus_list for s in seeds]
-        cells = run_cells(_cell_worker, tasks, procs=procs,
-                          on_result=on_result)
+                 for p, g, s in miss]
+        run_cells(_cell_worker, tasks, procs=procs, on_result=_live)
     cells.sort(key=lambda c: (c.n_gpus, c.policy, c.seed))
     return SweepResult(cells, horizon_days, wall_s=time.time() - t0)
 
@@ -396,7 +451,7 @@ def main() -> None:
     ap.add_argument("--days", type=float, default=8.0)
     ap.add_argument("--min-hours", type=float, default=12.0,
                     help="min total runtime for an ETTR-qualifying run")
-    ap.add_argument("--procs", type=int, default=min(os.cpu_count() or 1, 6))
+    ap.add_argument("--procs", type=int, default=default_procs())
     ap.add_argument("--scenario", default=None,
                     help="fault-model v2 scenario pack (see "
                          "repro.configs.scenarios; default: exact-legacy "
@@ -419,6 +474,12 @@ def main() -> None:
     ap.add_argument("--snap-period-days", type=float, default=1.0,
                     help="rolling-snapshot cadence of the fork plan's "
                          "probe replay (sim days)")
+    ap.add_argument("--cache", default=None, metavar="DIR",
+                    help="content-addressed cell cache directory (default: "
+                         "$REPRO_CELL_CACHE): hits skip the replay, misses "
+                         "run and are appended; ignored with --save-traces")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="ignore --cache/$REPRO_CELL_CACHE for this run")
     ap.add_argument("--json", default=None)
     ap.add_argument("--save-traces", default=None, metavar="DIR",
                     help="archive each cell's trace as npz under DIR "
@@ -449,6 +510,11 @@ def main() -> None:
         print(res.table())
         print()
     fork = not args.no_fork
+    from repro.ensemble.cellcache import open_cache
+    cache = open_cache(args.cache, no_cache=args.no_cache)
+    if cache is not None and args.save_traces:
+        print(f"cell cache {cache.root} ignored: --save-traces needs "
+              f"real replays")
     on_result = None
     hb = None
     if args.progress or args.heartbeat:
@@ -471,19 +537,23 @@ def main() -> None:
             phase_totals=phase_totals)
 
         def on_result(i, cell):
+            cached = cell.extra.get("cache_hit", False)
             fk = cell.extra.get("fork")
             phase = None
-            if fk is not None:
+            if cached:
+                phase = "cached"
+            elif fk is not None:
                 phase = "prefix" if fk.get("carries_probe") else "suffix"
             hb.on_cell(f"{cell.policy}/{cell.n_gpus}gpu/s{cell.seed}",
-                       cell.wall_s, phase=phase)
+                       0.0 if cached else cell.wall_s, phase=phase,
+                       cached=cached if cache is not None else None)
 
     res = sweep(policies=policies, gpus_list=gpus_list,
                 seeds=range(args.seeds), horizon_days=args.days,
                 min_hours=args.min_hours, procs=args.procs,
                 trace_dir=args.save_traces, scenario=args.scenario,
                 fork=fork, snap_period_days=args.snap_period_days,
-                on_result=on_result)
+                cache=cache, on_result=on_result)
     if hb is not None:
         hb.close()
         if args.heartbeat:
@@ -493,6 +563,9 @@ def main() -> None:
         print(f"per-cell traces saved under {args.save_traces}/")
     print(f"\n{len(res.cells)} cells in {res.wall_s:.1f}s "
           f"(horizon {res.horizon_days:g} days)")
+    if cache is not None and not args.save_traces:
+        print(f"cell cache {cache.root}: {cache.hits} hits, "
+              f"{cache.misses} misses ({len(cache)} cells held)")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(res.to_json(), f, indent=1)

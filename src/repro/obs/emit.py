@@ -176,6 +176,12 @@ class Heartbeat:
         self.phase_totals = dict(phase_totals) if phase_totals else None
         self._phase_done: dict = {}
         self._phase_wall: dict = {}
+        # cell-cache channel: populated only when the caller marks cells
+        # as cached=True/False (a grid running with a cell cache); beats
+        # then carry running hit/miss counts
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self._cache_seen = False
         self._clock = clock
         self._t0 = clock()
         self._print = print_fn
@@ -206,10 +212,19 @@ class Heartbeat:
         return work / self.procs
 
     def on_cell(self, label: str, wall_s: float,
-                phase: Optional[str] = None) -> dict:
-        """Fold one completed cell; returns (and emits) the beat."""
+                phase: Optional[str] = None,
+                cached: Optional[bool] = None) -> dict:
+        """Fold one completed cell; returns (and emits) the beat.
+        ``cached`` (tri-state) marks cell-cache hits/misses — pass
+        ``wall_s=0.0`` for a hit so pool efficiency stays honest."""
         self.done += 1
         self.cell_wall_sum += wall_s
+        if cached is not None:
+            self._cache_seen = True
+            if cached:
+                self.cache_hits += 1
+            else:
+                self.cache_misses += 1
         if phase is not None:
             self._phase_done[phase] = self._phase_done.get(phase, 0) + 1
             self._phase_wall[phase] = (self._phase_wall.get(phase, 0.0)
@@ -235,6 +250,9 @@ class Heartbeat:
         }
         if phase is not None:
             beat["phase"] = phase
+        if self._cache_seen:
+            beat["cache_hits"] = self.cache_hits
+            beat["cache_misses"] = self.cache_misses
         if self._writer is not None:
             self._writer(beat)
         if self._print is not None:
@@ -244,13 +262,15 @@ class Heartbeat:
     @staticmethod
     def format_line(beat: dict) -> str:
         phase = f" [{beat['phase']}]" if "phase" in beat else ""
+        cache = (f"  cache {beat['cache_hits']}h/{beat['cache_misses']}m"
+                 if "cache_hits" in beat else "")
         return (f"[{beat['done']:3d}/{beat['total']}] "
                 f"{beat['label']:<28s}{phase} "
                 f"{beat['cell_wall_s']:6.2f}s  "
                 f"eta {beat['eta_s']:6.1f}s  "
                 f"{beat['cells_per_sec']:5.2f} cells/s  "
                 f"eff {beat['pool_efficiency']:.2f} "
-                f"on {beat['procs']} procs")
+                f"on {beat['procs']} procs{cache}")
 
     def close(self) -> None:
         if self._writer is not None:

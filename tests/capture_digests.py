@@ -1,12 +1,16 @@
 """Regenerate the bit-identity ``ENGINE_DIGESTS`` block in
-``tests/test_sim_perf.py``.
+``src/repro/cluster/engine_version.py``.
 
   PYTHONPATH=src python -m tests.capture_digests [--check]
 
 Runs every config in ``DIGEST_CONFIGS`` through the current engine,
 computes each ``engine_digest``, and rewrites the ``ENGINE_DIGESTS``
 literal in place (``--check`` only reports drift and exits non-zero
-instead of writing — the form a release checklist runs).
+instead of writing — the form a release checklist runs).  The literal
+lives next to the engine because the content-addressed cell cache
+(``repro.ensemble.cellcache``) folds it into every cache key: the same
+rewrite that blesses a behavior change also invalidates every cached
+cell computed under the old engine.
 
 Recapturing is the *sanctioned* workflow for an intentional
 behavior change to the engine's event/RNG sequence (e.g. the
@@ -24,7 +28,8 @@ import re
 import sys
 
 HERE = os.path.dirname(os.path.abspath(__file__))
-TARGET = os.path.join(HERE, "test_sim_perf.py")
+TARGET = os.path.join(os.path.dirname(HERE), "src", "repro", "cluster",
+                      "engine_version.py")
 
 _BLOCK_RE = re.compile(
     r"ENGINE_DIGESTS = \{\n(?:.*?\n)*?\}\n", re.MULTILINE)
@@ -65,7 +70,7 @@ def main(argv=None) -> int:
     print("computing engine digests on the current engine...")
     digests = compute_digests()
 
-    from tests.test_sim_perf import ENGINE_DIGESTS
+    from repro.cluster.engine_version import ENGINE_DIGESTS
     if digests == dict(ENGINE_DIGESTS):
         print("ENGINE_DIGESTS already match the current engine; "
               "nothing to do")

@@ -1,0 +1,270 @@
+"""Warm-grid gates: content-addressed cell cache + ensemble fork plan.
+
+The load-bearing contracts (ISSUE 10):
+
+* **Bit-identity of the warm paths** — a cache hit returns a
+  ``CellStats`` byte-equal to the live replay's, and a fork-grouped
+  episode grid equals a ``--no-fork`` (all-cold) grid cell for cell.
+  If either drifts, warm grids silently stop being the figures they
+  claim to reproduce.
+* **Invalidation by construction** — the cache key hashes the engine
+  version and the canonical cell config, so engine or config drift is
+  a *miss* (never a stale read) without any invalidation protocol.
+* **Robust store** — corrupt jsonl lines are skipped with a warning;
+  duplicate keys resolve first-wins.
+* **Order-independent mixing** — a grid answered partly from cache and
+  partly live aggregates bit-identically to an all-live grid.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.ensemble.cellcache import (CACHE_FILE, CellCache, cell_key,
+                                      config_key, open_cache, sweep_key)
+from repro.ensemble.runner import (CellStats, ReplayCell, default_procs,
+                                   run_replay_cell)
+
+CELL = ReplayCell(n_gpus=256, seed=0, horizon_days=1.0, min_hours=2.0)
+
+
+@pytest.fixture(scope="module")
+def cell_stats():
+    return run_replay_cell(CELL)
+
+
+# -- canonical JSON / round-trip --------------------------------------------
+def test_to_json_sorted_and_canonically_typed():
+    s = CellStats(n_gpus=np.int64(256), seed=0, wall_s=np.float64(0.5),
+                  sim_days=1.0, n_records=10, n_faults=1,
+                  n_infra_failures=1, n_runs_measured=2,
+                  ettr_sim=np.float32(0.9), ettr_model=0.9,
+                  ettr_model_nominal=0.9, mttf_large_h=12.0, goodput=0.8,
+                  fitted_r_f=6.5e-3, n_evicted=0,
+                  attribution={"b_net": np.float64(0.75), "a_gpu": 0.25})
+    d = s.to_json()
+    assert list(d) == sorted(d)
+    assert list(d["attribution"]) == ["a_gpu", "b_net"]
+    for v in (d["wall_s"], d["ettr_sim"], d["attribution"]["b_net"]):
+        assert type(v) is float
+    # byte-stable: dumps of to_json is already in sorted-keys form
+    assert json.dumps(d) == json.dumps(d, sort_keys=True)
+
+
+def _dumps(stats: CellStats) -> str:
+    # NaN metrics (no qualifying runs at tiny horizons) are real cell
+    # values; json text compares them where dict equality cannot
+    return json.dumps(stats.to_json())
+
+
+def test_cell_stats_round_trip(cell_stats):
+    back = CellStats.from_json(json.loads(_dumps(cell_stats)))
+    assert _dumps(back) == _dumps(cell_stats)
+
+
+def test_from_json_ignores_unknown_keys(cell_stats):
+    d = dict(cell_stats.to_json(), some_future_field=1)
+    assert _dumps(CellStats.from_json(d)) == _dumps(cell_stats)
+
+
+# -- content addressing -----------------------------------------------------
+def test_cache_hit_bit_equal(tmp_path, cell_stats):
+    cache = CellCache(str(tmp_path))
+    assert cache.get_cell(CELL) is None
+    cache.put_cell(CELL, cell_stats)
+    hit = CellCache(str(tmp_path)).get_cell(CELL)   # fresh load from disk
+    assert hit is not None
+    assert _dumps(hit) == _dumps(cell_stats)
+
+
+def test_engine_drift_invalidates(tmp_path, cell_stats):
+    """A different engine-version digest addresses a different key: the
+    store holds the old entry but the drifted engine never sees it."""
+    cache = CellCache(str(tmp_path))
+    cache.store(cell_key(CELL, engine="engine-v1"), "ensemble", {},
+                cell_stats.to_json())
+    assert cache.lookup(cell_key(CELL, engine="engine-v1")) is not None
+    assert cache.lookup(cell_key(CELL, engine="engine-v2")) is None
+    assert cell_key(CELL) not in (cell_key(CELL, engine="engine-v1"),
+                                  cell_key(CELL, engine="engine-v2"))
+
+
+def test_config_drift_invalidates():
+    base = cell_key(CELL)
+    for changed in (ReplayCell(n_gpus=256, seed=1, horizon_days=1.0,
+                               min_hours=2.0),
+                    ReplayCell(n_gpus=512, seed=0, horizon_days=1.0,
+                               min_hours=2.0),
+                    ReplayCell(n_gpus=256, seed=0, horizon_days=1.0,
+                               min_hours=2.0, scenario="grouped_v2"),
+                    ReplayCell(n_gpus=256, seed=0, horizon_days=1.0,
+                               min_hours=2.0, episode="rf:2@1")):
+        assert cell_key(changed) != base
+    # sweep cells are namespaced apart from ensemble cells even when the
+    # config dicts collide
+    cfg = {"a": 1}
+    assert config_key(cfg, kind="sweep") != config_key(cfg, kind="ensemble")
+    assert sweep_key("baseline", 256, 0, horizon_days=1.0, min_gpus=16,
+                     min_hours=2.0, scenario=None, r_f=6.5e-3) \
+        != sweep_key("lemon_eviction", 256, 0, horizon_days=1.0,
+                     min_gpus=16, min_hours=2.0, scenario=None, r_f=6.5e-3)
+
+
+def test_key_ignores_dict_order_and_numpy_types():
+    assert config_key({"a": 1, "b": np.float64(2.0)}, kind="t",
+                      engine="e") \
+        == config_key({"b": 2.0, "a": 1}, kind="t", engine="e")
+
+
+# -- store robustness -------------------------------------------------------
+def test_corrupt_lines_skipped_with_warning(tmp_path, cell_stats):
+    cache = CellCache(str(tmp_path))
+    cache.put_cell(CELL, cell_stats)
+    path = os.path.join(str(tmp_path), CACHE_FILE)
+    with open(path, "a") as f:
+        f.write("{not json at all\n")                       # torn write
+        f.write(json.dumps({"key": "k2"}) + "\n")           # missing stats
+        f.write(json.dumps({"key": 3, "stats": {}}) + "\n")  # wrong type
+    with pytest.warns(UserWarning, match="corrupt line skipped"):
+        back = CellCache(str(tmp_path))
+    assert len(back) == 1
+    assert _dumps(back.get_cell(CELL)) == _dumps(cell_stats)
+
+
+def test_duplicate_keys_first_wins(tmp_path):
+    path = os.path.join(str(tmp_path), CACHE_FILE)
+    os.makedirs(str(tmp_path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(json.dumps({"key": "k", "stats": {"v": 1}}) + "\n")
+        f.write(json.dumps({"key": "k", "stats": {"v": 2}}) + "\n")
+    cache = CellCache(str(tmp_path))
+    assert cache.lookup("k") == {"v": 1}
+    cache.store("k", "t", {}, {"v": 3})      # held key: append is a no-op
+    assert sum(1 for _ in open(path)) == 2
+
+
+def test_open_cache_resolution(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_CELL_CACHE", raising=False)
+    assert open_cache(None) is None
+    assert open_cache(str(tmp_path), no_cache=True) is None
+    assert open_cache(str(tmp_path)).root == str(tmp_path)
+    monkeypatch.setenv("REPRO_CELL_CACHE", str(tmp_path / "env"))
+    assert open_cache(None).root == str(tmp_path / "env")
+
+
+# -- grid integration -------------------------------------------------------
+def _grid_stats(cache=None, episodes=(), fork=True):
+    from repro.ensemble.run import run_ensemble_grid
+
+    aggs = run_ensemble_grid([256, 512], range(2), horizon_days=1.0,
+                             min_hours=2.0, procs=0, cache=cache,
+                             episodes=episodes, fork=fork)
+    return {lab: json.dumps(a.to_json()["scales"], sort_keys=True)
+            for lab, a in aggs.items()}
+
+
+def test_mixed_hit_live_grid_equals_all_live(tmp_path):
+    """Half the store deleted -> half hits, half live replays; the
+    aggregated bands must be bit-identical to the all-live grid."""
+    all_live = _grid_stats()
+    cache = CellCache(str(tmp_path))
+    _grid_stats(cache=cache)                 # cold: store all 4 cells
+    path = os.path.join(str(tmp_path), CACHE_FILE)
+    lines = open(path).read().splitlines()
+    assert len(lines) == 4
+    with open(path, "w") as f:
+        f.write("\n".join(lines[:2]) + "\n")  # keep half the cells
+    partial = CellCache(str(tmp_path))
+    mixed = _grid_stats(cache=partial)
+    assert partial.hits == 2 and partial.misses == 2
+    assert len(partial) == 4                 # live misses appended back
+    assert mixed == all_live
+
+
+def test_ensemble_fork_equals_no_fork_seeds_0_2():
+    """Acceptance gate: fork-grouped episode grids == --no-fork grids on
+    seeds 0-2 (aggregated bands, every episode label)."""
+    from repro.ensemble.run import run_ensemble_grid
+
+    kw = dict(horizon_days=2.0, min_hours=2.0, procs=0,
+              episodes=("rf:3@1", "outage:8@1"))
+    forked, cold = {}, {}
+    for out, fork in ((forked, True), (cold, False)):
+        aggs = run_ensemble_grid([256], range(3), fork=fork, **kw)
+        for lab, a in aggs.items():
+            out[lab] = json.dumps(a.to_json()["scales"], sort_keys=True)
+    assert set(forked) == {"", "rf:3@1", "outage:8@1"}
+    assert forked == cold
+
+
+# -- satellites -------------------------------------------------------------
+def test_default_procs_respects_affinity(monkeypatch):
+    monkeypatch.setattr(os, "sched_getaffinity", lambda pid: {0, 1, 2},
+                        raising=False)
+    assert default_procs() == 3
+
+    def _raise(pid):
+        raise OSError("no affinity syscall")
+
+    monkeypatch.setattr(os, "sched_getaffinity", _raise, raising=False)
+    monkeypatch.setattr(os, "cpu_count", lambda: 4)
+    assert default_procs() == 4
+    monkeypatch.setattr(os, "cpu_count", lambda: 64)
+    assert default_procs() == 8              # pool cap
+
+
+# -- CLI / benchmark smokes --------------------------------------------------
+def _subproc(repo_root, args, timeout=300):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo_root, "src")
+    return subprocess.run([sys.executable, *args], cwd=repo_root, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_ensemble_cli_cache_warm_repeat(repo_root, tmp_path):
+    """Cold run populates --cache DIR; the warm repeat answers fully from
+    it and reports identical bands."""
+    args = ["-m", "repro.ensemble.run", "--gpus", "256", "--seeds", "2",
+            "--days", "1", "--min-hours", "2", "--procs", "0",
+            "--cache", str(tmp_path / "cc")]
+    cold = _subproc(repo_root, args + ["--json", str(tmp_path / "a.json")])
+    warm = _subproc(repo_root, args + ["--json", str(tmp_path / "b.json")])
+    assert cold.returncode == 0, cold.stdout + cold.stderr
+    assert warm.returncode == 0, warm.stdout + warm.stderr
+    a = json.loads((tmp_path / "a.json").read_text())
+    b = json.loads((tmp_path / "b.json").read_text())
+    assert a["cache"] == {"root": str(tmp_path / "cc"), "hits": 0,
+                          "misses": 2}
+    assert b["cache"]["hits"] == 2 and b["cache"]["misses"] == 0
+    assert json.dumps(a["scales"], sort_keys=True) \
+        == json.dumps(b["scales"], sort_keys=True)
+    assert "2 hits, 0 misses" in warm.stdout
+
+
+def test_sweep_cli_cache_warm_repeat(repo_root, tmp_path):
+    """The mitigation sweep shares the store machinery: a warm repeat
+    reports all hits."""
+    args = ["-m", "repro.mitigations.sweep", "--policies",
+            "baseline,lemon_eviction", "--gpus", "256", "--seeds", "1",
+            "--days", "1", "--min-hours", "2", "--procs", "0",
+            "--cache", str(tmp_path / "cc")]
+    cold = _subproc(repo_root, args)
+    warm = _subproc(repo_root, args)
+    assert cold.returncode == 0, cold.stdout + cold.stderr
+    assert warm.returncode == 0, warm.stdout + warm.stderr
+    assert "0 hits, 2 misses" in cold.stdout
+    assert "2 hits, 0 misses" in warm.stdout
+
+
+def test_cache_bench_quick_smoke(repo_root):
+    """Tier-1 guard: `benchmarks.run --only cache_bench --quick` runs the
+    warm-repeat and fork-equality checks end-to-end."""
+    proc = _subproc(repo_root, ["-m", "benchmarks.run", "--only",
+                                "cache_bench", "--quick"])
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "[PASS] cache hits bit-equal live CellStats" in proc.stdout
+    assert "[PASS] fork-grouped episode grid == --no-fork grid" \
+        in proc.stdout

@@ -161,23 +161,13 @@ DIGEST_CONFIGS = {
                       dict(horizon_days=4.0, seed=3)),
 }
 
-# captured on the replay-forking engine (ordered-dict bucket/node-job
-# membership: copied iteration order is a language guarantee, which
-# snapshot/restore requires — see docs/replay_forking.md) — regenerate
-# ONLY for an intentional behavior change, never for a perf PR, via
+# the committed digest literal lives in repro.cluster.engine_version
+# (the cell cache derives its engine identity from the same pins);
+# re-exported here because this file is where the gate runs and where
+# tests/test_forking.py &co import it from.  Regenerate ONLY for an
+# intentional behavior change, never for a perf PR, via
 #   PYTHONPATH=src python -m tests.capture_digests
-ENGINE_DIGESTS = {
-    "busy_80n_6d":
-        "59f49ddf23db7bc22315e7dfb6cce9fc4ba51e01787ad58fdd84e86ca63380a6",
-    "hi_rf_120n_4d":
-        "b75165734f017c4e206bae41eaf81bfd84a6203fcbaadfaaec6243c23617fc35",
-    "lemon_150n_21d":
-        "416cddf666b69f593219082cf96898b27294a9db54556d69de163e02c2f87550",
-    "rsc1_2000n_2d":
-        "cce536ee60ef8dcf7c25e2a1fbc552c01650bd39879c6b57d9a114317b40235e",
-    "rsc2ish_250n_6d":
-        "4737a082ea6848efba886cd8ffe7cb3508bdae70a30eec4e8d07f854486226e6",
-}
+from repro.cluster.engine_version import ENGINE_DIGESTS  # noqa: E402
 
 
 @pytest.mark.parametrize("name", sorted(DIGEST_CONFIGS))
